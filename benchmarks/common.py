@@ -1,0 +1,26 @@
+"""Shared timing/report helpers for the benchmark suite."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_jax(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call of a jit'd function."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,53 @@
+"""Paper Figure 3: single-PE pencil FFT throughput (flops/cycle) for
+n = 16..4096, FP16 and FP32.
+
+Two parts:
+  (a) the paper's cycle model — flops/cycle on the WSE, with the
+      published asymptotes (5/3 FP16, 5/6.5 FP32) and the measured
+      endpoints (0.89 @4096 FP16, 0.57 @2048 FP32);
+  (b) our local pencil implementations timed on THIS host (CPU) —
+      wall-clock per pencil batch for the Stockham (paper-faithful) and
+      four-step (MXU-form) algorithms, demonstrating the implementation
+      the model describes actually runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fft1d, twiddle as tw, wse_model as wm
+from benchmarks.common import emit, time_jax
+
+
+def main() -> None:
+    print("# paper_fig3a: WSE model flops/cycle")
+    print("n,fp16_flops_per_cycle,fp32_flops_per_cycle")
+    for lg in range(4, 13):
+        n = 1 << lg
+        f16 = wm.pencil_flops_per_cycle(n, 'fp16')
+        f32 = wm.pencil_flops_per_cycle(n, 'fp32')
+        print(f"{n},{f16:.3f},{f32:.3f}")
+    print(f"# asymptotes: fp16={wm.PAPER_PENCIL_ASYMPTOTE['fp16']:.3f} "
+          f"fp32={wm.PAPER_PENCIL_ASYMPTOTE['fp32']:.3f}")
+    n16, v16 = wm.PAPER_PENCIL_FLOPS_PER_CYCLE['fp16']
+    n32, v32 = wm.PAPER_PENCIL_FLOPS_PER_CYCLE['fp32']
+    print(f"# paper measured: fp16@{n16}={v16} (model "
+          f"{wm.pencil_flops_per_cycle(n16, 'fp16'):.3f}), fp32@{n32}={v32} "
+          f"(model {wm.pencil_flops_per_cycle(n32, 'fp32'):.3f})")
+
+    print("# paper_fig3b: our pencil implementations on this host")
+    rng = np.random.default_rng(0)
+    batch = 64
+    for n in (256, 1024, 4096):
+        x = rng.standard_normal((batch, n)) + 1j * rng.standard_normal((batch, n))
+        re, im = tw.to_planar(x)
+        for meth in ('stockham', 'four_step'):
+            f = jax.jit(lambda a, b, m=meth: fft1d.fft1d(a, b, method=m))
+            us = time_jax(f, re, im)
+            gf = batch * wm.fft_flops_1d(n) / (us * 1e-6) / 1e9
+            emit(f"fig3/pencil_{meth}_n{n}", us, f"gflops={gf:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Figure 4: communication/computation breakdown of the 3-D FFT
+runtime, cycles divided by n^2 (weak scaling, single pencil per PE).
+
+Reconstructed from published data: compute = 3 x pencil cycle model
+(matches the paper's Fig 3 experiment), communication = Table 1 total
+minus compute. The asymptote is n^2 cycles per transpose pair for FP16
+and 2n^2 for FP32 (Eqs. 3-4) — the printed comm/n^2 column should
+approach 1 and 2 respectively as n grows, as in the paper's figure.
+"""
+from __future__ import annotations
+
+from repro.core import wse_model as wm
+
+
+def main() -> None:
+    print("# paper_fig4: cycles/n^2 breakdown (reconstructed)")
+    print("n,precision,compute_per_n2,comm_per_n2,total_per_n2,comm_share")
+    for n in wm.TABLE1_CYCLES:
+        for prec in ('fp16', 'fp32'):
+            cmpt, comm = wm.measured_split(n, prec)
+            tot = wm.TABLE1_CYCLES[n][prec]
+            print(f"{n},{prec},{cmpt / n**2:.3f},{comm / n**2:.3f},"
+                  f"{tot / n**2:.3f},{comm / tot:.2f}")
+    # paper §9: transposes dominate, up to 80% for sizes of interest
+    _, comm512 = wm.measured_split(512, 'fp32')
+    print(f"# comm share at 512 fp32: {comm512 / wm.TABLE1_CYCLES[512]['fp32']:.2f} "
+          "(paper: transposes dominate, up to 80%)")
+    # paper §5.3: fp32 comm at n=512 is 1.8x fp16 comm
+    _, c16 = wm.measured_split(512, 'fp16')
+    print(f"# fp32/fp16 comm ratio at 512: {comm512 / c16:.2f} (paper: 1.8x)")
+
+
+if __name__ == "__main__":
+    main()

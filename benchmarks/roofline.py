@@ -1,0 +1,80 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table
+(EXPERIMENTS.md) and a CSV at results/roofline_summary.csv."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+OUT_CSV = os.path.join(os.path.dirname(__file__), '..', 'results',
+                       'roofline_summary.csv')
+
+COLS = ('mesh', 'arch', 'shape', 'status', 'dominant', 'compute_ms',
+        'memory_ms', 'collective_ms', 'bound_ms', 'model_tflops',
+        'useful_flop_ratio', 'roofline_fraction', 'temp_GB', 'note')
+
+
+DEFAULT_DIRS = ('results/dryrun_final', 'results/dryrun')
+
+
+def rows(result_dir: str = '') -> List[Dict]:
+    if not result_dir:
+        result_dir = next((d for d in DEFAULT_DIRS
+                           if glob.glob(os.path.join(d, '*.json'))),
+                          DEFAULT_DIRS[-1])
+    out = []
+    for fn in sorted(glob.glob(os.path.join(result_dir, '*.json'))):
+        r = json.load(open(fn))
+        row = {'mesh': r['mesh'].replace('multipod_2x16x16', '2x16x16')
+               .replace('pod_16x16', '16x16'),
+               'arch': r['arch'], 'shape': r['shape'], 'status': r['status'],
+               'dominant': '', 'compute_ms': '', 'memory_ms': '',
+               'collective_ms': '', 'bound_ms': '', 'model_tflops': '',
+               'useful_flop_ratio': '', 'roofline_fraction': '',
+               'temp_GB': '', 'note': ''}
+        if r['status'] == 'skipped':
+            row['note'] = r['skip_reason']
+        elif r['status'] == 'failed':
+            row['note'] = r.get('error', '')[:80]
+        else:
+            ro = r['roofline']
+            row.update(
+                dominant=ro['dominant'].replace('_s', ''),
+                compute_ms=f"{ro['compute_s']*1e3:.2f}",
+                memory_ms=f"{ro['memory_s']*1e3:.2f}",
+                collective_ms=f"{ro['collective_s']*1e3:.2f}",
+                bound_ms=f"{ro['bound_s']*1e3:.2f}",
+                model_tflops=f"{r['model_flops']/1e12:.1f}",
+                useful_flop_ratio=f"{r.get('useful_flop_ratio', 0):.3f}",
+                roofline_fraction=f"{r.get('roofline_fraction', 0):.4f}",
+                temp_GB=f"{r['memory'].get('temp_size_in_bytes', 0)/1e9:.2f}",
+                note=r.get('method', ''))
+        out.append(row)
+    return out
+
+
+def main() -> None:
+    table = rows()
+    if not table:
+        print('no dry-run artifacts found — run '
+              'PYTHONPATH=src python -m repro.launch.dryrun first')
+        return
+    os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
+    with open(OUT_CSV, 'w') as f:
+        f.write(','.join(COLS) + '\n')
+        for row in table:
+            f.write(','.join(str(row[c]) for c in COLS) + '\n')
+    widths = {c: max(len(c), *(len(str(r[c])) for r in table)) for c in COLS}
+    print('  '.join(c.ljust(widths[c]) for c in COLS))
+    for row in table:
+        print('  '.join(str(row[c]).ljust(widths[c]) for c in COLS))
+    ok = [r for r in table if r['status'] == 'ok']
+    print(f'\n{len(table)} cells: {len(ok)} ok, '
+          f'{sum(r["status"] == "skipped" for r in table)} skipped, '
+          f'{sum(r["status"] == "failed" for r in table)} failed '
+          f'-> {OUT_CSV}')
+
+
+if __name__ == '__main__':
+    main()

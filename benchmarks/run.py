@@ -1,0 +1,54 @@
+"""Benchmark driver: one section per paper table/figure, plus host-mode
+measurements of our implementation and (when present) the dry-run
+roofline tables. CSV convention: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def _section(title: str) -> None:
+    print(f"\n==== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main() -> None:
+    from benchmarks import paper_table1, paper_fig3, paper_fig4, paper_fig567, paper_table2
+
+    _section("Paper Table 1 (cycle counts, model vs measured)")
+    paper_table1.main()
+    _section("Paper Figure 3 (pencil throughput)")
+    paper_fig3.main()
+    _section("Paper Figure 4 (comm/compute breakdown)")
+    paper_fig4.main()
+    _section("Paper Figures 5/6/7 (weak/strong scaling, bandwidth)")
+    paper_fig567.main()
+    _section("Paper Table 2 (cross-machine comparison)")
+    paper_table2.main()
+
+    _section("Host-mode distributed wsFFT (fake-device mesh, wall clock)")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    for args in (["4", "4", "32", "auto"], ["4", "4", "64", "auto"],
+                 ["4", "4", "64", "stockham"]):
+        r = subprocess.run([sys.executable, "-m", "benchmarks._wsfft_worker", *args],
+                           capture_output=True, text=True, env=env)
+        sys.stdout.write(r.stdout)
+        if r.returncode != 0:
+            sys.stdout.write(f"wsfft_host/{'x'.join(args)},nan,FAILED\n")
+            sys.stderr.write(r.stderr[-2000:])
+
+    # Roofline tables are produced by the dry-run pipeline (launch/dryrun
+    # + benchmarks/roofline_fft); aggregate whatever artifacts exist.
+    base = os.path.join(os.path.dirname(__file__), "..")
+    if any(os.path.isdir(os.path.join(base, "results", d)) and
+           os.listdir(os.path.join(base, "results", d))
+           for d in ("dryrun_final", "dryrun")):
+        _section("Roofline summary (from dry-run artifacts)")
+        from benchmarks import roofline
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: distributed 3-D FFT on a (fake) 4x4 device mesh.
+
+The paper's mapping (§4.2): input A[x, y, z] with (x, y) on the mesh and
+z in memory; three supersteps of local pencil FFTs separated by two
+all-to-all transposes. Validated against numpy.fft — the paper's own
+methodology (§4.1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ['XLA_FLAGS'] = ('--xla_force_host_platform_device_count=16 '
+                           + os.environ.get('XLA_FLAGS', ''))
+
+import jax                      # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.core import distributed as D        # noqa: E402
+from repro.core import plan as planlib          # noqa: E402
+from repro.core import twiddle as tw            # noqa: E402
+from repro.launch.mesh import make_fft_mesh     # noqa: E402
+
+
+def main():
+    n = 32
+    mesh = make_fft_mesh(4, 4)
+    plan = planlib.make_fft3d_plan(n, mesh, method='auto')
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, n, n)) + 1j * rng.standard_normal((n, n, n))
+    re, im = tw.to_planar(x)
+    with mesh:
+        re = jax.device_put(re, plan.sharding())
+        im = jax.device_put(im, plan.sharding())
+
+        # forward: layout rotates (x,y,None) -> (y,None,x)
+        fwd, lay_in, lay_out = D.make_fft(plan)
+        fr, fi = jax.jit(fwd)(re, im)
+        got = tw.from_planar((fr, fi))
+        want = np.fft.fftn(x)
+        err = np.max(np.abs(got - want)) / np.max(np.abs(want))
+        print(f'3D FFT {n}^3 on 4x4 mesh: rel err vs numpy = {err:.2e}')
+        assert err < 1e-4
+
+        # inverse: exact round trip, the paper's fwd+inv loop (§5)
+        inv, _, _ = D.make_fft(plan, inverse=True)
+        rr, ri = jax.jit(inv)(fr, fi)
+        back = tw.from_planar((rr, ri))
+        err2 = np.max(np.abs(back - x))
+        print(f'IFFT(FFT(x)) round trip: max abs err = {err2:.2e}')
+        assert err2 < 1e-4
+    print('quickstart OK')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,111 @@
+"""End-to-end driver: 3-D pseudo-spectral PDE solver on a device mesh.
+
+This is the paper's motivating workload class (§1: "differential
+equations", §5.3: FFT "in the time-stepping loop" of MD/cosmology
+codes): the field lives *in situ* on the mesh, and every timestep runs
+forward FFT -> spectral update -> inverse FFT, hundreds of times.
+
+We integrate the 3-D viscous Burgers-type advection-diffusion equation
+    u_t + c . grad(u) = nu * lap(u)
+with an integrating-factor exponential step in Fourier space (exact for
+this linear PDE), so the numerical solution can be checked against the
+closed-form answer at every step. Data never leaves the mesh between
+steps — the paper's in-situ framing.
+
+    PYTHONPATH=src python examples/spectral_solver.py --steps 200
+"""
+import os
+os.environ['XLA_FLAGS'] = ('--xla_force_host_platform_device_count=16 '
+                           + os.environ.get('XLA_FLAGS', ''))
+
+import argparse                  # noqa: E402
+import time                      # noqa: E402
+
+import jax                       # noqa: E402
+import jax.numpy as jnp          # noqa: E402
+import numpy as np               # noqa: E402
+
+from repro.core import distributed as D         # noqa: E402
+from repro.core import plan as planlib          # noqa: E402
+from repro.core import twiddle as tw            # noqa: E402
+from repro.launch.mesh import make_fft_mesh     # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--n', type=int, default=32)
+    ap.add_argument('--steps', type=int, default=200)
+    ap.add_argument('--nu', type=float, default=0.02)
+    args = ap.parse_args()
+    n, steps, nu = args.n, args.steps, args.nu
+    c = (1.0, -0.5, 0.25)                     # advection velocity
+    dt = 0.01
+
+    mesh = make_fft_mesh(4, 4)
+    plan = planlib.make_fft3d_plan(n, mesh, method='auto')
+    fwd, _, lay_f = D.make_fft(plan)
+    # inverse consumes the forward's output layout -> exact round trip
+    inv, _, _ = D.make_fft(plan, inverse=True)
+
+    # integer wavenumbers for the 2*pi-periodic domain; semantic axis
+    # order (x, y, z) is unchanged by the FFT — only sharding rotates.
+    k = np.fft.fftfreq(n, d=1.0 / n)
+    kx, ky, kz = np.meshgrid(k, k, k, indexing='ij')
+    lap = -(kx ** 2 + ky ** 2 + kz ** 2)
+    adv = -(c[0] * kx + c[1] * ky + c[2] * kz)
+    # exp((nu*lap + i*adv)*dt), planar
+    g = np.exp(nu * lap * dt)
+    gr = jnp.asarray(g * np.cos(adv * dt), jnp.float32)
+    gi = jnp.asarray(g * np.sin(adv * dt), jnp.float32)
+
+    # initial condition: a couple of Fourier modes (known solution)
+    x1 = np.arange(n) * (2 * np.pi / n)
+    X, Y, Z = np.meshgrid(x1, x1, x1, indexing='ij')
+    u0 = (np.sin(X + 2 * Y) * np.cos(Z) + 0.5 * np.cos(3 * X - Y + 2 * Z))
+
+    import functools
+
+    @functools.partial(jax.jit, static_argnums=(2,))
+    def step_many(ur, ui, m):
+        def body(carry, _):
+            ur, ui = carry
+            fr, fi = fwd(ur, ui)
+            fr, fi = fr * gr - fi * gi, fr * gi + fi * gr
+            return inv(fr, fi), None
+        (ur, ui), _ = jax.lax.scan(body, (ur, ui), None, length=m)
+        return ur, ui
+
+    with mesh:
+        ur = jax.device_put(jnp.asarray(u0, jnp.float32), plan.sharding())
+        ui = jax.device_put(jnp.zeros_like(ur), plan.sharding())
+        t0 = time.perf_counter()
+        ur, ui = step_many(ur, ui, steps)
+        jax.block_until_ready(ur)
+        dt_wall = time.perf_counter() - t0
+
+    # closed-form check: each mode decays by exp(nu*lap*T) and advects
+    got = np.asarray(ur)
+    T = steps * dt
+    def mode(a, kv):
+        decay = np.exp(-nu * (kv[0]**2 + kv[1]**2 + kv[2]**2) * T)
+        phase = (kv[0] * (X - c[0] * T) + kv[1] * (Y - c[1] * T)
+                 + kv[2] * (Z - c[2] * T))
+        return a * decay, phase
+    a1, p1 = mode(1.0, (1, 2, 1))
+    # sin(x+2y)cos(z) = 1/2[sin(x+2y+z) + sin(x+2y-z)]
+    w = 0.5 * a1 * np.sin((X - c[0]*T) + 2*(Y - c[1]*T) + (Z - c[2]*T))
+    a2, _ = mode(1.0, (1, 2, -1))
+    w += 0.5 * a2 * np.sin((X - c[0]*T) + 2*(Y - c[1]*T) - (Z - c[2]*T))
+    a3, _ = mode(0.5, (3, -1, 2))
+    w += a3 * np.cos(3*(X - c[0]*T) - (Y - c[1]*T) + 2*(Z - c[2]*T))
+
+    err = np.max(np.abs(got - w)) / max(np.max(np.abs(w)), 1e-9)
+    print(f'spectral solver: n={n}^3, {steps} steps on 4x4 mesh '
+          f'in {dt_wall:.2f}s ({steps/dt_wall:.1f} steps/s)')
+    print(f'rel err vs closed-form solution: {err:.2e}')
+    assert err < 1e-3, err
+    print('spectral_solver OK')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,82 @@
+"""Train a small LM end-to-end with the full runtime: synthetic packed
+data, AdamW + cosine schedule, checkpointing, straggler monitor.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Defaults to a ~6M-parameter dense model that visibly learns the
+synthetic bigram structure on CPU within a few hundred steps. Use
+--d-model/--layers/--vocab to scale up (e.g. ~100M: --d-model 512
+--layers 12 --vocab 32000 --seq 512) on real hardware.
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.data import SyntheticLM
+from repro.models import model as M
+from repro.runtime import StragglerMonitor, TrainDriver
+from repro.train.optim import adamw_init
+from repro.train.trainstep import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--steps', type=int, default=300)
+    ap.add_argument('--batch', type=int, default=8)
+    ap.add_argument('--seq', type=int, default=128)
+    ap.add_argument('--d-model', type=int, default=128)
+    ap.add_argument('--layers', type=int, default=4)
+    ap.add_argument('--vocab', type=int, default=512)
+    ap.add_argument('--lr', type=float, default=1e-2)
+    ap.add_argument('--ckpt-dir', default='')
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        smoke_config(get_config('granite-3-8b')),
+        num_layers=args.layers, d_model=args.d_model,
+        num_heads=max(4, args.d_model // 32), num_kv_heads=2,
+        head_dim=32, d_ff=args.d_model * 3, vocab_size=args.vocab,
+        attn_chunk=args.seq,
+        # untied LM head: at tiny scale a tied head couples input/output
+        # embedding gradients and stalls early learning (measured)
+        tie_embeddings=False)
+    mesh = jax.make_mesh((1, 1), ('data', 'model'))
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix='train_lm_')
+
+    step = jax.jit(make_train_step(
+        cfg, mesh, peak_lr=args.lr, warmup_steps=args.steps // 10,
+        total_steps=args.steps, param_dtype=jnp.float32),
+        donate_argnums=(0, 1))
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    print(f'params: {M.param_count(cfg)/1e6:.2f}M  vocab={cfg.vocab_size} '
+          f'uniform-loss={np.log(cfg.vocab_size):.3f}')
+    opt = adamw_init(params)
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    driver = TrainDriver(step, ckpt, ckpt_every=100,
+                         monitor=StragglerMonitor(), log=print)
+    def batches(i):
+        return {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+    params, opt, end = driver.run(params, opt, batches, steps=args.steps)
+
+    hist = driver.history
+    k = max(len(hist) // 10, 1)
+    for i in range(0, len(hist), k):
+        w = hist[i:i + k]
+        print(f'step {w[0]["step"]:4d}  ce={np.mean([h["ce"] for h in w]):.4f}'
+              f'  lr={w[-1]["lr"]:.2e}  {np.mean([h["dt"] for h in w]):.3f}s/step')
+    first, last = hist[0]['ce'], np.mean([h['ce'] for h in hist[-20:]])
+    print(f'loss: {first:.4f} -> {last:.4f} '
+          f'(uniform {np.log(cfg.vocab_size):.4f})')
+    assert last < first - 0.5, 'model failed to learn'
+    print('train_lm OK')
+
+
+if __name__ == '__main__':
+    main()

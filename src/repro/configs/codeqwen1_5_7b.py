@@ -1,0 +1,13 @@
+"""codeqwen1.5-7b [dense] — qwen1.5 arch (QKV bias, full MHA kv=32).
+32L d_model=4096 32H d_ff=13440 vocab=92416 [hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name='codeqwen1.5-7b', family='dense',
+    num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=32, head_dim=128,
+    d_ff=13440, vocab_size=92416,
+    qkv_bias=True, rope_theta=1e6,
+    tie_embeddings=False,
+    source='hf:Qwen/CodeQwen1.5-7B; hf',
+)

@@ -1,0 +1,22 @@
+"""qwen1.5-32b [dense] — QKV bias, full MHA kv=40.
+64L d_model=5120 40H d_ff=27392 vocab=152064 [hf:Qwen/Qwen1.5].
+
+cache_dtype=fp8: full-MHA (kv=40) x 64L at decode_32k/batch=128 is
+5.5 TB of KV in bf16 — 21.5 GB/chip on a 256-chip pod, over the 16 GB
+HBM. fp8-e4m3 KV quantization (the production fix for MHA serving)
+halves it to 10.7 GB/chip; attention reads dequantize to fp32 in the
+flash kernel. See DESIGN.md §Arch-applicability."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name='qwen1.5-32b', family='dense',
+    num_layers=64, d_model=5120,
+    num_heads=40, num_kv_heads=40, head_dim=128,
+    d_ff=27392, vocab_size=152064,
+    qkv_bias=True, rope_theta=1e6,
+    cache_dtype=jnp.float8_e4m3fn,
+    tie_embeddings=False,
+    source='hf:Qwen/Qwen1.5-0.5B; hf',
+)

@@ -1,0 +1,301 @@
+"""Local (single-device) pencil FFTs, planar complex, batched.
+
+Two algorithms:
+
+* ``fft_stockham`` — radix-2 iterative Cooley-Tukey in Stockham autosort
+  form. This is the **paper-faithful** pencil: identical 5*n*log2(n) real
+  flop count and the same even/odd recombination schedule as the paper's
+  Listing 1; the Stockham indexing keeps even/odd elements contiguous *by
+  construction*, which is exactly what the paper's explicit ``reshape``
+  phase re-establishes after each iteration on the WSE.
+
+* ``fft_four_step`` — Bailey four-step: the pencil is reshaped (n1, n2)
+  and each factor's DFT becomes a dense matmul against a precomputed DFT
+  matrix, with the inter-factor twiddle fused in between. This is the
+  **TPU-adapted** pencil: it moves the work from the VPU (butterflies)
+  onto the MXU (matmuls) — beyond-paper, recorded separately in
+  EXPERIMENTS.md. The same adaptation is cited by the paper itself as
+  Google's TPU approach [17]; here it is applied *per pencil inside* the
+  paper's pencil decomposition.
+
+All functions map over arbitrary leading batch dims; the transform runs
+along the trailing axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import twiddle as tw
+from repro.core.twiddle import Planar
+
+
+# ---------------------------------------------------------------------------
+# Stockham radix-2 (paper-faithful)
+# ---------------------------------------------------------------------------
+
+def fft_stockham(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
+                 compute_dtype: Optional[jnp.dtype] = None) -> Planar:
+    """Batched radix-2 Stockham FFT along the last axis.
+
+    Invariant maintained: after the stage with subproblem size L, the
+    array viewed as (c, L) rows holds X[k, :] = DFT_L(x[k::c]) with
+    c = n / L. Start L=1 (natural order input), end L=n (natural order
+    output) — no bit reversal.
+    """
+    n = re.shape[-1]
+    stages = tw.log2i(n)
+    batch = re.shape[:-1]
+    if compute_dtype is not None:
+        re, im = re.astype(compute_dtype), im.astype(compute_dtype)
+    acc_dtype = re.dtype
+
+    twids = tw.stage_twiddles_np(n, inverse=inverse)
+    # view (c, L); combine rows k and k + c/2.
+    for s in range(stages):
+        L = 1 << s
+        c = n >> s
+        wr = jnp.asarray(twids[s][0], dtype=acc_dtype)   # (L,)
+        wi = jnp.asarray(twids[s][1], dtype=acc_dtype)
+        xr = re.reshape(batch + (2, c // 2, L))
+        xi = im.reshape(batch + (2, c // 2, L))
+        ar, ai = xr[..., 0, :, :], xi[..., 0, :, :]
+        br, bi = xr[..., 1, :, :], xi[..., 1, :, :]
+        # t = w * b   (4 mul + 2 add, FMAC-fusable — paper Listing 1 l.36-42)
+        tr = br * wr - bi * wi
+        ti = br * wi + bi * wr
+        re = jnp.concatenate([ar + tr, ar - tr], axis=-1).reshape(batch + (n,))
+        im = jnp.concatenate([ai + ti, ai - ti], axis=-1).reshape(batch + (n,))
+    if inverse:
+        scale = jnp.asarray(1.0 / n, dtype=acc_dtype)
+        re, im = re * scale, im * scale
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# Bailey four-step (MXU matmul form, beyond-paper)
+# ---------------------------------------------------------------------------
+
+def fft_four_step(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
+                  factors: Optional[Tuple[int, int]] = None,
+                  compute_dtype: Optional[jnp.dtype] = None,
+                  precision=jax.lax.Precision.HIGHEST) -> Planar:
+    """Batched four-step FFT along the last axis.
+
+    x[k], k = n2*k1 + k2  ->  y[j], j = j1 + n1*j2:
+      1. A[k1, k2]  = x.reshape(n1, n2)
+      2. B = F_{n1} @ A            (columns DFT, contraction dim n1)
+      3. C = B * W, W[j1,k2] = w_n^{j1 k2}
+      4. D = C @ F_{n2}            (rows DFT, contraction dim n2)
+      5. y = D.T.reshape(n)
+    Complex arithmetic is planar: 4 real matmuls per complex matmul.
+    Matmul inputs may be cast to ``compute_dtype`` (e.g. bf16) while the
+    twiddle scaling and accumulation stay fp32.
+    """
+    n = re.shape[-1]
+    n1, n2 = factors if factors is not None else tw.four_step_factors(n)
+    if n1 * n2 != n:
+        raise ValueError(f"factors {n1}*{n2} != {n}")
+    batch = re.shape[:-1]
+    out_dtype = re.dtype
+    md = compute_dtype or re.dtype
+
+    f1r, f1i = (jnp.asarray(a, dtype=md) for a in tw.dft_matrix_np(n1, inverse=inverse))
+    f2r, f2i = (jnp.asarray(a, dtype=md) for a in tw.dft_matrix_np(n2, inverse=inverse))
+    wr, wi = (jnp.asarray(a, dtype=out_dtype) for a in
+              tw.four_step_twiddle_np(n1, n2, inverse=inverse))
+
+    ar = re.reshape(batch + (n1, n2)).astype(md)
+    ai = im.reshape(batch + (n1, n2)).astype(md)
+
+    dot = functools.partial(jnp.einsum, precision=precision,
+                            preferred_element_type=jnp.float32)
+    # step 2: B = F1 @ A  (planar)
+    br = dot('jk,...kl->...jl', f1r, ar) - dot('jk,...kl->...jl', f1i, ai)
+    bi = dot('jk,...kl->...jl', f1r, ai) + dot('jk,...kl->...jl', f1i, ar)
+    # step 3: twiddle (elementwise, fp32)
+    cr = br * wr - bi * wi
+    ci = br * wi + bi * wr
+    cr, ci = cr.astype(md), ci.astype(md)
+    # step 4: D = C @ F2
+    dr = dot('...jk,kl->...jl', cr, f2r) - dot('...jk,kl->...jl', ci, f2i)
+    di = dot('...jk,kl->...jl', cr, f2i) + dot('...jk,kl->...jl', ci, f2r)
+    # step 5: transpose + flatten
+    yr = jnp.swapaxes(dr, -1, -2).reshape(batch + (n,)).astype(out_dtype)
+    yi = jnp.swapaxes(di, -1, -2).reshape(batch + (n,)).astype(out_dtype)
+    if inverse:
+        yr, yi = yr / n, yi / n
+    return yr, yi
+
+
+def fft_four_step_axis(re: jnp.ndarray, im: jnp.ndarray, axis: int, *,
+                       inverse: bool = False,
+                       compute_dtype: Optional[jnp.dtype] = None,
+                       precision=jax.lax.Precision.HIGHEST) -> Planar:
+    """Four-step FFT along an arbitrary axis with NO moveaxis copies.
+
+    Perf iteration on the memory roofline term (EXPERIMENTS.md §Perf):
+    the axis is reshaped in place to (n1, n2) — free when the split is
+    of one axis in row-major order — and both factor DFTs contract the
+    target axis directly via einsum, so XLA feeds the MXU without a
+    separate HBM transpose pass. Output remains in natural order along
+    ``axis`` (the final factor transpose is fused into the second
+    einsum's output indices).
+    """
+    axis = axis % re.ndim
+    n = re.shape[axis]
+    n1, n2 = tw.four_step_factors(n)
+    pre = re.shape[:axis]
+    post = re.shape[axis + 1:]
+    out_dtype = re.dtype
+    md = compute_dtype or re.dtype
+
+    f1r, f1i = (jnp.asarray(a, dtype=md) for a in tw.dft_matrix_np(n1, inverse=inverse))
+    f2r, f2i = (jnp.asarray(a, dtype=md) for a in tw.dft_matrix_np(n2, inverse=inverse))
+    wr, wi = (jnp.asarray(a, dtype=jnp.float32) for a in
+              tw.four_step_twiddle_np(n1, n2, inverse=inverse))
+
+    shp = pre + (n1, n2) + post
+    ar = re.reshape(shp).astype(md)
+    ai = im.reshape(shp).astype(md)
+    # index letters: a..e pre-axes, then (j=n1 out / k=n1 in, l=n2 in,
+    # m=n2 out), then w.. post-axes
+    na, nb = len(pre), len(post)
+    A = ''.join(chr(ord('a') + i) for i in range(na))
+    Z = ''.join(chr(ord('u') + i) for i in range(nb))
+    dot = functools.partial(jnp.einsum, precision=precision,
+                            preferred_element_type=jnp.float32)
+    s2 = f'jk,{A}kl{Z}->{A}jl{Z}'
+    # step 2: B[j1, k2] = sum_k1 F1[j1, k1] A[k1, k2]
+    br = dot(s2, f1r, ar) - dot(s2, f1i, ai)
+    bi = dot(s2, f1r, ai) + dot(s2, f1i, ar)
+    # step 3: twiddle W[j1, k2] (fp32), broadcast over pre/post axes
+    wsh = (1,) * na + (n1, n2) + (1,) * nb
+    wr_, wi_ = wr.reshape(wsh), wi.reshape(wsh)
+    cr = br * wr_ - bi * wi_
+    ci = br * wi_ + bi * wr_
+    cr, ci = cr.astype(md), ci.astype(md)
+    # step 4 (+ fused factor transpose): D[j2, j1] = sum_k2 C[j1,k2] F2[k2,j2]
+    s4 = f'{A}jl{Z},lm->{A}mj{Z}'
+    dr = dot(s4, cr, f2r) - dot(s4, ci, f2i)
+    di = dot(s4, cr, f2i) + dot(s4, ci, f2r)
+    yr = dr.reshape(pre + (n,) + post).astype(out_dtype)
+    yi = di.reshape(pre + (n,) + post).astype(out_dtype)
+    if inverse:
+        scale = jnp.asarray(1.0 / n, out_dtype)
+        yr, yi = yr * scale, yi * scale
+    return yr, yi
+
+
+@functools.lru_cache(maxsize=None)
+def _block_consts_np(n1: int, n2: int, inverse: bool):
+    """Constants for the block-complex four-step (§Perf iteration 2).
+
+    F1b[c, j, d, k]  — one real matmul computes both complex components:
+        [yr; yi] = [[Fr, -Fi], [Fi, Fr]] @ [xr; xi]
+    G[c, m, j, d, l] — twiddle FOLDED into the second factor DFT:
+        D[j1, j2] = sum_k2 B[j1, k2] * (W[j1, k2] F2[k2, j2])
+    so steps 3+4 are ONE batched matmul and no elementwise twiddle pass
+    ever touches HBM. G is (2, n2, n1, 2, n2) ~ tiny constant.
+    """
+    import numpy as np
+    f1r, f1i = tw.dft_matrix_np(n1, inverse=inverse)
+    f2r, f2i = tw.dft_matrix_np(n2, inverse=inverse)
+    wr, wi = tw.four_step_twiddle_np(n1, n2, inverse=inverse)
+    f1b = np.zeros((2, n1, 2, n1))
+    f1b[0, :, 0, :], f1b[0, :, 1, :] = f1r, -f1i
+    f1b[1, :, 0, :], f1b[1, :, 1, :] = f1i, f1r
+    # complex G[j, l, m] = W[j, l] * F2[l, m]
+    gr = wr[:, :, None] * f2r[None] - wi[:, :, None] * f2i[None]
+    gi = wr[:, :, None] * f2i[None] + wi[:, :, None] * f2r[None]
+    g = np.zeros((2, n2, n1, 2, n2))          # [c, m, j, d, l]
+    g[0, :, :, 0, :] = gr.transpose(2, 0, 1)
+    g[0, :, :, 1, :] = -gi.transpose(2, 0, 1)
+    g[1, :, :, 0, :] = gi.transpose(2, 0, 1)
+    g[1, :, :, 1, :] = gr.transpose(2, 0, 1)
+    return f1b, g
+
+
+def fft_four_step_block(x: jnp.ndarray, axis: int, *, inverse: bool = False,
+                        compute_dtype: Optional[jnp.dtype] = None,
+                        precision=None) -> jnp.ndarray:
+    """Block-complex four-step FFT along ``axis`` of x, where x carries
+    a leading complex axis of size 2 (x[0]=re, x[1]=im). Two dots total,
+    zero planar elementwise passes. Natural-order output.
+
+    bf16 inputs keep bf16 *operands* (MXU-native, fp32 accumulation via
+    preferred_element_type) — forcing HIGHEST precision would upcast the
+    whole array to f32 and XLA then cancels the bf16 converts around the
+    transpose all_to_alls, silently doubling wire bytes (measured)."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    n1, n2 = tw.four_step_factors(n)
+    pre = x.shape[1:axis]                   # between complex axis and target
+    post = x.shape[axis + 1:]
+    out_dtype = x.dtype
+    md = compute_dtype or x.dtype
+    if precision is None:
+        precision = (jax.lax.Precision.DEFAULT if md == jnp.bfloat16
+                     else jax.lax.Precision.HIGHEST)
+    f1b_np, g_np = _block_consts_np(n1, n2, inverse)
+    f1b = jnp.asarray(f1b_np, md)
+    g = jnp.asarray(g_np, md)
+
+    a = x.reshape((2,) + pre + (n1, n2) + post).astype(md)
+    na, nb = len(pre), len(post)
+    # index letters must avoid the specials (c, d, j, l, m) — with 3+
+    # leading batch dims 'abc...' would collide with the complex axis
+    A = 'abefgh'[:na]
+    Z = 'wxyz'[:nb]
+    assert len(A) == na and len(Z) == nb, (pre, post)
+    dot = functools.partial(jnp.einsum, precision=precision,
+                            preferred_element_type=jnp.float32)
+    # step 2 (complex matmul as one real dot over (d, k)):
+    b = dot(f'cjdk,d{A}kl{Z}->c{A}jl{Z}', f1b, a).astype(md)
+    # steps 3+4 fused (+ factor transpose into output index order (m, j)):
+    d = dot(f'cmjdl,d{A}jl{Z}->c{A}mj{Z}', g, b)
+    y = d.reshape((2,) + pre + (n,) + post).astype(out_dtype)
+    if inverse:
+        y = y * jnp.asarray(1.0 / n, out_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Direct DFT (oracle-grade for tiny sizes, also used for non-pow2 factors)
+# ---------------------------------------------------------------------------
+
+def dft_direct(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False) -> Planar:
+    n = re.shape[-1]
+    fr, fi = (jnp.asarray(a, dtype=re.dtype) for a in tw.dft_matrix_np(n, inverse=inverse))
+    yr = jnp.einsum('jk,...k->...j', fr, re) - jnp.einsum('jk,...k->...j', fi, im)
+    yi = jnp.einsum('jk,...k->...j', fr, im) + jnp.einsum('jk,...k->...j', fi, re)
+    if inverse:
+        yr, yi = yr / n, yi / n
+    return yr, yi
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+METHODS = ('stockham', 'four_step', 'direct', 'auto')
+
+
+def fft1d(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
+          method: str = 'auto', compute_dtype=None) -> Planar:
+    """Local pencil FFT dispatch. ``auto`` uses the MXU four-step for
+    n >= 64 (matmul shape large enough to feed the systolic array) and
+    Stockham below."""
+    n = re.shape[-1]
+    if method == 'auto':
+        method = 'four_step' if n >= 64 else ('stockham' if tw.is_pow2(n) else 'direct')
+    if method == 'stockham':
+        return fft_stockham(re, im, inverse=inverse, compute_dtype=compute_dtype)
+    if method == 'four_step':
+        return fft_four_step(re, im, inverse=inverse, compute_dtype=compute_dtype)
+    if method == 'direct':
+        return dft_direct(re, im, inverse=inverse)
+    raise ValueError(f"unknown method {method!r}")

@@ -1,0 +1,128 @@
+"""PencilPlan: the layout state machine of the pencil decomposition.
+
+The paper's deepest primitive is the *axis remap*: between supersteps,
+the axis that lives in PE memory is exchanged with one of the axes that
+live across the mesh (their §4.2/§4.3 transposes). We model the state as
+"which mesh axis (or None = memory) owns each global array axis". One
+``all_to_all`` along a mesh axis swaps the memory axis with the axis that
+mesh axis owns — positions in storage order never move, only ownership
+rotates, so the semantic (x, y, z) order of the returned global array is
+stable and only its PartitionSpec changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[str, Tuple[str, ...], None]
+Layout = Tuple[MeshAxis, ...]   # per-array-axis owner; None = in memory
+
+
+def spec_of(layout: Layout) -> P:
+    return P(*layout)
+
+
+def memory_axes(layout: Layout) -> Tuple[int, ...]:
+    return tuple(i for i, o in enumerate(layout) if o is None)
+
+
+def owner_pos(layout: Layout, mesh_axis: MeshAxis) -> int:
+    for i, o in enumerate(layout):
+        if o == mesh_axis:
+            return i
+    raise ValueError(f"mesh axis {mesh_axis!r} owns no array axis in {layout}")
+
+
+def swap(layout: Layout, mesh_axis: MeshAxis, mem_pos: int) -> Layout:
+    """Layout after swapping the memory axis at ``mem_pos`` with the axis
+    owned by ``mesh_axis``."""
+    if layout[mem_pos] is not None:
+        raise ValueError(f"axis {mem_pos} is not a memory axis in {layout}")
+    sp = owner_pos(layout, mesh_axis)
+    out = list(layout)
+    out[sp], out[mem_pos] = None, mesh_axis
+    return tuple(out)
+
+
+def plan_swaps(src: Layout, dst: Layout) -> Tuple[Tuple[MeshAxis, int], ...]:
+    """BFS over layout states: minimal sequence of (mesh_axis, mem_pos)
+    swaps turning ``src`` into ``dst``. State space is tiny (<= ndim! *
+    ndim), so exhaustive search is fine."""
+    if src == dst:
+        return ()
+    axes = sorted({o for o in src if o is not None}, key=str)
+    frontier = {src: ()}
+    seen = {src}
+    for _ in range(8):
+        nxt = {}
+        for st, path in frontier.items():
+            for ax in axes:
+                for mp in memory_axes(st):
+                    st2 = swap(st, ax, mp)
+                    if st2 == dst:
+                        return path + ((ax, mp),)
+                    if st2 not in seen:
+                        seen.add(st2)
+                        nxt[st2] = path + ((ax, mp),)
+        frontier = nxt
+        if not frontier:
+            break
+    raise ValueError(f"no swap path {src} -> {dst}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PencilPlan:
+    """Static description of a distributed FFT problem.
+
+    shape       global array shape (n0, ..) — each axis a power of two
+    mesh        jax Mesh
+    layout      initial ownership of each array axis
+    method      local pencil algorithm ('stockham'|'four_step'|'auto')
+    use_kernel  dispatch local pencils to the Pallas kernels
+    compute_dtype  matmul operand dtype for the four-step (bf16 study)
+    """
+    shape: Tuple[int, ...]
+    mesh: Mesh
+    layout: Layout
+    method: str = 'auto'
+    use_kernel: bool = False
+    compute_dtype: Optional[object] = None
+
+    def axis_size(self, mesh_axis: MeshAxis) -> int:
+        if mesh_axis is None:
+            return 1
+        if isinstance(mesh_axis, tuple):
+            out = 1
+            for a in mesh_axis:
+                out *= self.mesh.shape[a]
+            return out
+        return self.mesh.shape[mesh_axis]
+
+    def local_shape(self, layout: Optional[Layout] = None) -> Tuple[int, ...]:
+        lay = self.layout if layout is None else layout
+        return tuple(s // self.axis_size(o) for s, o in zip(self.shape, lay))
+
+    def validate(self) -> None:
+        for s, o in zip(self.shape, self.layout):
+            p = self.axis_size(o)
+            if s % p:
+                raise ValueError(f"axis size {s} not divisible by mesh extent {p} ({o})")
+
+    def sharding(self, layout: Optional[Layout] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, spec_of(self.layout if layout is None else layout))
+
+
+def make_fft3d_plan(n: int, mesh: Mesh, row_axis: str = 'x', col_axis: str = 'y',
+                    **kw) -> PencilPlan:
+    """Paper layout: input(i,j,k) -> PE(i,j), z in memory."""
+    return PencilPlan(shape=(n, n, n), mesh=mesh,
+                      layout=(row_axis, col_axis, None), **kw)
+
+
+def make_fft2d_plan(n0: int, n1: int, mesh: Mesh,
+                    axes: Tuple[str, ...] = ('x', 'y'), **kw) -> PencilPlan:
+    """2-D transform: rows distributed over the flattened mesh."""
+    return PencilPlan(shape=(n0, n1), mesh=mesh, layout=(axes, None), **kw)

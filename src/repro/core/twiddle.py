@@ -1,0 +1,131 @@
+"""Roots of unity, DFT matrices and planar-complex helpers.
+
+The WSE has no complex datatype; the paper (Listing 1, lines 36-42)
+decomposes every complex multiply into real arithmetic. Pallas-on-TPU has
+the same constraint, so the whole framework uses *planar complex*: a pair
+``(re, im)`` of equal-shape real arrays. This module owns the constant
+factories (twiddle tables, DFT matrices) used by every FFT variant.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Planar = Tuple[jnp.ndarray, jnp.ndarray]
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def log2i(n: int) -> int:
+    if not is_pow2(n):
+        raise ValueError(f"size must be a power of two, got {n}")
+    return n.bit_length() - 1
+
+
+# ---------------------------------------------------------------------------
+# Twiddle tables (numpy at trace time -> embedded constants, like the paper's
+# precomputed ``roots_of_unity`` array that lives in PE memory).
+# ---------------------------------------------------------------------------
+
+def roots_of_unity_np(n: int, *, inverse: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+    """(cos, sin) of w_n^k = exp(-2*pi*i*k/n), k in [0, n).
+
+    ``inverse=True`` negates the imaginary part (paper section 4.2: "the only
+    difference with IFFT is that the roots of unity have their imaginary
+    part negated").
+    """
+    k = np.arange(n, dtype=np.float64)
+    ang = -2.0 * math.pi * k / n
+    re = np.cos(ang)
+    im = np.sin(ang)
+    if inverse:
+        im = -im
+    return re, im
+
+
+@functools.lru_cache(maxsize=None)
+def stage_twiddles_np(n: int, *, inverse: bool = False) -> Tuple[Tuple[np.ndarray, np.ndarray], ...]:
+    """Per-stage Stockham twiddles.
+
+    Stage that combines subproblems of size L into 2L needs w_{2L}^j for
+    j in [0, L).  Returned tuple is indexed by stage s = log2(2L) - 1,
+    s = 0 .. log2(n)-1.
+    """
+    out = []
+    for s in range(log2i(n)):
+        L = 1 << s
+        j = np.arange(L, dtype=np.float64)
+        ang = -2.0 * math.pi * j / (2 * L)
+        im = np.sin(ang)
+        if inverse:
+            im = -im
+        out.append((np.cos(ang), im))
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=None)
+def dft_matrix_np(n: int, *, inverse: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+    """Planar (re, im) of the dense DFT matrix F[j, k] = w_n^{jk}."""
+    jk = np.outer(np.arange(n, dtype=np.float64), np.arange(n, dtype=np.float64))
+    ang = -2.0 * math.pi * (jk % n) / n
+    im = np.sin(ang)
+    if inverse:
+        im = -im
+    return np.cos(ang), im
+
+
+@functools.lru_cache(maxsize=None)
+def four_step_twiddle_np(n1: int, n2: int, *, inverse: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+    """W[j1, k2] = w_{n1*n2}^{j1*k2} — the inter-factor twiddle of the
+    Bailey four-step decomposition."""
+    n = n1 * n2
+    jk = np.outer(np.arange(n1, dtype=np.float64), np.arange(n2, dtype=np.float64))
+    ang = -2.0 * math.pi * (jk % n) / n
+    im = np.sin(ang)
+    if inverse:
+        im = -im
+    return np.cos(ang), im
+
+
+def four_step_factors(n: int) -> Tuple[int, int]:
+    """Split n = n1 * n2 with n1 >= n2, both powers of two, as square as
+    possible — the matmul contraction dims; squarer = higher arithmetic
+    intensity on the MXU."""
+    k = log2i(n)
+    k1 = (k + 1) // 2
+    return 1 << k1, 1 << (k - k1)
+
+
+# ---------------------------------------------------------------------------
+# Planar-complex helpers
+# ---------------------------------------------------------------------------
+
+def to_planar(x, dtype=jnp.float32) -> Planar:
+    """numpy/jnp complex array -> (re, im)."""
+    x = np.asarray(x) if not isinstance(x, jnp.ndarray) else x
+    return jnp.asarray(x.real, dtype=dtype), jnp.asarray(x.imag, dtype=dtype)
+
+
+def from_planar(p: Planar) -> np.ndarray:
+    re, im = p
+    return np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+
+
+def cmul(ar, ai, br, bi) -> Planar:
+    """Planar complex multiply: 4 mul + 2 add, FMAC-fusable (paper's
+    Listing 1 lines 36-42 use the identical real-arithmetic form)."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def cmatmul(ar, ai, br, bi, *, precision=None, preferred=jnp.float32) -> Planar:
+    """Planar complex matmul via 4 real matmuls (MXU-native form)."""
+    dot = functools.partial(jnp.matmul, precision=precision)
+    rr = dot(ar, br).astype(preferred) - dot(ai, bi).astype(preferred)
+    ri = dot(ar, bi).astype(preferred) + dot(ai, br).astype(preferred)
+    return rr, ri

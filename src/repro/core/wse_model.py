@@ -1,0 +1,236 @@
+"""The paper's closed-form performance model (Eqs. 1-12) and its
+published measurements, used to validate our reproduction against the
+paper's own claims.
+
+Everything here is analytic — it runs anywhere. The benchmark suite
+(benchmarks/paper_*.py) prints the model against the paper's measured
+Table 1 / Figures 3-7 / Table 2 values and reports % error, which is the
+faithful-reproduction evidence for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Literal, Tuple
+
+Precision = Literal['fp16', 'fp32']
+
+# ---------------------------------------------------------------------------
+# Machine constants (paper §3/§5)
+# ---------------------------------------------------------------------------
+
+CLOCK_HZ = 850e6          # CS-2 clock
+ROUTER_RECONFIG = 30      # d: cycles to reprogram a router filter chain
+WORD_BYTES = 4            # one wavelet = 32 bits
+
+
+def r_factor(precision: Precision) -> int:
+    """Cycles per complex element on a 32-bit link: FP16 packs (re,im)
+    into one wavelet (r=1); FP32 needs two (r=2)."""
+    return 1 if precision == 'fp16' else 2
+
+
+# ---------------------------------------------------------------------------
+# Paper-measured data (Table 1, §5.1, Table 2) — ground truth for tests
+# ---------------------------------------------------------------------------
+
+TABLE1_CYCLES: Dict[int, Dict[Precision, int]] = {
+    32:  {'fp16': 10_953,  'fp32': 13_633},
+    64:  {'fp16': 24_000,  'fp32': 32_176},
+    128: {'fp16': 56_741,  'fp32': 82_405},
+    256: {'fp16': 147_247, 'fp32': 236_329},
+    512: {'fp16': 471_064, 'fp32': 815_371},
+}
+
+# §5.2 headline: 512^3 FP32 runtime (the "breaks the millisecond barrier")
+PAPER_512_FP32_US = 959.0
+# §5.3 measured Tflops/s at n=512
+PAPER_512_TFLOPS = {'fp32': 18.9, 'fp16': 32.7}
+# §5.4 / Table 2 estimates at n=1024 (512x512 submesh)
+PAPER_1024_TFLOPS_EST = {'fp32': 22.5, 'fp16': 36.0}
+# §5.1 pencil throughput at the largest measured size (flops/cycle)
+PAPER_PENCIL_FLOPS_PER_CYCLE = {'fp16': (4096, 0.89), 'fp32': (2048, 0.57)}
+# §5.1 asymptotes
+PAPER_PENCIL_ASYMPTOTE = {'fp16': 5.0 / 3.0, 'fp32': 5.0 / 6.5}
+# §6.2: bisection bandwidth of a 512x512 mesh
+PAPER_BISECTION_TBS = 3.5
+# §5.3: total router bandwidth at n=512 (PB/s)
+PAPER_ROUTER_BW_PBS = 0.8
+
+TABLE2 = [
+    # (size_n, precision, system, tflops)
+    (256, '64-bit', 'Takahashi Appro Xtreme-X3', 0.4),
+    (256, '64-bit', 'HeFFTe 32-node Summit', 0.5),
+    (256, '32-bit', 'wsFFT CS-2', 7.2),
+    (256, '16-bit', 'wsFFT CS-2', 11.6),
+    (512, '64-bit', 'HeFFTe 64-node Summit', 1.3),
+    (512, '32-bit', 'cuFFT DGXA100', 16.0),
+    (512, '32-bit', 'wsFFT CS-2', 18.9),
+    (512, '16-bit', 'wsFFT CS-2', 32.7),
+    (1024, '64-bit', 'HeFFTe 1024-node Summit', 9.0),
+    (1024, '32-bit', 'Google FFT TPUv3 pod', 10.9),
+    (1024, '32-bit', 'cuFFT DGXA100', 19.0),
+    (1024, '32-bit', 'wsFFT CS-2 (est.)', 22.5),
+    (1024, '16-bit', 'wsFFT CS-2 (est.)', 36.0),
+]
+
+
+# ---------------------------------------------------------------------------
+# Flop counts
+# ---------------------------------------------------------------------------
+
+def fft_flops_1d(n: int) -> float:
+    """Real-arithmetic flops of a complex-to-complex radix-2 FFT (§1)."""
+    return 5.0 * n * math.log2(n)
+
+
+def fft_flops_3d(n: int) -> float:
+    """3 supersteps x n^2 pencils (§5.3: 3 n^2 * 5 n log2 n)."""
+    return 3.0 * n * n * fft_flops_1d(n)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1-7: transpose (communication) cycle model
+# ---------------------------------------------------------------------------
+
+def tt_comm(n: int, m: int, precision: Precision) -> float:
+    """Eq. 1: cycles for ONE transpose phase, problem n^3 on (n/m)^2 PEs.
+
+    p(p-1)/2 messages of m^3 complex numbers through the hottest link at
+    r cycles per number, plus d*(p-1) router-reconfiguration gaps.
+    """
+    r = r_factor(precision)
+    p = n // m
+    return (p * (p - 1) / 2) * (m ** 3) * r + ROUTER_RECONFIG * (p - 1)
+
+
+def tt_comm_single(n: int, precision: Precision) -> float:
+    """Eqs. 3-4 (m = 1)."""
+    return tt_comm(n, 1, precision)
+
+
+# ---------------------------------------------------------------------------
+# §5.1: pencil (computation) cycle model
+# ---------------------------------------------------------------------------
+
+def pencil_cycles(n: int, precision: Precision) -> float:
+    """Per-PE cycles for one length-n pencil FFT (paper's assembly-level
+    count: 3n log2 n + 34n + 34 log2 n FP16; 6.5n log2 n + 35n + 36 log2 n
+    FP32)."""
+    lg = math.log2(n)
+    if precision == 'fp16':
+        return 3.0 * n * lg + 34.0 * n + 34.0 * lg
+    return 6.5 * n * lg + 35.0 * n + 36.0 * lg
+
+
+def pencil_flops_per_cycle(n: int, precision: Precision) -> float:
+    return fft_flops_1d(n) / pencil_cycles(n, precision)
+
+
+def pencil_asymptote(precision: Precision) -> float:
+    """§5.1: "Considering only the n log2 n term ... the asymptotes are
+    5/3 = 1.66 and 5/6.5 = 0.77 flops per cycle" — the ratio of the flop
+    count's leading coefficient (5) to the cycle model's (3 or 6.5)."""
+    return 5.0 / (3.0 if precision == 'fp16' else 6.5)
+
+
+# ---------------------------------------------------------------------------
+# Total model + reconstruction of the paper's comm/compute split
+# ---------------------------------------------------------------------------
+
+def total_cycles_model(n: int, m: int, precision: Precision) -> float:
+    """3 compute supersteps (m^2 pencils each) + 2 transposes."""
+    return 3.0 * m * m * pencil_cycles(n, precision) + 2.0 * tt_comm(n, m, precision)
+
+
+def measured_split(n: int, precision: Precision) -> Tuple[float, float]:
+    """(RT_cmpt, RT_comm) reconstructed from published data: compute from
+    the paper's (experiment-matching, §5.1) pencil cycle model; comm as
+    the Table 1 remainder. Used for Eqs. 8-12 exactly as the paper uses
+    its own measured phases."""
+    total = TABLE1_CYCLES[n][precision]
+    cmpt = 3.0 * pencil_cycles(n, precision)
+    return cmpt, total - cmpt
+
+
+def et_total_strong(n: int, m: int, precision: Precision) -> float:
+    """Eq. 11: estimated cycles for problem n^3 on (n/m)^2 PEs, from the
+    measured m=1 phases: m * RT_comm + m^2 * RT_cmpt."""
+    cmpt, comm = measured_split(n, precision)
+    return m * comm + m * m * cmpt
+
+
+def et_total_1024(precision: Precision) -> float:
+    """Eq. 10: ET(1024^3 on 1024^2 PEs) = 4*RT_comm(512) + 3*RT_pencil(1024),
+    where RT_comm(512) is the measured total communication of the 512 run
+    (RT_comm(2n) <= 4*RT_comm(n) per Eq. 2)."""
+    _, comm512 = measured_split(512, precision)
+    return 4.0 * comm512 + 3.0 * pencil_cycles(1024, precision)
+
+
+def et_total_1024_strong(m: int, precision: Precision) -> float:
+    """1024^3 on a (1024/m)^2 submesh: Eq. 11 on top of the Eq. 10
+    m=1 phases (the paper's 512x512-submesh datapoint is m=2)."""
+    _, comm512 = measured_split(512, precision)
+    comm1024 = 4.0 * comm512
+    cmpt1024 = 3.0 * pencil_cycles(1024, precision)
+    return m * comm1024 + m * m * cmpt1024
+
+
+def tflops(n: int, cycles: float) -> float:
+    """Tflops/s at the CS-2 clock for an n^3 3-D FFT."""
+    return fft_flops_3d(n) / (cycles / CLOCK_HZ) / 1e12
+
+
+def runtime_us(cycles: float) -> float:
+    return cycles / CLOCK_HZ * 1e6
+
+
+# ---------------------------------------------------------------------------
+# §5.3 network bandwidth (Fig. 6) and §6 bisection analysis
+# ---------------------------------------------------------------------------
+
+def router_bytes_total(n: int, precision: Precision) -> float:
+    """Total link-bytes during both transposes under broadcast-and-filter
+    (§4.3: "the data travels all the way to P_{p-1}" — a wavelet is NOT
+    consumed at its destination, the stream runs to the end of the row).
+    Eastward: PE i sends (n-1-i) elements, each traversing (n-1-i) links;
+    sum_i (n-1-i)^2 = n(n-1)(2n-1)/6 per direction per row. Two
+    directions, n rows (or columns), 2 transposes."""
+    elem_bytes = 4 if precision == 'fp16' else 8   # complex element
+    per_row_hops = 2.0 * n * (n - 1) * (2 * n - 1) / 6.0
+    return 2.0 * n * per_row_hops * elem_bytes
+
+
+def router_bw_pbs(n: int, precision: Precision) -> float:
+    cycles = TABLE1_CYCLES[n][precision]
+    return router_bytes_total(n, precision) / (cycles / CLOCK_HZ) / 1e15
+
+
+def bisection_bw_tbs(p: int) -> float:
+    """§6.2: p words/clock each direction across the midline."""
+    return 2.0 * p * WORD_BYTES * CLOCK_HZ / 1e12
+
+
+def comm_lower_bound_2d(n: int) -> float:
+    """§6.1: bisection-limited cycles for transposing an n^2 array on a
+    sqrt(n) x sqrt(n) mesh (FP16): n^2/4 elements each way over sqrt(n)
+    bidirectional links."""
+    return (n * n / 4.0) / math.sqrt(n)
+
+
+# ---------------------------------------------------------------------------
+# Model-vs-paper error report (consumed by benchmarks + tests)
+# ---------------------------------------------------------------------------
+
+def table1_report() -> list:
+    rows = []
+    for n, meas in TABLE1_CYCLES.items():
+        for prec in ('fp16', 'fp32'):
+            model = total_cycles_model(n, 1, prec)
+            err = (model - meas[prec]) / meas[prec]
+            rows.append(dict(n=n, precision=prec, measured=meas[prec],
+                             model=round(model), rel_err=err,
+                             us_measured=runtime_us(meas[prec]),
+                             tflops_measured=tflops(n, meas[prec])))
+    return rows

@@ -1,0 +1,42 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel.
+
+These are intentionally *independent* of the kernel implementations:
+``numpy.fft`` is the ground truth (the paper validates wsFFT against
+numpy's FFT — section 4.1 footnote), wrapped into the planar-complex
+convention the kernels use.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Planar = Tuple[jnp.ndarray, jnp.ndarray]
+
+
+def fft_pencil_ref(re, im, *, inverse: bool = False) -> Planar:
+    """Oracle for the batched pencil FFT kernels (last-axis transform)."""
+    x = np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+    y = np.fft.ifft(x, axis=-1) if inverse else np.fft.fft(x, axis=-1)
+    return jnp.asarray(y.real, jnp.asarray(re).dtype), jnp.asarray(y.imag, jnp.asarray(im).dtype)
+
+
+def fft2_ref(re, im, *, inverse: bool = False) -> Planar:
+    x = np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+    y = np.fft.ifft2(x) if inverse else np.fft.fft2(x)
+    return jnp.asarray(y.real, jnp.asarray(re).dtype), jnp.asarray(y.imag, jnp.asarray(im).dtype)
+
+
+def fftn_ref(re, im, *, inverse: bool = False) -> Planar:
+    x = np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+    y = np.fft.ifftn(x) if inverse else np.fft.fftn(x)
+    return jnp.asarray(y.real, jnp.asarray(re).dtype), jnp.asarray(y.imag, jnp.asarray(im).dtype)
+
+
+def twiddle_scale_ref(re, im, wr, wi) -> Planar:
+    """Oracle for fused elementwise complex scaling."""
+    x = np.asarray(re, np.float64) + 1j * np.asarray(im, np.float64)
+    w = np.asarray(wr, np.float64) + 1j * np.asarray(wi, np.float64)
+    y = x * w
+    return jnp.asarray(y.real, jnp.asarray(re).dtype), jnp.asarray(y.imag, jnp.asarray(im).dtype)

@@ -1,0 +1,400 @@
+"""Loop-aware HLO statistics for the roofline analysis.
+
+``compiled.cost_analysis()`` visits a while body ONCE, but our layer
+stacks are lax.scan loops (the 60-layer body appears once in HLO and
+runs 60 times). This module parses ``compiled.as_text()``, builds the
+computation call graph, reads each while's
+``backend_config={"known_trip_count":{"n":...}}`` (XLA annotates every
+scan-derived loop), and multiplies per-computation contributions by the
+product of enclosing trip counts. It reports:
+
+  * collective bytes   — per collective kind, operand-size convention
+                         (the assignment's formula) plus a wire-byte
+                         estimate with (g-1)/g ring factors
+  * matmul FLOPs       — 2*M*N*K per dot, trip-count adjusted
+  * HBM traffic proxy  — operand+result bytes of every top-level op
+                         (fusion internals excluded), trip-adjusted
+
+Pure text parsing — no XLA internals, stable across jax versions.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    'pred': 1, 's8': 1, 'u8': 1, 'f8e4m3fn': 1, 'f8e5m2': 1,
+    's16': 2, 'u16': 2, 'bf16': 2, 'f16': 2,
+    's32': 4, 'u32': 4, 'f32': 4,
+    's64': 8, 'u64': 8, 'f64': 8, 'c64': 8, 'c128': 16,
+}
+
+COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+               'collective-permute')
+
+_SHAPE_RE = re.compile(r'([a-z0-9]+)\[([0-9,]*)\]')
+_INST_RE = re.compile(r'^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$')
+_CALLED_RE = re.compile(
+    r'(?:calls|to_apply|condition|body|comparator|select|scatter)='
+    r'(?:%?([\w.\-]+)|\{([^}]*)\})')
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_GROUPS_RE = re.compile(r'replica_groups=\[(\d+),(\d+)\]')
+_GROUPS_LIST_RE = re.compile(r'replica_groups=\{\{([^}]*)\}')
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in a type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(','):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(','):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(',') if d)
+
+
+class Instruction:
+    __slots__ = ('name', 'rhs', 'result_bytes', 'result_dims', 'op',
+                 'operands', 'line')
+
+    def __init__(self, name: str, rhs: str):
+        self.name = name
+        self.rhs = rhs
+        # result type = everything before the op token
+        m = re.match(r'((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+)'
+                     r'([\w\-]+)\(', rhs)
+        if m:
+            self.result_bytes = shape_bytes(m.group(1))
+            self.result_dims = _first_dims(m.group(1))
+            self.op = m.group(2)
+            rest = rhs[m.end():]
+        else:
+            head = rhs.split(')')[0]
+            self.result_bytes = shape_bytes(head)
+            self.result_dims = _first_dims(head)
+            self.op = rhs.strip().split('(')[0].split()[-1] if '(' in rhs else ''
+            rest = rhs.split('(', 1)[1] if '(' in rhs else ''
+        # operand names: %tokens up to the closing paren of the arg list
+        depth, args = 1, []
+        buf = ''
+        for ch in rest:
+            if ch == '(':
+                depth += 1
+            elif ch == ')':
+                depth -= 1
+                if depth == 0:
+                    args.append(buf)
+                    break
+            buf += ch
+        self.operands = re.findall(r'%([\w.\-]+)', args[0] if args else '')
+        self.line = rhs
+
+
+def parse_computations(text: str) -> Dict[str, List[Instruction]]:
+    comps: Dict[str, List[Instruction]] = {}
+    params: Dict[str, Dict[str, int]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if s.endswith('{') and ('->' in s) and ('(' in s):
+            m = re.match(r'\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(', s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                params[cur] = {}
+                # header params: name: type
+                hdr = s[s.index('('):]
+                for pm in re.finditer(r'([\w.\-]+):\s*([a-z0-9]+\[[0-9,]*\]'
+                                      r'|\([^)]*\))', hdr):
+                    params[cur][pm.group(1)] = (shape_bytes(pm.group(2)),
+                                                _first_dims(pm.group(2)))
+                continue
+        if s.strip() == '}':
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INST_RE.match(s)
+        if m and ('(' in m.group(2)):
+            comps[cur].append(Instruction(m.group(1), m.group(2)))
+    # stash params as pseudo-instructions for operand-size lookups
+    for cname, pmap in params.items():
+        for pname, (pbytes, pdims) in pmap.items():
+            inst = Instruction.__new__(Instruction)
+            inst.name, inst.rhs, inst.op = pname, '', 'parameter'
+            inst.result_bytes, inst.result_dims = pbytes, pdims
+            inst.operands, inst.line = [], ''
+            comps[cname].insert(0, inst)
+    return comps
+
+
+def entry_name(text: str) -> str:
+    m = re.search(r'ENTRY\s+%?([\w.\-]+)', text)
+    return m.group(1)
+
+
+def num_partitions(text: str) -> int:
+    m = re.search(r'num_partitions=(\d+)', text)
+    return int(m.group(1)) if m else 1
+
+
+def _multipliers(text: str, comps) -> Dict[str, float]:
+    """Execution count of each computation (entry = 1; while bodies x
+    known_trip_count; fusion/call bodies x 1)."""
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for cname, insts in comps.items():
+        for inst in insts:
+            if not inst.line:
+                continue
+            trip = 1.0
+            if inst.op == 'while':
+                tm = _TRIP_RE.search(inst.line)
+                trip = float(tm.group(1)) if tm else 1.0
+            for m in _CALLED_RE.finditer(inst.line):
+                names = [m.group(1)] if m.group(1) else \
+                    re.findall(r'%?([\w.\-]+)', m.group(2))
+                for callee in names:
+                    if callee in comps:
+                        f = trip if inst.op == 'while' else 1.0
+                        edges[cname].append((callee, f))
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry_name(text)] = 1.0
+    # call graph is a DAG: propagate in topological-ish passes
+    for _ in range(len(comps) + 2):
+        changed = False
+        new = defaultdict(float)
+        new[entry_name(text)] = 1.0
+        for cname in comps:
+            for callee, f in edges.get(cname, ()):
+                new[callee] += mult[cname] * f
+        for k, v in new.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult)
+
+
+_SKIP_MEM_OPS = {'parameter', 'constant', 'tuple', 'get-tuple-element',
+                 'bitcast', 'after-all', 'partition-id', 'replica-id',
+                 'copy-start', 'copy-done', ''}
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_computations(text)
+    mult = _multipliers(text, comps)
+    name2bytes: Dict[str, Dict[str, int]] = {
+        c: {i.name: i.result_bytes for i in insts}
+        for c, insts in comps.items()}
+    name2dims: Dict[str, Dict[str, Tuple[int, ...]]] = {
+        c: {i.name: i.result_dims for i in insts}
+        for c, insts in comps.items()}
+
+    coll_bytes = defaultdict(float)        # operand-size convention
+    coll_once = defaultdict(float)         # same, multiplier-free
+    coll_wire = defaultdict(float)         # ring-model wire bytes
+    coll_count = defaultdict(float)
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+
+    for cname, insts in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        local = name2bytes[cname]
+        for inst in insts:
+            if inst.op in _SKIP_MEM_OPS:
+                continue
+            op_bytes = sum(local.get(o, 0) for o in inst.operands)
+            hbm_bytes += (inst.result_bytes + op_bytes) * m
+            if inst.op in COLLECTIVES:
+                coll_bytes[inst.op] += op_bytes * m
+                coll_once[inst.op] += op_bytes
+                coll_count[inst.op] += m
+                g = _group_size(inst.line)
+                if inst.op == 'all-reduce':
+                    wire = 2.0 * op_bytes * (g - 1) / max(g, 1)
+                elif inst.op in ('all-gather', 'reduce-scatter',
+                                 'all-to-all'):
+                    wire = max(op_bytes, inst.result_bytes) * (g - 1) / max(g, 1)
+                else:                      # collective-permute
+                    wire = op_bytes
+                coll_wire[inst.op] += wire * m
+            elif inst.op == 'dot':
+                k = _contraction_size(inst, name2dims[cname])
+                dot_flops += 2.0 * shape_elems(inst.rhs) * k * m
+
+    return {
+        'num_partitions': num_partitions(text),
+        'collective_bytes': dict(coll_bytes),
+        'collective_bytes_total': float(sum(coll_bytes.values())),
+        'collective_bytes_once': dict(coll_once),
+        'collective_wire_bytes': dict(coll_wire),
+        'collective_wire_total': float(sum(coll_wire.values())),
+        'collective_counts': dict(coll_count),
+        'dot_flops': float(dot_flops),
+        'hbm_bytes_proxy': float(hbm_bytes),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Wire-dtype correction from pre-optimization stablehlo
+# ---------------------------------------------------------------------------
+#
+# XLA:CPU's float-normalization pass widens every bf16/f8 collective to
+# f32 (the host backend has no narrow collectives), so post-optimization
+# HLO overstates TPU wire bytes by the dtype ratio. The program's TRUE
+# wire dtype is what the jax-level lowering wrote: parse the pre-opt
+# stablehlo, sum collective operand bytes per kind (loop-free; scan
+# bodies appear once there too), and scale the loop-aware post-opt
+# totals by the per-kind pre/post ratio. Structure is preserved 1:1 by
+# float normalization, so the ratio IS the dtype correction.
+
+_STABLEHLO_KINDS = {
+    'all_to_all': 'all-to-all', 'all_reduce': 'all-reduce',
+    'all_gather': 'all-gather', 'reduce_scatter': 'reduce-scatter',
+    'collective_permute': 'collective-permute',
+}
+_MLIR_DTYPE_BYTES = {
+    'bf16': 2, 'f16': 2, 'f32': 4, 'f64': 8, 'i1': 1, 'i8': 1,
+    'i16': 2, 'i32': 4, 'i64': 8, 'ui8': 1, 'ui16': 2, 'ui32': 4,
+    'f8e4m3fn': 1, 'f8e5m2': 1, 'f8E4M3FN': 1, 'f8E5M2': 1,
+}
+_TENSOR_RE = re.compile(r'tensor<([0-9x]*)x?([A-Za-z0-9]+)>')
+
+
+def _mlir_tensor_bytes(sig: str) -> float:
+    total = 0.0
+    for dims, dt in _TENSOR_RE.findall(sig):
+        if dt not in _MLIR_DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split('x'):
+            if d:
+                n *= int(d)
+        total += n * _MLIR_DTYPE_BYTES[dt]
+    return total
+
+
+def stablehlo_collective_bytes(pre_text: str) -> Dict[str, float]:
+    """Operand bytes per collective kind from pre-opt stablehlo text
+    (each op counted once — no loop awareness needed for the ratio)."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in pre_text.splitlines():
+        m = re.search(r'"stablehlo\.(%s)"' % '|'.join(_STABLEHLO_KINDS), line)
+        if not m:
+            continue
+        kind = _STABLEHLO_KINDS[m.group(1)]
+        sig = line.rsplit(':', 1)[-1]
+        ops = sig.split('->')[0]                 # operand types only
+        out[kind] += _mlir_tensor_bytes(ops)
+    return dict(out)
+
+
+def wire_corrected_collectives(stats: Dict, pre_text: str) -> Dict:
+    """Return {kind: corrected loop-aware bytes} + corrected total."""
+    pre = stablehlo_collective_bytes(pre_text)
+    corrected = {}
+    for kind, post_loop in stats['collective_bytes'].items():
+        once = stats['collective_bytes_once'].get(kind, 0.0)
+        ratio = (pre.get(kind, once) / once) if once else 1.0
+        ratio = min(max(ratio, 0.0), 1.0)        # only narrow, never widen
+        corrected[kind] = post_loop * (ratio if ratio > 0 else 1.0)
+    return {'collective_bytes': corrected,
+            'collective_bytes_total': float(sum(corrected.values()))}
+
+
+def compile_with_spmd_dump(lowered):
+    """Compile a jax.stages.Lowered while dumping the
+    after-spmd-partitioning HLO (true pre-float-normalization wire
+    dtypes — pjit-inserted collectives included). Returns
+    (compiled, spmd_hlo_text_or_None)."""
+    import glob as _glob
+    import shutil as _shutil
+    import tempfile as _tempfile
+    d = _tempfile.mkdtemp(prefix='xla_spmd_dump_')
+    try:
+        compiled = lowered.compile(compiler_options={
+            'xla_dump_to': d,
+            'xla_dump_hlo_pass_re': 'spmd-partitioning'})
+        hits = [f for f in _glob.glob(os.path.join(d, '*.txt'))
+                if 'after_spmd-partitioning' in os.path.basename(f)]
+        txt = open(max(hits, key=os.path.getsize)).read() if hits else None
+        return compiled, txt
+    finally:
+        _shutil.rmtree(d, ignore_errors=True)
+
+
+def wire_ratio_from_spmd(stats: Dict, spmd_text: Optional[str]) -> Dict:
+    """True-wire collective bytes: scale the loop-aware final-HLO totals
+    by the per-kind byte ratio between the post-SPMD dump (true dtypes,
+    bodies counted once) and the final HLO counted once. Ratio > 1 never
+    applied (collective combiners may merge ops; bytes are preserved)."""
+    if not spmd_text:
+        return {'collective_bytes': dict(stats['collective_bytes']),
+                'collective_bytes_total': stats['collective_bytes_total'],
+                'wire_ratio': {}}
+    spmd = analyze(spmd_text)
+    corrected, ratios = {}, {}
+    for kind, post_loop in stats['collective_bytes'].items():
+        once = stats['collective_bytes_once'].get(kind, 0.0)
+        spmd_once = spmd['collective_bytes'].get(kind, once)
+        ratio = (spmd_once / once) if once else 1.0
+        ratio = min(max(ratio, 0.25), 1.0)
+        ratios[kind] = ratio
+        corrected[kind] = post_loop * ratio
+    return {'collective_bytes': corrected,
+            'collective_bytes_total': float(sum(corrected.values())),
+            'wire_ratio': ratios}
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)                    # [g,n]<=[N] iota form
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)               # {{0,1,...},...} form
+    if m:
+        return len([t for t in m.group(1).split(',') if t.strip()])
+    return num_partitions(line) or 2
+
+
+def _contraction_size(inst: Instruction,
+                      dims_tbl: Dict[str, Tuple[int, ...]]) -> float:
+    """K of a dot = product of the lhs contracting dims, looked up from
+    the defining instruction of the lhs operand."""
+    m = re.search(r'lhs_contracting_dims=\{([0-9,]*)\}', inst.line)
+    if not m or not inst.operands:
+        return 1.0
+    cdims = [int(d) for d in m.group(1).split(',') if d]
+    lhs = dims_tbl.get(inst.operands[0], ())
+    k = 1.0
+    for d in cdims:
+        if d < len(lhs):
+            k *= lhs[d]
+    return k

@@ -1,0 +1,26 @@
+"""Production meshes. Functions, not module constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ('data','model'); multi-pod adds a leading
+    2-pod axis: (2,16,16) = 512 chips ('pod','data','model')."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
+    return jax.make_mesh(shape, axes)
+
+
+def make_fft_mesh(rows: int, cols: int, *, pods: int = 1):
+    """The paper's PE-grid analogue: pencil grid ('x','y') [+ 'pod']."""
+    if pods > 1:
+        return jax.make_mesh((pods, rows, cols), ('pod', 'x', 'y'))
+    return jax.make_mesh((rows, cols), ('x', 'y'))
+
+
+def make_host_mesh(rows: int, cols: int):
+    """Small fake-device mesh for CPU tests/examples (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=rows*cols)."""
+    return jax.make_mesh((rows, cols), ('data', 'model'))

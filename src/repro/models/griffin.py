@@ -1,0 +1,118 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block.
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = c * r_t * log sigmoid(lam)    (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Input-gated, *time-varying* decay ==> no exact FFT-convolution form
+(DESIGN.md §Arch-applicability): the recurrence is computed, not
+spectrally transformed. Prefill runs a chunked scan (associative scan
+inside a chunk, lax.scan across chunks); decode is an O(1) state update.
+
+The temporal block is conv1d + RG-LRU on one branch, GeLU gate on the
+other (Griffin fig. 2); local sliding-window attention layers come from
+models/attention.py with cfg.window.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import PSpec
+from repro.models.ssd import _causal_conv
+
+C_FACTOR = 8.0
+
+
+def rglru_plan(cfg) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        'wx_in': L.linear_plan(d, w, ('embed', 'heads')),
+        'wgate': L.linear_plan(d, w, ('embed', 'heads')),
+        'conv': PSpec((cfg.conv_width, w), (None, 'heads')),
+        'wa': PSpec((w, w), ('heads', 'heads')),
+        'wi': PSpec((w, w), ('heads', 'heads')),
+        'ba': PSpec((w,), (None,), 'zeros'),
+        'bi': PSpec((w,), (None,), 'zeros'),
+        'lam': PSpec((w,), (None,), 'ones'),      # a = sigmoid(lam*softplus-ish)
+        'wo': L.linear_plan(w, d, ('heads', 'embed')),
+    }
+
+
+def _gates(p: Dict, x):
+    """(log_a, gated_input) per position; fp32. x: (..., W) post-conv."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(L.linear(xf, p['wa'].astype(jnp.float32))
+                       + p['ba'].astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(xf, p['wi'].astype(jnp.float32))
+                       + p['bi'].astype(jnp.float32))
+    log_a_max = jax.nn.log_sigmoid(p['lam'].astype(jnp.float32) * 4.0)
+    log_a = C_FACTOR * r * log_a_max            # <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def _lru_scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t h_{t-1} + b_t along axis 1; returns (h_all, h_final).
+    Associative scan inside Lc-chunks, sequential carry across chunks."""
+    B, S0, W = a.shape
+    Lc = min(chunk, S0)
+    pad = (-S0) % Lc
+    if pad:        # identity padding: a=1, b=0 leaves the state untouched
+        a = jnp.concatenate([a, jnp.ones((B, pad, W), a.dtype)], axis=1)
+        b = jnp.concatenate([b, jnp.zeros((B, pad, W), b.dtype)], axis=1)
+    S = S0 + pad
+    nc = S // Lc
+    ac = a.reshape(B, nc, Lc, W).swapaxes(0, 1)
+    bc = b.reshape(B, nc, Lc, W).swapaxes(0, 1)
+
+    def chunk_step(h, ab):
+        a_i, b_i = ab
+        # cumulative composition within the chunk:
+        #  (A, Bv) o (A', Bv') = (A*A', A'*Bv + Bv')
+        def compose(l, r):
+            return l[0] * r[0], r[0] * l[1] + r[1]
+        A_cum, B_cum = jax.lax.associative_scan(compose, (a_i, b_i), axis=1)
+        h_all = A_cum * h[:, None, :] + B_cum
+        return h_all[:, -1, :], h_all
+
+    h_final, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+    hs = hs.swapaxes(0, 1).reshape(B, S, W)[:, :S0]
+    if pad:        # true final state is at position S0-1, not the pad end
+        h_final = hs[:, -1, :]
+    return hs, h_final
+
+
+def rglru_apply(p: Dict, cfg, x, *, return_cache: bool = False):
+    """Temporal block, full sequence. x: (B, S, d_model)."""
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(L.apply_linear(p['wgate'], x))
+    u = L.apply_linear(p['wx_in'], x)
+    u, conv_state = _causal_conv(u, p['conv'])
+    a, b = _gates(p, u)
+    h0 = jnp.zeros((B, cfg.lru_width), jnp.float32)
+    h, h_final = _lru_scan_chunked(a, b, h0, cfg.lru_chunk)
+    y = (h.astype(x.dtype)) * gate
+    out = L.apply_linear(p['wo'], y)
+    if return_cache:
+        return out, {'h': h_final, 'conv': conv_state}
+    return out
+
+
+def rglru_decode(p: Dict, cfg, x, cache: Dict):
+    """One-token decode. x: (B, 1, d); cache: {'h' (B, W) fp32,
+    'conv' (B, conv_width-1, W)}."""
+    h, conv_state = cache['h'], cache['conv']
+    gate = jax.nn.gelu(L.apply_linear(p['wgate'], x))
+    u = L.apply_linear(p['wx_in'], x)
+    u, conv_state = _causal_conv(u, p['conv'], conv_state)
+    a, b = _gates(p, u[:, 0, :])
+    h = a * h + b
+    y = h[:, None, :].astype(x.dtype) * gate
+    return L.apply_linear(p['wo'], y), {'h': h, 'conv': conv_state}

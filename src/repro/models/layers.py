@@ -1,0 +1,257 @@
+"""Shared model layers + the parameter *plan* system.
+
+A plan is a pytree whose leaves are ``PSpec(shape, axes, init)``:
+``axes`` are logical sharding axes (see parallel/sharding.py) and
+``init`` names an initializer. From one plan we derive
+  * real parameters      (init_from_plan — smoke tests, examples)
+  * ShapeDtypeStructs    (abstract_from_plan — the dry-run lowers the
+                          full 236B-param configs without ever
+                          allocating them)
+  * sharding specs       (axes_from_plan + parallel.tree_specs)
+so shapes/axes/init have a single source of truth per architecture.
+
+All functional apply() code here takes explicit param dicts; compute is
+bf16-friendly (norms/softmax/rope in fp32, matmuls in the param dtype
+with fp32 accumulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Param plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = 'lin'            # lin | emb | zeros | ones | ssm_a | ssm_dt
+    dtype: Optional[Any] = None  # override the model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _init_leaf(key, p: PSpec, dtype) -> jnp.ndarray:
+    dt = p.dtype or dtype
+    if p.init == 'zeros':
+        return jnp.zeros(p.shape, dt)
+    if p.init == 'neg1':          # empty ring-cache slots
+        return jnp.full(p.shape, -1, dt)
+    if p.init == 'ones':
+        return jnp.ones(p.shape, dt)
+    if p.init == 'emb':
+        return (jax.random.normal(key, p.shape, jnp.float32) * 0.02).astype(dt)
+    if p.init == 'lin':          # fan-in scaled normal
+        fan_in = p.shape[0] if len(p.shape) > 1 else p.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dt)
+    if p.init == 'ssm_a':        # -exp(U[log 1, log 16]): Mamba2 A_log init
+        u = jax.random.uniform(key, p.shape, jnp.float32,
+                               minval=math.log(1.0), maxval=math.log(16.0))
+        return u.astype(dt)      # stored as log(-A)
+    if p.init == 'ssm_dt':       # dt bias ~ softplus^-1(U[1e-3, 1e-1])
+        u = jax.random.uniform(key, p.shape, jnp.float32,
+                               minval=math.log(1e-3), maxval=math.log(1e-1))
+        dt_ = jnp.exp(u)
+        return (dt_ + jnp.log(-jnp.expm1(-dt_))).astype(dt)
+    raise ValueError(f'unknown init {p.init!r}')
+
+
+def init_from_plan(key, plan, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(plan, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(k, p, dtype) for k, p in zip(keys, leaves)])
+
+
+def abstract_from_plan(plan, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or dtype),
+        plan, is_leaf=is_pspec)
+
+
+def axes_from_plan(plan):
+    return jax.tree.map(lambda p: p.axes, plan, is_leaf=is_pspec)
+
+
+def stack_plans(plans: Sequence):
+    """Stack per-layer plans along a new leading (layer) axis — the
+    parameter layout consumed by lax.scan over layers."""
+    def stack(*leaves: PSpec) -> PSpec:
+        p0 = leaves[0]
+        assert all(l.shape == p0.shape for l in leaves)
+        return PSpec((len(leaves),) + p0.shape, (None,) + p0.axes,
+                     p0.init, p0.dtype)
+    return jax.tree.map(stack, *plans, is_leaf=is_pspec)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def norm_plan(d: int, kind: str = 'rms') -> Dict:
+    if kind == 'rms':
+        return {'scale': PSpec((d,), (None,), 'ones')}
+    return {'scale': PSpec((d,), (None,), 'ones'),
+            'bias': PSpec((d,), (None,), 'zeros')}
+
+
+def apply_norm(p: Dict, x, eps: float = 1e-6):
+    if 'bias' in p:
+        return layer_norm(x, p['scale'], p['bias'], eps)
+    return rms_norm(x, p['scale'], eps)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+def linear(x, w, b=None, *, precision=None):
+    y = jnp.einsum('...d,df->...f', x, w.astype(x.dtype),
+                   precision=precision,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def linear_plan(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]],
+                *, bias: bool = False, bias_axis: Optional[str] = None) -> Dict:
+    p = {'w': PSpec((d_in, d_out), axes)}
+    if bias:
+        p['b'] = PSpec((d_out,), (bias_axis if bias_axis is not None else axes[1],),
+                       'zeros')
+    return p
+
+
+def apply_linear(p: Dict, x):
+    return linear(x, p['w'], p.get('b'))
+
+
+def embed_plan(vocab: int, d: int) -> Dict:
+    return {'table': PSpec((vocab, d), ('vocab', 'embed'), 'emb')}
+
+
+def embed_lookup(p: Dict, ids):
+    return jnp.take(p['table'], ids, axis=0)
+
+
+def unembed(p: Dict, x):
+    """Logits via the (tied or separate) embedding table; fp32 output for
+    a numerically-stable softmax."""
+    return jnp.einsum('...d,vd->...v', x, p['table'].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def apply_rope(x, positions, *, theta: float = 1e4):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, D/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, *, theta: float = 1e4,
+                sections: Tuple[int, int, int] = (16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: positions3 (3, ..., S) are (t, h, w)
+    position ids; the head_dim/2 frequency slots are split into three
+    sections, each rotated by its own position stream."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)     # (D/2,)
+    sec = np.repeat(np.arange(3), np.asarray(sections))        # (D/2,) -> section id
+    onehot = jnp.asarray(np.eye(3)[sec], jnp.float32)          # (D/2, 3)
+    pos = positions3.astype(jnp.float32)[..., None]            # (3, ..., S, 1)
+    ang_all = pos * freqs                                      # (3, ..., S, D/2)
+    ang = jnp.einsum('k...d,dk->...d', ang_all, onehot)        # per-slot select
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_plan(d: int, d_ff: int, *, gated: bool = True) -> Dict:
+    if gated:
+        return {'wi': PSpec((d, 2 * d_ff), ('embed', 'mlp')),
+                'wo': PSpec((d_ff, d), ('mlp', 'embed'))}
+    return {'wi': PSpec((d, d_ff), ('embed', 'mlp')),
+            'wo': PSpec((d_ff, d), ('mlp', 'embed'))}
+
+
+def apply_mlp(p: Dict, x, *, act: str = 'silu'):
+    h = linear(x, p['wi'])
+    if p['wi'].shape[-1] == 2 * p['wo'].shape[0]:      # gated (SwiGLU/GeGLU)
+        g, u = jnp.split(h, 2, axis=-1)
+        h = _act(g, act) * u
+    else:
+        h = _act(h, act)
+    return linear(h, p['wo'])
+
+
+def _act(x, name: str):
+    if name == 'silu':
+        return jax.nn.silu(x)
+    if name == 'gelu':
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, *, mask=None):
+    """Mean token cross-entropy; logits fp32 (..., V), labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

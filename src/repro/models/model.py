@@ -1,0 +1,454 @@
+"""Model assembly: config -> parameter plan -> train/prefill/decode.
+
+Layers are grouped into *periods* of ``cfg.block_pattern`` (dense archs:
+period = 1 layer; recurrentgemma: period = (rglru, rglru, local_attn)).
+All full periods are stacked and executed under one ``lax.scan`` so the
+lowered HLO contains a single partitioned layer body regardless of depth
+— mandatory for compiling 60-layer/160-expert configs against a
+512-device mesh. Remainder layers run as an unrolled tail.
+
+Decode caches mirror the parameter stacking: a pytree with leading
+``n_periods`` axis scanned jointly with the parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import griffin, moe, ssd
+from repro.models import layers as L
+from repro.models.layers import PSpec
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+def ffn_kind(cfg) -> Optional[str]:
+    if cfg.moe:
+        return 'moe'
+    if cfg.d_ff > 0:
+        return 'mlp'
+    return None
+
+
+def layer_plan(cfg, kind: str) -> Dict:
+    p: Dict[str, Any] = {'norm1': L.norm_plan(cfg.d_model, cfg.norm_kind)}
+    if kind in ('attn', 'local_attn'):
+        p[kind] = attn.gqa_plan(cfg)
+    elif kind == 'mla':
+        p[kind] = attn.mla_plan(cfg)
+    elif kind == 'ssd':
+        p[kind] = ssd.ssd_plan(cfg)
+    elif kind == 'rglru':
+        p[kind] = griffin.rglru_plan(cfg)
+    elif kind == 'fftconv':
+        p[kind] = ssd.fftconv_plan(cfg)
+    else:
+        raise ValueError(f'unknown block kind {kind!r}')
+    fk = ffn_kind(cfg)
+    if fk == 'mlp':
+        p['norm2'] = L.norm_plan(cfg.d_model, cfg.norm_kind)
+        p['mlp'] = L.mlp_plan(cfg.d_model, cfg.d_ff)
+    elif fk == 'moe':
+        p['norm2'] = L.norm_plan(cfg.d_model, cfg.norm_kind)
+        p['moe'] = moe.moe_plan(cfg)
+    return p
+
+
+def split_layers(cfg) -> Tuple[int, int]:
+    """(n_full_periods, n_tail_layers)."""
+    P = len(cfg.block_pattern)
+    return cfg.num_layers // P, cfg.num_layers % P
+
+
+def model_plan(cfg) -> Dict:
+    n_periods, tail = split_layers(cfg)
+    period = {f'{i}_{kind}': layer_plan(cfg, kind)
+              for i, kind in enumerate(cfg.block_pattern)}
+    plan: Dict[str, Any] = {
+        'embed': L.embed_plan(cfg.vocab_size, cfg.d_model),
+        'blocks': L.stack_plans([period] * n_periods),
+        'final_norm': L.norm_plan(cfg.d_model, cfg.norm_kind),
+    }
+    if not cfg.tie_embeddings:
+        plan['head'] = L.linear_plan(cfg.d_model, cfg.vocab_size,
+                                     ('embed', 'vocab'))
+    if tail:
+        plan['tail'] = {str(j): layer_plan(cfg, cfg.block_pattern[j])
+                        for j in range(tail)}
+    return plan
+
+
+def init_params(key, cfg, dtype=jnp.bfloat16):
+    return L.init_from_plan(key, model_plan(cfg), dtype)
+
+
+def abstract_params(cfg, dtype=jnp.bfloat16):
+    return L.abstract_from_plan(model_plan(cfg), dtype)
+
+
+def param_axes(cfg):
+    return L.axes_from_plan(model_plan(cfg))
+
+
+def param_count(cfg) -> int:
+    import numpy as np
+    leaves = jax.tree.leaves(model_plan(cfg), is_leaf=L.is_pspec)
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    if not cfg.moe:
+        return param_count(cfg)
+    import numpy as np
+    total = 0
+    for path, p in jax.tree.flatten_with_path(
+            model_plan(cfg), is_leaf=L.is_pspec)[0]:
+        n = int(np.prod(p.shape))
+        keys = [getattr(k, 'key', '') for k in path]
+        if 'moe' in keys and ('wi' in keys or 'wo' in keys):
+            n = n * cfg.top_k // cfg.num_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence blocks (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _constrain(x, rules, axes):
+    if rules is None:
+        return x
+    from repro.parallel import constrain
+    return constrain(x, rules, axes)
+
+
+def _apply_block(p: Dict, cfg, kind: str, x, positions, *, rules=None,
+                 mesh=None, sp=False, cache_cap=None, want_cache=False):
+    """One residual block (temporal + optional FFN). Returns
+    (x, aux_loss, cache-or-None)."""
+    seq_ax = 'seq_sp' if sp else 'seq'
+    h = L.apply_norm(p['norm1'], x, cfg.norm_eps)
+    cache = None
+    bspec = None
+    if sp and rules is not None:
+        from jax.sharding import PartitionSpec as JP
+        bspec = JP(rules.table.get('batch'))
+    if kind in ('attn', 'local_attn'):
+        window = cfg.window if kind == 'local_attn' else 0
+        if want_cache:
+            y, cache = attn.gqa_prefill(p[kind], cfg, h, positions,
+                                        window=window, cache_cap=cache_cap,
+                                        mesh=mesh, sp=sp,
+                                        batch_spec=bspec or ())
+        else:
+            y = attn.gqa_apply(p[kind], cfg, h, positions, window=window,
+                               mesh=mesh, sp=sp, batch_spec=bspec or ())
+    elif kind == 'mla':
+        if want_cache:
+            y, cache = attn.mla_prefill(p[kind], cfg, h, positions,
+                                        cache_cap=cache_cap)
+        else:
+            y = attn.mla_apply(p[kind], cfg, h, positions)
+    elif kind == 'ssd':
+        out = ssd.ssd_apply(p[kind], cfg, h, return_cache=want_cache)
+        y, cache = out if want_cache else (out, None)
+    elif kind == 'rglru':
+        out = griffin.rglru_apply(p[kind], cfg, h, return_cache=want_cache)
+        y, cache = out if want_cache else (out, None)
+    elif kind == 'fftconv':
+        y = ssd.fftconv_apply(p[kind], cfg, h)
+    else:
+        raise ValueError(kind)
+    x = _constrain(x + y, rules, ('batch', seq_ax, None))
+    aux = jnp.zeros((), jnp.float32)
+    fk = ffn_kind(cfg)
+    if fk is not None:
+        h2 = L.apply_norm(p['norm2'], x, cfg.norm_eps)
+        if fk == 'mlp':
+            y2 = L.apply_mlp(p['mlp'], h2, act=cfg.act)
+        else:
+            y2, aux = _moe_ffn(p['moe'], cfg, h2, rules=rules, mesh=mesh)
+        x = _constrain(x + y2, rules, ('batch', seq_ax, None))
+    return x, aux, cache
+
+
+def _moe_ffn(p, cfg, h, *, rules=None, mesh=None):
+    """Distributed runs use the explicit shard_map EP path (pinned
+    collective schedule — see moe.moe_ep_explicit); single-device and
+    rule-less runs use the pjit/vmap-friendly scatter path."""
+    if rules is not None and mesh is not None and mesh.shape.get('model', 1) > 1:
+        from jax.sharding import PartitionSpec as JP
+        # one spec ENTRY for the batch dim (('pod','data') stays one
+        # tuple entry, not two positional entries)
+        return moe.moe_ep_explicit(p, cfg, h, mesh,
+                                   batch_spec=JP(rules.table.get('batch')),
+                                   fsdp_axes=rules.table.get('embed'))
+    return moe.moe_apply(p, cfg, h, rules=rules)
+
+
+def _positions(cfg, batch, B, S):
+    if cfg.pos_kind == 'mrope':
+        pos = batch.get('positions')
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+        return pos
+    if cfg.pos_kind == 'rope':
+        return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return None
+
+
+def _embed_in(params, cfg, batch, rules, sp):
+    if cfg.input_mode == 'embeds':
+        x = batch['embeds']
+    else:
+        x = L.embed_lookup(params['embed'], batch['tokens'])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return _constrain(x, rules, ('batch', 'seq_sp' if sp else 'seq', None))
+
+
+def forward(params, cfg, batch, *, rules=None, mesh=None, sp=False):
+    """Logits for a full sequence. batch: {'tokens' | 'embeds',
+    ['positions']}. Returns (logits fp32, aux_loss)."""
+    x = _embed_in(params, cfg, batch, rules, sp)
+    B, S = x.shape[:2]
+    positions = _positions(cfg, batch, B, S)
+
+    def period_body(carry, pp):
+        x, aux = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            x, a, _ = _apply_block(pp[f'{i}_{kind}'], cfg, kind, x, positions,
+                                   rules=rules, mesh=mesh, sp=sp)
+            aux = aux + a
+        return (x, aux), None
+
+    body = period_body
+    if cfg.remat:
+        body = jax.checkpoint(period_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params['blocks'])
+    for j in range(split_layers(cfg)[1]):
+        kind = cfg.block_pattern[j]
+        x, a, _ = _apply_block(params['tail'][str(j)], cfg, kind, x,
+                               positions, rules=rules, mesh=mesh, sp=sp)
+        aux = aux + a
+    x = L.apply_norm(params['final_norm'], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    logits = _constrain(logits, rules, ('batch', 'seq_sp' if sp else 'seq',
+                                        'vocab'))
+    return logits, aux
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        return L.unembed(params['embed'], x)
+    return jnp.einsum('...d,dv->...v', x,
+                      params['head']['w'].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def loss_fn(params, cfg, batch, *, rules=None, mesh=None, sp=False):
+    logits, aux = forward(params, cfg, batch, rules=rules, mesh=mesh, sp=sp)
+    loss = L.softmax_xent(logits, batch['labels'], mask=batch.get('mask'))
+    total = loss + cfg.aux_coef * aux
+    return total, {'loss': loss, 'aux': aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache plan, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache_plan(cfg, kind: str, B: int, cap: int) -> Optional[Dict]:
+    KH, hd = cfg.num_kv_heads, cfg.head_dim
+    cdt = cfg.cache_dtype
+    if kind == 'attn':
+        return {'k': PSpec((B, cap, KH, hd),
+                           ('batch', 'kv_seq', 'kv_heads', None), 'zeros', cdt),
+                'v': PSpec((B, cap, KH, hd),
+                           ('batch', 'kv_seq', 'kv_heads', None), 'zeros', cdt)}
+    if kind == 'local_attn':
+        W = min(cfg.window, cap)
+        return {'k': PSpec((B, W, KH, hd), ('batch', None, 'kv_heads', None),
+                           'zeros', cdt),
+                'v': PSpec((B, W, KH, hd), ('batch', None, 'kv_heads', None),
+                           'zeros', cdt),
+                'kpos': PSpec((W,), (None,), 'neg1', jnp.int32)}
+    if kind == 'mla':
+        return {'latent': PSpec((B, cap, cfg.kv_lora_rank),
+                                ('batch', 'kv_seq', 'kv_lora'), 'zeros', cdt),
+                'krope': PSpec((B, cap, cfg.rope_head_dim),
+                               ('batch', 'kv_seq', None), 'zeros', cdt)}
+    if kind == 'ssd':
+        di, H, P, N = ssd.ssd_dims(cfg)
+        G, w = cfg.ssm_groups, cfg.conv_width
+        return {'state': PSpec((B, H, N, P), ('batch', 'heads', None, None),
+                               'zeros', jnp.float32),
+                'conv_x': PSpec((B, w - 1, di), ('batch', None, 'heads'),
+                                'zeros', cdt),
+                'conv_b': PSpec((B, w - 1, G * N), ('batch', None, None),
+                                'zeros', cdt),
+                'conv_c': PSpec((B, w - 1, G * N), ('batch', None, None),
+                                'zeros', cdt)}
+    if kind == 'rglru':
+        w = cfg.conv_width
+        return {'h': PSpec((B, cfg.lru_width), ('batch', 'heads'),
+                           'zeros', jnp.float32),
+                'conv': PSpec((B, w - 1, cfg.lru_width),
+                              ('batch', None, 'heads'), 'zeros', cdt)}
+    if kind == 'fftconv':
+        return None
+    raise ValueError(kind)
+
+
+def cache_plan(cfg, B: int, cap: int) -> Dict:
+    n_periods, tail = split_layers(cfg)
+    period = {f'{i}_{kind}': _layer_cache_plan(cfg, kind, B, cap)
+              for i, kind in enumerate(cfg.block_pattern)}
+    period = {k: v for k, v in period.items() if v is not None}
+    plan: Dict[str, Any] = {'blocks': L.stack_plans([period] * n_periods)}
+    if tail:
+        plan['tail'] = {
+            str(j): _layer_cache_plan(cfg, cfg.block_pattern[j], B, cap)
+            for j in range(tail)}
+    return plan
+
+
+def init_cache(cfg, B: int, cap: int):
+    return L.init_from_plan(jax.random.PRNGKey(0), cache_plan(cfg, B, cap),
+                            cfg.cache_dtype)
+
+
+def abstract_cache(cfg, B: int, cap: int):
+    return L.abstract_from_plan(cache_plan(cfg, B, cap), cfg.cache_dtype)
+
+
+def cache_axes(cfg, B: int, cap: int):
+    return L.axes_from_plan(cache_plan(cfg, B, cap))
+
+
+def prefill(params, cfg, batch, *, cache_cap: Optional[int] = None,
+            rules=None, mesh=None, sp=False):
+    """Run the prompt, return (last-token logits fp32, caches)."""
+    x = _embed_in(params, cfg, batch, rules, sp)
+    B, S = x.shape[:2]
+    cap = cache_cap or S
+    positions = _positions(cfg, batch, B, S)
+
+    def period_body(x, pp):
+        caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f'{i}_{kind}'
+            x, _, c = _apply_block(pp[key], cfg, kind, x, positions,
+                                   rules=rules, mesh=mesh, sp=sp,
+                                   cache_cap=cap, want_cache=True)
+            if c is not None:
+                caches[key] = c
+        return x, caches
+
+    x, caches = jax.lax.scan(period_body, x, params['blocks'])
+    out: Dict[str, Any] = {'blocks': caches}
+    n_tail = split_layers(cfg)[1]
+    if n_tail:
+        out['tail'] = {}
+        for j in range(n_tail):
+            kind = cfg.block_pattern[j]
+            x, _, c = _apply_block(params['tail'][str(j)], cfg, kind, x,
+                                   positions, rules=rules, mesh=mesh, sp=sp,
+                                   cache_cap=cap, want_cache=True)
+            out['tail'][str(j)] = c
+    x = L.apply_norm(params['final_norm'], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, out
+
+
+def _decode_block(p: Dict, cfg, kind: str, x, cache, cache_len, *,
+                  rules=None, mesh=None):
+    if kind == 'attn':
+        h = L.apply_norm(p['norm1'], x, cfg.norm_eps)
+        y, ck, cv = attn.gqa_decode(p[kind], cfg, h, cache['k'], cache['v'],
+                                    cache_len)
+        cache = {'k': ck, 'v': cv}
+    elif kind == 'local_attn':
+        h = L.apply_norm(p['norm1'], x, cfg.norm_eps)
+        y, cache = attn.gqa_decode_ring(p[kind], cfg, h, cache, cache_len,
+                                        window=cfg.window)
+    elif kind == 'mla':
+        h = L.apply_norm(p['norm1'], x, cfg.norm_eps)
+        y, cl, ckr = attn.mla_decode(p[kind], cfg, h, cache['latent'],
+                                     cache['krope'], cache_len)
+        cache = {'latent': cl, 'krope': ckr}
+    elif kind == 'ssd':
+        h = L.apply_norm(p['norm1'], x, cfg.norm_eps)
+        y, cache = ssd.ssd_decode(p[kind], cfg, h, cache)
+    elif kind == 'rglru':
+        h = L.apply_norm(p['norm1'], x, cfg.norm_eps)
+        y, cache = griffin.rglru_decode(p[kind], cfg, h, cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    fk = ffn_kind(cfg)
+    if fk is not None:
+        h2 = L.apply_norm(p['norm2'], x, cfg.norm_eps)
+        if fk == 'mlp':
+            y2 = L.apply_mlp(p['mlp'], h2, act=cfg.act)
+        else:
+            y2, _ = _moe_ffn(p['moe'], cfg, h2, rules=rules, mesh=mesh)
+        x = x + y2
+    x = _constrain(x, rules, ('batch', 'seq', None))
+    return x, cache
+
+
+def decode_step(params, cfg, caches, tokens, cache_len, *, rules=None,
+                mesh=None):
+    """One-token decode. tokens: (B, 1) int32; cache_len: () int32 —
+    number of tokens already in the cache. Returns (logits, caches)."""
+    x = L.embed_lookup(params['embed'], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = _constrain(x, rules, ('batch', 'seq', None))
+
+    n_periods = split_layers(cfg)[0]
+
+    def period_body(carry, inp):
+        # caches ride in the CARRY with per-period dynamic slice/update:
+        # while-loop carries alias in place, so one cache buffer lives in
+        # HBM — scanning caches as xs/ys double-buffers the full KV
+        # (measured: decode temp ~= 2x cache bytes)
+        x, blocks = carry
+        pp, i = inp
+        new_cc = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            key = f'{j}_{kind}'
+            cc = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                       keepdims=False),
+                blocks[key])
+            x, new_cc[key] = _decode_block(pp[key], cfg, kind, x, cc,
+                                           cache_len, rules=rules, mesh=mesh)
+        blocks = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), i, 0), blocks, new_cc)
+        return (x, blocks), None
+
+    (x, new_blocks), _ = jax.lax.scan(
+        period_body, (x, caches['blocks']),
+        (params['blocks'], jnp.arange(n_periods)))
+    out: Dict[str, Any] = {'blocks': new_blocks}
+    n_tail = split_layers(cfg)[1]
+    if n_tail:
+        out['tail'] = {}
+        for j in range(n_tail):
+            kind = cfg.block_pattern[j]
+            x, out['tail'][str(j)] = _decode_block(
+                params['tail'][str(j)], cfg, kind, x,
+                caches['tail'][str(j)], cache_len, rules=rules, mesh=mesh)
+    x = L.apply_norm(params['final_norm'], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, out

@@ -1,0 +1,232 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked scan + O(1) decode.
+
+The SSD recurrence per head (state N x P):
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t^T          a_t = exp(dt_t * A)
+    y_t = C_t . h_t + D * x_t
+computed with the chunk decomposition of the Mamba2 paper: within a
+chunk the quadratic (attention-like) form with decay mask; across chunks
+a sequential lax.scan carries the (H, N, P) state. This gives O(S * Lc)
+memory, a tiny HLO (one loop), and an exact match to the sequential
+recurrence (tested against the naive oracle in tests/test_models.py).
+
+``fftconv`` at the bottom is the optional paper-tie-in mixer: for a
+*constant* per-head decay the SSD kernel is a convolution, and the long
+convolution is executed with the repo's own four-step FFT — the paper's
+technique inside an LM block (examples/fftconv_lm.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import PSpec
+
+
+def ssd_dims(cfg) -> Tuple[int, int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = di // P
+    N = cfg.ssm_state
+    return di, H, P, N
+
+
+def ssd_plan(cfg) -> Dict:
+    d = cfg.d_model
+    di, H, P, N = ssd_dims(cfg)
+    G = cfg.ssm_groups
+    w = cfg.conv_width
+    return {
+        'wz': L.linear_plan(d, di, ('embed', 'heads')),
+        'wx': L.linear_plan(d, di, ('embed', 'heads')),
+        'wb': L.linear_plan(d, G * N, ('embed', None)),
+        'wc': L.linear_plan(d, G * N, ('embed', None)),
+        'wdt': L.linear_plan(d, H, ('embed', None)),
+        'conv_x': PSpec((w, di), (None, 'heads')),
+        'conv_b': PSpec((w, G * N), (None, None)),
+        'conv_c': PSpec((w, G * N), (None, None)),
+        'a_log': PSpec((H,), (None,), 'ssm_a'),
+        'dt_bias': PSpec((H,), (None,), 'ssm_dt'),
+        'dskip': PSpec((H,), (None,), 'ones'),
+        'norm': L.norm_plan(di),
+        'wo': L.linear_plan(di, d, ('heads', 'embed')),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along axis 1. x: (B, S, C); w: (W, C).
+    ``state``: (B, W-1, C) prefix (decode); returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(W))
+    return jax.nn.silu(y), xp[:, -(W - 1):, :]
+
+
+def _ssd_chunk_scan(xh, b, c, dt, a_log, chunk: int):
+    """Chunked SSD. xh: (B,S,H,P); b,c: (B,S,G,N); dt: (B,S,H) fp32.
+    Returns (y (B,S,H,P) fp32, final state (B,H,N,P) fp32)."""
+    B, S0, H, P = xh.shape
+    G, N = b.shape[2], b.shape[3]
+    Lc = min(chunk, S0)
+    pad = (-S0) % Lc
+    if pad:        # identity padding: dt=0 => a=1, zero state contribution
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nc = S // Lc
+    hg = H // G                       # heads per B/C group
+
+    A = -jnp.exp(a_log.astype(jnp.float32))              # (H,)
+    xf = xh.astype(jnp.float32).reshape(B, nc, Lc, H, P)
+    # expand groups to per-head (head h belongs to group h // hg)
+    bh = jnp.repeat(b.astype(jnp.float32), hg, axis=2).reshape(B, nc, Lc, H, N)
+    ch = jnp.repeat(c.astype(jnp.float32), hg, axis=2).reshape(B, nc, Lc, H, N)
+    dtf = dt.reshape(B, nc, Lc, H)
+    la = dtf * A                                          # log a_t, <= 0
+    cum = jnp.cumsum(la, axis=2)                          # (B,nc,Lc,H)
+
+    # intra-chunk: M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s <= t
+    gsc = jnp.einsum('bnthi,bnshi->bnhts', ch, bh)        # (B,nc,H,Lc,Lc)
+    decay = cum.transpose(0, 1, 3, 2)[..., :, None] - \
+        cum.transpose(0, 1, 3, 2)[..., None, :]           # (B,nc,H,Lc,Lc)
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    m = jnp.where(tri, gsc * jnp.exp(jnp.where(tri, decay, 0.0)), 0.0)
+    m = m * dtf.transpose(0, 1, 3, 2)[..., None, :]       # * dt_s
+    y_intra = jnp.einsum('bnhts,bnshp->bnthp', m, xf)
+
+    # per-chunk input to the state: S_loc = sum_s exp(cum_last - cum_s) dt_s B_s x_s
+    w_s = jnp.exp(cum[:, :, -1:, :] - cum) * dtf          # (B,nc,Lc,H)
+    bx = jnp.einsum('bnshi,bnshp,bnsh->bnhip', bh, xf, w_s)
+    a_chunk = jnp.exp(jnp.sum(la, axis=2))                # (B,nc,H)
+
+    def step(h, inp):
+        bx_c, ac = inp                                    # (B,H,N,P), (B,H)
+        h_new = h * ac[..., None, None] + bx_c
+        return h_new, h                                   # emit state *entering* chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_final, h_in = jax.lax.scan(step, h0, (bx.swapaxes(0, 1),
+                                            a_chunk.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                            # (B,nc,H,N,P)
+
+    # inter-chunk: y_inter[t] = exp(cum_t) * C_t . h_in
+    y_inter = jnp.einsum('bnthi,bnhip->bnthp', ch, h_in)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y[:, :S0], h_final
+
+
+def ssd_apply(p: Dict, cfg, x, *, return_cache: bool = False):
+    """Full-sequence SSD block. x: (B, S, d_model). With
+    ``return_cache`` also returns the decode cache (final SSM state +
+    rolling conv prefixes)."""
+    B, S, _ = x.shape
+    di, H, P, N = ssd_dims(cfg)
+    G = cfg.ssm_groups
+    z = L.apply_linear(p['wz'], x)
+    xi = L.apply_linear(p['wx'], x)
+    bi = L.apply_linear(p['wb'], x)
+    ci = L.apply_linear(p['wc'], x)
+    dt = L.apply_linear(p['wdt'], x).astype(jnp.float32)
+    xi, sx = _causal_conv(xi, p['conv_x'])
+    bi, sb = _causal_conv(bi, p['conv_b'])
+    ci, sc = _causal_conv(ci, p['conv_c'])
+    dt = jax.nn.softplus(dt + p['dt_bias'].astype(jnp.float32))
+    xh = xi.reshape(B, S, H, P)
+    y, state = _ssd_chunk_scan(xh, bi.reshape(B, S, G, N),
+                               ci.reshape(B, S, G, N), dt,
+                               p['a_log'], cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p['dskip'].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = L.apply_norm(p['norm'], y * jax.nn.silu(z))
+    out = L.apply_linear(p['wo'], y)
+    if return_cache:
+        return out, {'state': state, 'conv_x': sx, 'conv_b': sb, 'conv_c': sc}
+    return out
+
+
+def ssd_decode(p: Dict, cfg, x, cache: Dict):
+    """One-token decode. x: (B, 1, d); cache: {'state' (B,H,N,P) fp32,
+    'conv_x'/'conv_b'/'conv_c' (B, W-1, C) rolling prefixes}."""
+    state = cache['state']
+    conv_x, conv_b, conv_c = cache['conv_x'], cache['conv_b'], cache['conv_c']
+    B = x.shape[0]
+    di, H, P, N = ssd_dims(cfg)
+    G = cfg.ssm_groups
+    z = L.apply_linear(p['wz'], x)
+    xi = L.apply_linear(p['wx'], x)
+    bi = L.apply_linear(p['wb'], x)
+    ci = L.apply_linear(p['wc'], x)
+    dt = L.apply_linear(p['wdt'], x).astype(jnp.float32)
+    xi, conv_x = _causal_conv(xi, p['conv_x'], conv_x)
+    bi, conv_b = _causal_conv(bi, p['conv_b'], conv_b)
+    ci, conv_c = _causal_conv(ci, p['conv_c'], conv_c)
+    dt = jax.nn.softplus(dt + p['dt_bias'].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(p['a_log'].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                   # (B,H)
+    xh = xi.reshape(B, H, P).astype(jnp.float32)
+    bf = bi.reshape(B, G, N).astype(jnp.float32)
+    cf = ci.reshape(B, G, N).astype(jnp.float32)
+    hg = H // G
+    bfh = jnp.repeat(bf, hg, axis=1)                      # (B,H,N)
+    cfh = jnp.repeat(cf, hg, axis=1)
+    state = state * a[..., None, None] + \
+        (dt[..., None, None] * bfh[..., None] * xh[:, :, None, :])
+    y = jnp.einsum('bhi,bhip->bhp', cfh, state)
+    y = y + xh * p['dskip'].astype(jnp.float32)[:, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = L.apply_norm(p['norm'], y * jax.nn.silu(z))
+    return L.apply_linear(p['wo'], y), {'state': state, 'conv_x': conv_x,
+                                        'conv_b': conv_b, 'conv_c': conv_c}
+
+
+# ---------------------------------------------------------------------------
+# FFT long-convolution mixer (paper tie-in; examples/fftconv_lm.py)
+# ---------------------------------------------------------------------------
+
+def fftconv_plan(cfg) -> Dict:
+    d = cfg.d_model
+    return {
+        'wi': L.linear_plan(d, d, ('embed', 'heads')),
+        'kernel': PSpec((cfg.fftconv_len, d), (None, 'heads'), 'emb'),
+        'decay': PSpec((d,), (None,), 'zeros'),   # softplus(0): taps at
+        # lag 2-4 start alive; 'ones' kills them below grad noise
+        'wo': L.linear_plan(d, d, ('heads', 'embed')),
+    }
+
+
+def fftconv_apply(p: Dict, cfg, x):
+    """y = causal_conv(x, k) via FFT: pad to 2S, planar four-step FFT from
+    the core library, pointwise product, inverse. The long-conv form of a
+    constant-decay SSM — the wsFFT engine as an LM mixer.
+
+    No multiplicative gate: a pointwise content gate corrupts the
+    relative-offset copy path that IS the conv mixer's strength
+    (measured: gated version cannot learn period-k copying; ungated
+    reaches ~0.3 nats on it)."""
+    from repro.core import fft1d as f1
+    B, S, d = x.shape
+    h = L.apply_linear(p['wi'], x)
+    klen = min(cfg.fftconv_len, S)
+    decay = jnp.exp(-jax.nn.softplus(p['decay'].astype(jnp.float32))
+                    * jnp.arange(klen, dtype=jnp.float32)[:, None])
+    ker = p['kernel'].astype(jnp.float32)[:klen] * decay          # (klen, d)
+    n = 2 * S                         # linear (non-circular) convolution
+    hf = h.astype(jnp.float32).swapaxes(1, 2)                     # (B, d, S)
+    kf = ker.T                                                    # (d, klen)
+    hr = jnp.pad(hf, ((0, 0), (0, 0), (0, n - S)))
+    kr = jnp.pad(kf, ((0, 0), (0, n - klen)))
+    hre, him = f1.fft1d(hr, jnp.zeros_like(hr), method='four_step')
+    kre, kim = f1.fft1d(kr, jnp.zeros_like(kr), method='four_step')
+    yre = hre * kre - him * kim
+    yim = hre * kim + him * kre
+    yr, _ = f1.fft1d(yre, yim, inverse=True, method='four_step')
+    y = yr[..., :S].swapaxes(1, 2).astype(x.dtype)
+    return L.apply_linear(p['wo'], y)

@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (Rules, make_rules, spec_for, constrain,
+                                     named_sharding, tree_specs)

@@ -1,0 +1,127 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP / SP over the
+production meshes.
+
+Every parameter and activation in the framework is annotated with a
+tuple of *logical* axis names ('embed', 'heads', 'expert', ...). A
+``Rules`` table maps each logical name to a mesh axis (or None =
+replicate). ``spec_for`` applies the table with a divisibility guard: a
+logical axis whose size does not divide the mesh extent is replicated
+instead of producing an invalid sharding (e.g. kv_heads=1 on a 16-way
+'model' axis — MQA replicates KV, queries stay sharded).
+
+The same table drives both pjit in/out shardings (parameters, optimizer
+state, batches) and in-graph ``with_sharding_constraint`` hints on
+activations — one source of truth for the whole distribution story.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis -> mesh axes mapping, bound to a mesh."""
+    table: Dict[str, MeshAxes]
+    mesh: Mesh
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+    def axis_size(self, mesh_axes: MeshAxes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, tuple):
+            out = 1
+            for a in mesh_axes:
+                out *= self.mesh.shape[a]
+            return out
+        return self.mesh.shape[mesh_axes]
+
+
+def make_rules(mesh: Mesh, *, mode: str = 'train',
+               fsdp: bool = True) -> Rules:
+    """Build the rule table for a mesh.
+
+    train: batch over ('pod','data'); params FSDP over ('pod','data') on
+    the 'embed' axis + TP over 'model' on heads/mlp/vocab/expert.
+    serve: params TP over 'model' only (weights replicated across 'data'
+    so every data-row serves its own requests); batch over ('pod','data').
+    Sequence parallelism ('seq_sp') maps to 'model' in both modes — used
+    by the Ulysses attention path for the 32k shapes.
+    """
+    has_pod = 'pod' in mesh.shape
+    batch: MeshAxes = ('pod', 'data') if has_pod else 'data'
+    fsdp_axes: MeshAxes = (('pod', 'data') if has_pod else 'data') \
+        if (fsdp and mode == 'train') else None
+    table: Dict[str, MeshAxes] = {
+        'batch': batch,
+        'embed': fsdp_axes,          # FSDP shards d_model of every matrix
+        'heads': 'model',            # TP
+        'kv_heads': 'model',
+        'mlp': 'model',
+        'vocab': 'model',
+        'expert': 'model',           # EP
+        'seq': None,                 # sequence axis of activations
+        'seq_sp': 'model',           # Ulysses sequence parallelism
+        # KV-cache sequence dim: sharded over 'model' when serving so
+        # GQA/MQA caches (kv_heads < TP width) still split 256 ways; a
+        # decode-time dynamic_update_slice into a seq-sharded cache is
+        # collective-free (verified), and single-pass attention turns
+        # the softmax reductions into cheap scalar-sized all-reduces.
+        'kv_seq': 'model' if mode == 'serve' else None,
+        'state': None,               # SSM state dim
+        'kv_lora': None,             # MLA compressed cache dim
+        'pos': None,
+    }
+    return Rules(table=table, mesh=mesh)
+
+
+def spec_for(rules: Rules, shape: Sequence[int],
+             axes: Sequence[Optional[str]]) -> P:
+    """PartitionSpec for an array of ``shape`` with logical ``axes``,
+    dropping any mapping whose mesh extent does not divide the dim."""
+    assert len(shape) == len(axes), (shape, axes)
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        ma = rules.mesh_axes(name)
+        flat = (ma,) if isinstance(ma, str) else (ma or ())
+        if ma is None or dim % rules.axis_size(ma) != 0 or used & set(flat):
+            parts.append(None)
+        else:
+            parts.append(ma)
+            used |= set(flat)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(rules: Rules, shape: Sequence[int],
+                   axes: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec_for(rules, shape, axes))
+
+
+def constrain(x: jax.Array, rules: Rules,
+              axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint via logical axes (no-op outside jit)."""
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(rules, x.shape, axes))
+
+
+def tree_specs(rules: Rules, shapes_tree, axes_tree):
+    """Map twin (shape, axes) pytrees to a NamedSharding pytree.
+    ``shapes_tree`` leaves are ShapeDtypeStruct/arrays; ``axes_tree``
+    leaves are tuples of logical names."""
+    return jax.tree.map(
+        lambda s, a: named_sharding(rules, s.shape, a),
+        shapes_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

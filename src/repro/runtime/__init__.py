@@ -1,0 +1,1 @@
+from repro.runtime.driver import TrainDriver, StragglerMonitor, FailureInjector

@@ -1,0 +1,112 @@
+"""Batched serving: jit'd prefill + decode steps with sharded KV caches.
+
+Cache kinds (built by models/model.cache_plan per layer type):
+  * dense GQA      — (B, S_max, KH, hd) k/v, batch over DP, kv-heads TP
+  * sliding window — (B, W, KH, hd) ring buffer + slot->position map
+  * MLA            — (B, S_max, kv_lora(+rope)) *compressed* latents
+  * SSD / RG-LRU   — O(1) recurrent state + conv prefixes
+The decode step donates the cache (in-place update on device).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.parallel import make_rules, named_sharding, tree_specs
+from repro.train.trainstep import batch_shardings
+
+
+def cache_shardings(cfg, rules, B: int, cap: int):
+    c_abs = M.abstract_cache(cfg, B, cap)
+    c_axes = M.cache_axes(cfg, B, cap)
+    return tree_specs(rules, c_abs, c_axes), c_abs
+
+
+def make_prefill_step(cfg, mesh, batch_sds: Dict, batch_axes: Dict, *,
+                      cache_cap: Optional[int] = None, sp: bool = False,
+                      param_dtype=jnp.bfloat16):
+    """jit'd prefill: (params, batch) -> (last logits, caches)."""
+    rules = make_rules(mesh, mode='serve')
+    p_abs = M.abstract_params(cfg, param_dtype)
+    p_sh = tree_specs(rules, p_abs, M.param_axes(cfg))
+    b_sh = batch_shardings(rules, batch_sds, batch_axes)
+    lead = batch_sds.get('tokens', batch_sds.get('embeds'))
+    B, S = lead.shape[0], lead.shape[1]
+    cap = cache_cap or S
+    c_sh, _ = cache_shardings(cfg, rules, B, cap)
+
+    def prefill(params, batch):
+        return M.prefill(params, cfg, batch, cache_cap=cap, rules=rules,
+                         mesh=mesh, sp=sp)
+
+    jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, c_sh))
+    return jitted, dict(params=p_abs, p_sh=p_sh, b_sh=b_sh, c_sh=c_sh,
+                        rules=rules)
+
+
+def make_decode_step(cfg, mesh, *, batch: int, cache_cap: int,
+                     param_dtype=jnp.bfloat16):
+    """jit'd single-token decode: (params, caches, tokens, cache_len) ->
+    (logits, caches). Caches are donated."""
+    rules = make_rules(mesh, mode='serve')
+    p_abs = M.abstract_params(cfg, param_dtype)
+    p_sh = tree_specs(rules, p_abs, M.param_axes(cfg))
+    c_sh, c_abs = cache_shardings(cfg, rules, batch, cache_cap)
+    t_sh = named_sharding(rules, (batch, 1), ('batch', None))
+
+    def decode(params, caches, tokens, cache_len):
+        return M.decode_step(params, cfg, caches, tokens, cache_len,
+                             rules=rules, mesh=mesh)
+
+    jitted = jax.jit(decode,
+                     in_shardings=(p_sh, c_sh, t_sh, None),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,))
+    return jitted, dict(params=p_abs, caches=c_abs, p_sh=p_sh, c_sh=c_sh,
+                        rules=rules)
+
+
+class ServeEngine:
+    """Minimal batched-request engine: prefill a prompt batch once, then
+    greedy-decode tokens step by step (examples/serve_batched.py)."""
+
+    def __init__(self, cfg, mesh, params, *, batch: int, prompt_len: int,
+                 max_len: int, param_dtype=jnp.bfloat16):
+        self.cfg, self.mesh, self.params = cfg, mesh, params
+        from repro.configs.base import input_specs, ShapeSpec
+        sds = jax.ShapeDtypeStruct
+        if cfg.input_mode == 'embeds':
+            b_sds = {'embeds': sds((batch, prompt_len, cfg.d_model),
+                                   param_dtype)}
+            b_axes = {'embeds': ('batch', 'seq', None)}
+        else:
+            b_sds = {'tokens': sds((batch, prompt_len), jnp.int32)}
+            b_axes = {'tokens': ('batch', 'seq')}
+        if cfg.pos_kind == 'mrope':
+            b_sds['positions'] = sds((3, batch, prompt_len), jnp.int32)
+            b_axes['positions'] = (None, 'batch', 'seq')
+        self.prefill, _ = make_prefill_step(cfg, mesh, b_sds, b_axes,
+                                            cache_cap=max_len,
+                                            param_dtype=param_dtype)
+        self.decode, _ = make_decode_step(cfg, mesh, batch=batch,
+                                          cache_cap=max_len,
+                                          param_dtype=param_dtype)
+        self.prompt_len = prompt_len
+
+    def generate(self, batch: Dict, steps: int):
+        logits, caches = self.prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        pos = self.prompt_len
+        for _ in range(steps - 1):
+            logits, caches = self.decode(self.params, caches, tok,
+                                         jnp.int32(pos))
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out.append(tok)
+            pos += 1
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from repro.train.optim import adamw_init, adamw_update, opt_axes
+from repro.train.schedule import warmup_cosine
+from repro.train.trainstep import make_train_step

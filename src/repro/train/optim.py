@@ -1,0 +1,79 @@
+"""AdamW with mixed precision, from scratch (no optax in this image).
+
+Model parameters live in bf16 (halving parameter/gradient collective
+bytes — the 'gradient compression' default of the distribution story);
+the optimizer state holds the fp32 master copy plus fp32 first/second
+moments. Every optimizer tensor inherits the parameter's sharding axes,
+so FSDP shards optimizer state exactly like the weights (ZeRO-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    # copy=True: with fp32 params astype would alias the same buffer and
+    # break donation (donate(params) + donate(master) = same buffer)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {'step': jnp.zeros((), jnp.int32), 'master': f32(params),
+            'm': zeros(params), 'v': zeros(params)}
+
+
+def abstract_opt(abstract_params) -> Dict[str, Any]:
+    sds = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {'step': jax.ShapeDtypeStruct((), jnp.int32),
+            'master': sds(abstract_params), 'm': sds(abstract_params),
+            'v': sds(abstract_params)}
+
+
+def opt_axes(params_axes) -> Dict[str, Any]:
+    """Optimizer state logical axes = parameter axes, replicated step."""
+    return {'step': (), 'master': params_axes, 'm': params_axes,
+            'v': params_axes}
+
+
+def adamw_update(grads, opt_state, *, lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 grad_clip: Optional[float] = 1.0,
+                 param_dtype=jnp.bfloat16) -> Tuple[Any, Dict[str, Any], Any]:
+    """One AdamW step. grads may be bf16 (they are upcast here).
+    Returns (new params in ``param_dtype``, new opt_state, grad_norm)."""
+    step = opt_state['step'] + 1
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(g32)) + 1e-12)
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+    else:
+        gnorm = jnp.zeros((), jnp.float32)
+
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        return m, v, p
+
+    flat_g, treedef = jax.tree.flatten(g32)
+    flat_m = treedef.flatten_up_to(opt_state['m'])
+    flat_v = treedef.flatten_up_to(opt_state['v'])
+    flat_p = treedef.flatten_up_to(opt_state['master'])
+    new = [upd(g, m, v, p) for g, m, v, p
+           in zip(flat_g, flat_m, flat_v, flat_p)]
+    m = jax.tree.unflatten(treedef, [t[0] for t in new])
+    v = jax.tree.unflatten(treedef, [t[1] for t in new])
+    master = jax.tree.unflatten(treedef, [t[2] for t in new])
+    params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+    return params, {'step': step, 'master': master, 'm': m, 'v': v}, gnorm

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `repro` importable regardless of how pytest is invoked. Note: we do
+# NOT touch XLA_FLAGS here — tests must see the real (single) device;
+# multi-device tests spawn subprocesses that set their own flags.
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(_SRC))

@@ -1,0 +1,100 @@
+"""Deliverable (f): every assigned architecture instantiates at reduced
+scale and runs one forward + one train step on CPU — output shapes and
+no NaNs. The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, make_batch, smoke_config
+from repro.models import model as M
+from repro.train.optim import adamw_init, adamw_update
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.fixture(scope='module')
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize('arch', ALL_ARCHS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = smoke_config(get_config(arch))
+    params = M.init_params(rng, cfg, jnp.float32)
+    B, S = 2, 24
+    batch = make_batch(cfg, batch=B, seq=S, dtype=jnp.float32)
+    logits, aux = M.forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize('arch', ALL_ARCHS)
+def test_train_step_no_nan(arch, rng):
+    cfg = smoke_config(get_config(arch))
+    params = M.init_params(rng, cfg, jnp.float32)
+    opt = adamw_init(params)
+    B, S = 2, 16
+    batch = make_batch(cfg, batch=B, seq=S, dtype=jnp.float32)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt, gnorm = adamw_update(grads, opt, lr=1e-3,
+                                          param_dtype=jnp.float32)
+        return params, opt, loss, gnorm
+
+    params2, opt2, loss, gnorm = step(params, opt, batch)
+    assert bool(jnp.isfinite(loss)), f'{arch}: non-finite loss'
+    assert bool(jnp.isfinite(gnorm)), f'{arch}: non-finite grad norm'
+    # parameters actually moved
+    moved = any(bool(jnp.any(a != b)) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved, f'{arch}: optimizer did not update parameters'
+    # every leaf finite
+    for leaf in jax.tree.leaves(params2):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize('arch', ALL_ARCHS)
+def test_param_plan_consistency(arch):
+    """abstract_params matches init_params shapes/dtypes leaf-for-leaf
+    (the dry-run lowers against the abstract tree)."""
+    cfg = smoke_config(get_config(arch))
+    concrete = M.init_params(jax.random.PRNGKey(1), cfg, jnp.bfloat16)
+    abstract = M.abstract_params(cfg, jnp.bfloat16)
+    jax.tree.map(lambda c, a: (c.shape, c.dtype) == (a.shape, a.dtype)
+                 or pytest.fail(f'{c.shape}/{c.dtype} != {a.shape}/{a.dtype}'),
+                 concrete, abstract)
+    axes = M.param_axes(cfg)
+    jax.tree.map(lambda c, ax: len(c.shape) == len(ax)
+                 or pytest.fail(f'{c.shape} vs axes {ax}'), concrete, axes)
+
+
+def test_full_param_counts_sane():
+    """Full (not smoke) configs: parameter counts in the right ballpark
+    for the advertised model sizes."""
+    expect = {'mamba2-1.3b': (1.0e9, 1.7e9),
+              'recurrentgemma-9b': (7e9, 11e9),
+              'codeqwen1.5-7b': (6e9, 8.5e9),
+              'granite-3-8b': (7e9, 9.5e9),
+              'qwen1.5-32b': (29e9, 36e9),
+              'internlm2-1.8b': (1.5e9, 2.2e9),
+              'hubert-xlarge': (0.8e9, 1.3e9),
+              'qwen2-vl-2b': (1.4e9, 2.4e9),
+              'deepseek-v2-236b': (210e9, 250e9),
+              'dbrx-132b': (120e9, 140e9)}
+    for arch, (lo, hi) in expect.items():
+        n = M.param_count(get_config(arch))
+        assert lo <= n <= hi, f'{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B'
+
+
+def test_moe_active_params():
+    cfg = get_config('deepseek-v2-236b')
+    total, active = M.param_count(cfg), M.active_param_count(cfg)
+    assert active < 0.2 * total       # top-6 of 160 + shared + attention
+    cfg = get_config('dbrx-132b')
+    total, active = M.param_count(cfg), M.active_param_count(cfg)
+    assert 0.2 * total < active < 0.45 * total   # top-4 of 16

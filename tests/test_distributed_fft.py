@@ -1,0 +1,22 @@
+"""Distributed wsFFT integration: runs the multi-device worker in a
+subprocess with 16 fake host devices (this process keeps 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.slow
+def test_distributed_fft_16_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_distributed_fft_worker.py")],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-4000:]}\nSTDERR:\n{r.stderr[-4000:]}"
+    assert "ALL DISTRIBUTED FFT TESTS PASSED" in r.stdout
+    assert r.stdout.count("PASS") >= 20

@@ -1,0 +1,164 @@
+"""Local pencil FFT numerics: every method vs numpy.fft (the paper's own
+validation methodology), plus FFT mathematical properties via hypothesis.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fft1d, twiddle as tw
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape):
+    return RNG.standard_normal(shape) + 1j * RNG.standard_normal(shape)
+
+
+def _run(x, method, inverse=False, **kw):
+    re, im = tw.to_planar(x)
+    yr, yi = fft1d.fft1d(re, im, method=method, inverse=inverse, **kw)
+    return tw.from_planar((yr, yi))
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 64, 256, 1024, 4096])
+@pytest.mark.parametrize("method", ["stockham", "four_step", "direct"])
+def test_forward_matches_numpy(n, method):
+    if method == "direct" and n > 1024:
+        pytest.skip("O(n^2) oracle too slow")
+    x = _rand((3, n))
+    got = _run(x, method)
+    want = np.fft.fft(x, axis=-1)
+    np.testing.assert_allclose(got, want, rtol=0, atol=2e-4 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("n", [8, 64, 512])
+@pytest.mark.parametrize("method", ["stockham", "four_step"])
+def test_roundtrip(n, method):
+    x = _rand((2, 5, n))
+    y = _run(x, method)
+    back = _run(y, method, inverse=True)
+    np.testing.assert_allclose(back, x, atol=1e-4)
+
+
+@pytest.mark.parametrize("batch", [(), (1,), (7,), (2, 3)])
+def test_batch_shapes(batch):
+    n = 64
+    x = _rand(batch + (n,))
+    got = _run(x, "auto")
+    np.testing.assert_allclose(got, np.fft.fft(x, axis=-1), atol=2e-3)
+
+
+def test_four_step_factor_choices():
+    n = 256
+    x = _rand((2, n))
+    want = np.fft.fft(x, axis=-1)
+    for f in [(16, 16), (32, 8), (64, 4), (128, 2)]:
+        re, im = tw.to_planar(x)
+        yr, yi = fft1d.fft_four_step(re, im, factors=f)
+        np.testing.assert_allclose(tw.from_planar((yr, yi)), want, atol=2e-3)
+
+
+def test_bf16_compute_dtype():
+    n = 256
+    x = _rand((4, n))
+    got = _run(x, "four_step", compute_dtype=jnp.bfloat16)
+    want = np.fft.fft(x, axis=-1)
+    rel = np.max(np.abs(got - want)) / np.max(np.abs(want))
+    assert rel < 5e-2, rel
+
+
+def test_bad_method():
+    re, im = tw.to_planar(_rand((2, 8)))
+    with pytest.raises(ValueError):
+        fft1d.fft1d(re, im, method="nope")
+
+
+# ---------------------------------------------------------------------------
+# Properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+sizes = st.sampled_from([8, 16, 32, 64, 128])
+methods = st.sampled_from(["stockham", "four_step"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, method=methods, data=st.data())
+def test_linearity(n, method, data):
+    a = data.draw(st.floats(-3, 3, allow_nan=False))
+    x, y = _rand((n,)), _rand((n,))
+    fx, fy = _run(x, method), _run(y, method)
+    fxy = _run(a * x + y, method)
+    np.testing.assert_allclose(fxy, a * fx + fy, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, method=methods)
+def test_parseval(n, method):
+    x = _rand((n,))
+    fx = _run(x, method)
+    np.testing.assert_allclose(np.sum(np.abs(fx) ** 2) / n,
+                               np.sum(np.abs(x) ** 2), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, method=methods, data=st.data())
+def test_shift_theorem(n, method, data):
+    """FFT(roll(x, s))[k] = FFT(x)[k] * exp(-2 pi i s k / n)."""
+    s = data.draw(st.integers(0, 7))
+    x = _rand((n,))
+    lhs = _run(np.roll(x, s), method)
+    k = np.arange(n)
+    rhs = _run(x, method) * np.exp(-2j * np.pi * s * k / n)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=sizes)
+def test_impulse_response(n):
+    """FFT(delta) = ones — catches indexing/permutation bugs exactly."""
+    x = np.zeros(n, dtype=complex)
+    x[0] = 1.0
+    for method in ("stockham", "four_step"):
+        np.testing.assert_allclose(_run(x, method), np.ones(n), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# §Perf variants: in-place axis contraction + block-complex four-step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('shape,axis', [
+    ((64,), 0), ((4, 128), 1), ((8, 64, 4), 1), ((4, 4, 256), 2),
+])
+def test_four_step_axis_matches_numpy(shape, axis):
+    from repro.core import fft1d as f1
+    rng = np.random.default_rng(sum(shape) + axis)
+    x = rng.standard_normal(shape) + 1j * rng.standard_normal(shape)
+    re, im = tw.to_planar(x)
+    yr, yi = f1.fft_four_step_axis(re, im, axis)
+    want = np.fft.fft(x, axis=axis)
+    np.testing.assert_allclose(tw.from_planar((yr, yi)), want,
+                               atol=1e-4 * np.max(np.abs(want)))
+    ir, ii = f1.fft_four_step_axis(yr, yi, axis, inverse=True)
+    np.testing.assert_allclose(tw.from_planar((ir, ii)), x, atol=1e-4)
+
+
+@pytest.mark.parametrize('shape,axis', [
+    ((64,), 0), ((4, 128), 1), ((8, 64, 4), 1),
+])
+def test_four_step_block_matches_numpy(shape, axis):
+    """Block-complex path: one real dot per factor, twiddle folded into
+    the second-factor matrices (EXPERIMENTS.md §Perf cell A iter 2)."""
+    from repro.core import fft1d as f1
+    import jax.numpy as jnp
+    rng = np.random.default_rng(sum(shape) + axis + 7)
+    x = rng.standard_normal(shape) + 1j * rng.standard_normal(shape)
+    re, im = tw.to_planar(x)
+    xb = jnp.stack([re, im])
+    yb = f1.fft_four_step_block(xb, axis + 1)
+    want = np.fft.fft(x, axis=axis)
+    np.testing.assert_allclose(tw.from_planar((yb[0], yb[1])), want,
+                               atol=1e-4 * np.max(np.abs(want)))
+    rb = f1.fft_four_step_block(yb, axis + 1, inverse=True)
+    np.testing.assert_allclose(tw.from_planar((rb[0], rb[1])), x, atol=1e-4)

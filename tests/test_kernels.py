@@ -1,0 +1,121 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs the ref.py oracle,
+executed in interpret mode (kernel body evaluated on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import twiddle as tw
+from repro.kernels import fft_matmul, fft_pencil, ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape):
+    return RNG.standard_normal(shape) + 1j * RNG.standard_normal(shape)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256, 1024])
+@pytest.mark.parametrize("b", [1, 3, 8, 17])
+@pytest.mark.parametrize("kernel", ["pencil", "matmul"])
+def test_kernel_vs_ref(n, b, kernel):
+    x = _rand((b, n))
+    re, im = tw.to_planar(x)
+    wr, wi = ref.fft_pencil_ref(re, im)
+    fn = fft_pencil.fft_pencil if kernel == "pencil" else fft_matmul.fft_matmul
+    yr, yi = fn(re, im, interpret=True)
+    atol = 2e-4 * np.sqrt(n)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(wr), atol=atol)
+    np.testing.assert_allclose(np.asarray(yi), np.asarray(wi), atol=atol)
+
+
+@pytest.mark.parametrize("n", [64, 512])
+@pytest.mark.parametrize("kernel", ["pencil", "matmul"])
+def test_kernel_inverse_roundtrip(n, kernel):
+    x = _rand((5, n))
+    re, im = tw.to_planar(x)
+    fn = fft_pencil.fft_pencil if kernel == "pencil" else fft_matmul.fft_matmul
+    yr, yi = fn(re, im, interpret=True)
+    br, bi = fn(yr, yi, inverse=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(br), np.asarray(re), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(bi), np.asarray(im), atol=1e-4)
+
+
+@pytest.mark.parametrize("block_b", [4, 8, 16])
+def test_kernel_block_sizes(block_b):
+    """BlockSpec tiling must not change results (incl. padded tail)."""
+    n, b = 128, 10
+    x = _rand((b, n))
+    re, im = tw.to_planar(x)
+    wr, wi = ref.fft_pencil_ref(re, im)
+    yr, yi = fft_pencil.fft_pencil(re, im, block_b=block_b, interpret=True)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(wr), atol=2e-3)
+    yr, yi = fft_matmul.fft_matmul(re, im, block_b=block_b, interpret=True)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(wr), atol=2e-3)
+
+
+def test_kernel_3d_batch_shape():
+    n = 64
+    x = _rand((2, 3, n))
+    re, im = tw.to_planar(x)
+    wr, wi = ref.fft_pencil_ref(re, im)
+    yr, yi = fft_pencil.fft_pencil(re, im, interpret=True)
+    assert yr.shape == (2, 3, n)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(wr), atol=2e-3)
+
+
+def test_matmul_kernel_explicit_factors():
+    n = 256
+    x = _rand((4, n))
+    re, im = tw.to_planar(x)
+    wr, wi = ref.fft_pencil_ref(re, im)
+    yr, yi = fft_matmul.fft_matmul(re, im, factors=(64, 4), interpret=True)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(wr), atol=2e-3)
+
+
+def test_ops_dispatch_paths():
+    n = 128
+    x = _rand((4, n))
+    re, im = tw.to_planar(x)
+    wr, _ = ref.fft_pencil_ref(re, im)
+    for use_kernel in (False, True):
+        for method in ("stockham", "four_step", "auto"):
+            yr, _ = ops.pencil_fft(re, im, method=method, use_kernel=use_kernel)
+            np.testing.assert_allclose(np.asarray(yr), np.asarray(wr), atol=2e-3)
+
+
+def test_non_pow2_rejected():
+    re, im = tw.to_planar(_rand((2, 24)))
+    with pytest.raises(ValueError):
+        fft_pencil.fft_pencil(re, im, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Block-complex kernel (EXPERIMENTS.md §Perf cell A winner)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('n', [64, 256, 1024])
+@pytest.mark.parametrize('batch', [(1,), (3,), (2, 5)])
+@pytest.mark.parametrize('inverse', [False, True])
+def test_fft_block_kernel_vs_oracle(n, batch, inverse):
+    from repro.core import fft1d as f1
+    from repro.kernels.fft_block import fft_block
+    rng = np.random.default_rng(n + sum(batch))
+    x = rng.standard_normal((2,) + batch + (n,)).astype(np.float32)
+    xj = jnp.asarray(x)
+    got = fft_block(xj, inverse=inverse, interpret=True)
+    want = f1.fft_four_step_block(xj, xj.ndim - 1, inverse=inverse)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_fft_block_kernel_vs_numpy():
+    from repro.kernels.fft_block import fft_block
+    rng = np.random.default_rng(0)
+    n = 512
+    z = rng.standard_normal((4, n)) + 1j * rng.standard_normal((4, n))
+    x = jnp.stack([jnp.asarray(z.real, jnp.float32),
+                   jnp.asarray(z.imag, jnp.float32)])
+    y = fft_block(x, interpret=True)
+    got = np.asarray(y[0]) + 1j * np.asarray(y[1])
+    want = np.fft.fft(z, axis=-1)
+    np.testing.assert_allclose(got, want, atol=1e-3)

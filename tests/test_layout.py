@@ -1,0 +1,97 @@
+"""Layout algebra of the pencil decomposition: schedules, swap planning,
+and invariants (property-based). These run with a single device — pure
+symbolic checks of the redistribution engine's bookkeeping."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributed as dist
+from repro.core import plan as planlib
+
+
+def test_forward_schedule_3d_matches_paper():
+    """Paper §4.2: z-FFT, row transpose (x<->z), x-FFT, column transpose
+    (x<->y), y-FFT."""
+    steps, final = dist.forward_schedule(('x', 'y', None))
+    assert steps == (('fft', 2), ('swap', 'x', 2), ('fft', 0),
+                     ('swap', 'y', 0), ('fft', 1))
+    assert final == ('y', None, 'x')
+
+
+def test_forward_schedule_2d():
+    steps, final = dist.forward_schedule((('x', 'y'), None))
+    assert steps == (('fft', 1), ('swap', ('x', 'y'), 1), ('fft', 0))
+    assert final == (None, ('x', 'y'))
+
+
+def test_inverse_schedule_mirrors_forward():
+    ins, final = dist.inverse_schedule(('x', 'y', None))
+    assert final == ('x', 'y', None)
+    # reverse superstep order: y, swap, x, swap, z
+    assert [s[0] for s in ins] == ['fft', 'swap', 'fft', 'swap', 'fft']
+    assert ins[0] == ('fft', 1)
+    assert ins[-1] == ('fft', 2)
+
+
+def test_swap_algebra():
+    lay = ('x', 'y', None)
+    lay2 = planlib.swap(lay, 'x', 2)
+    assert lay2 == (None, 'y', 'x')
+    lay3 = planlib.swap(lay2, 'y', 0)
+    assert lay3 == ('y', None, 'x')
+    with pytest.raises(ValueError):
+        planlib.swap(lay, 'x', 0)  # pos 0 is not a memory axis
+
+
+def test_plan_swaps_roundtrip():
+    src = ('x', 'y', None)
+    dst = ('y', None, 'x')
+    path = planlib.plan_swaps(src, dst)
+    lay = src
+    for ax, mp in path:
+        lay = planlib.swap(lay, ax, mp)
+    assert lay == dst
+    assert planlib.plan_swaps(src, src) == ()
+
+
+def test_plan_local_shape_and_validate():
+    import jax
+    mesh = jax.make_mesh((1, 1), ('x', 'y'))
+    p = planlib.make_fft3d_plan(8, mesh)
+    p.validate()
+    assert p.local_shape() == (8, 8, 8)
+
+
+# property: any forward schedule transforms every axis exactly once and
+# the inverse schedule ends at the original layout.
+layouts = st.permutations(['x', 'y', None]).map(tuple)
+
+
+@settings(max_examples=30, deadline=None)
+@given(lay=layouts)
+def test_schedules_cover_all_axes(lay):
+    steps, final = dist.forward_schedule(lay)
+    ffts = [s[1] for s in steps if s[0] == 'fft']
+    assert sorted(ffts) == [0, 1, 2]
+    ins, back = dist.inverse_schedule(lay)
+    assert back == lay
+    assert sorted(s[1] for s in ins if s[0] == 'fft') == [0, 1, 2]
+
+
+@settings(max_examples=30, deadline=None)
+@given(lay=layouts, data=st.data())
+def test_plan_swaps_reaches_any_reachable_layout(lay, data):
+    """BFS planner: applying random swaps yields a layout the planner can
+    reach back from."""
+    cur = lay
+    for _ in range(data.draw(st.integers(0, 3))):
+        mems = planlib.memory_axes(cur)
+        axes = [o for o in cur if o is not None]
+        if not mems or not axes:
+            return
+        ax = data.draw(st.sampled_from(axes))
+        mp = data.draw(st.sampled_from(list(mems)))
+        cur = planlib.swap(cur, ax, mp)
+    path = planlib.plan_swaps(cur, lay)
+    for ax, mp in path:
+        cur = planlib.swap(cur, ax, mp)
+    assert cur == lay

@@ -1,0 +1,257 @@
+"""Model-layer oracles: every fused/chunked implementation against its
+naive reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import griffin, layers, moe, ssd
+from repro.configs import get_config, smoke_config
+
+
+# ---------------------------------------------------------------------------
+# flash attention vs naive
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal, window=0, q_offset=0):
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum('bqhd,bkhd->bhqk', q, kk) * (D ** -0.5)
+    qpos = q_offset + np.arange(Sq)
+    kpos = np.arange(k.shape[1])
+    m = np.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(jnp.asarray(m)[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum('bhqk,bkhd->bqhd', p, vv)
+
+
+@pytest.mark.parametrize('skv,h,kh,window,causal', [
+    (64, 4, 4, 0, True), (64, 4, 2, 0, True), (128, 8, 1, 0, True),
+    (96, 4, 2, 24, True), (64, 4, 4, 0, False), (128, 4, 2, 16, True),
+])
+def test_flash_vs_naive(skv, h, kh, window, causal):
+    key = jax.random.PRNGKey(skv * h + kh)
+    B, D = 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, skv, h, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, skv, kh, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, skv, kh, D), jnp.float32)
+    got = A.flash_attention(q, k, v, causal=causal, window=window, chunk=32)
+    want = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_vs_naive():
+    """Sq=1 with kv_len masking (ragged decode)."""
+    key = jax.random.PRNGKey(7)
+    B, S, H, KH, D = 2, 64, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, D), jnp.float32)
+    L = 40
+    got = A.flash_attention(q, k, v, causal=True, q_offset=L - 1,
+                            kv_len=jnp.int32(L), chunk=S)
+    want = naive_attention(q, k[:, :L], v[:, :L], causal=True, q_offset=L - 1)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan vs sequential recurrence
+# ---------------------------------------------------------------------------
+
+def naive_ssd(xh, b, c, dt, a_log):
+    """h_t = a_t h + dt_t B_t x_t^T ; y_t = C_t.h_t  (G=1)."""
+    B, S, H, P = xh.shape
+    N = b.shape[-1]
+    Ac = -np.exp(np.asarray(a_log, np.float64))
+    x = np.asarray(xh, np.float64)
+    bb = np.asarray(b, np.float64)[:, :, 0]
+    cc = np.asarray(c, np.float64)[:, :, 0]
+    dtf = np.asarray(dt, np.float64)
+    y = np.zeros((B, S, H, P))
+    h = np.zeros((B, H, N, P))
+    for t in range(S):
+        a = np.exp(dtf[:, t] * Ac)                        # (B,H)
+        h = h * a[..., None, None] + \
+            dtf[:, t][..., None, None] * bb[:, t][:, None, :, None] \
+            * x[:, t][:, :, None, :]
+        y[:, t] = np.einsum('bi,bhip->bhp', cc[:, t], h)
+    return y, h
+
+
+@pytest.mark.parametrize('s,chunk', [(32, 8), (40, 16), (16, 16)])
+def test_ssd_chunked_vs_sequential(s, chunk):
+    key = jax.random.PRNGKey(3)
+    B, H, P, N = 2, 4, 8, 16
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, s, H, P), jnp.float32)
+    b = jax.random.normal(ks[1], (B, s, 1, N), jnp.float32) * 0.5
+    c = jax.random.normal(ks[2], (B, s, 1, N), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, s, H), jnp.float32))
+    a_log = jax.random.uniform(ks[4], (H,), jnp.float32, 0.0, 1.5)
+    y, h = ssd._ssd_chunk_scan(xh, b, c, dt, a_log, chunk)
+    y_ref, h_ref = naive_ssd(xh, b, c, dt, a_log)
+    np.testing.assert_allclose(y, y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h, h_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_decode_matches_prefill():
+    """Sequential ssd_decode steps == chunked full-sequence states."""
+    cfg = smoke_config(get_config('mamba2-1.3b'))
+    p = layers.init_from_plan(jax.random.PRNGKey(0), ssd.ssd_plan(cfg),
+                              jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    full, cache = ssd.ssd_apply(p, cfg, x, return_cache=True)
+    di, H, P, N = ssd.ssd_dims(cfg)
+    dec_cache = {'state': jnp.zeros((B, H, N, P), jnp.float32),
+                 'conv_x': jnp.zeros((B, cfg.conv_width - 1, di), jnp.float32),
+                 'conv_b': jnp.zeros((B, cfg.conv_width - 1, N), jnp.float32),
+                 'conv_c': jnp.zeros((B, cfg.conv_width - 1, N), jnp.float32)}
+    outs = []
+    for t in range(S):
+        o, dec_cache = ssd.ssd_decode(p, cfg, x[:, t:t + 1], dec_cache)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(dec_cache['state'], cache['state'],
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU chunked scan vs sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('s,chunk', [(24, 8), (30, 16)])
+def test_lru_scan_chunked(s, chunk):
+    key = jax.random.PRNGKey(5)
+    B, W = 2, 8
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, s, W)))
+    b = jax.random.normal(jax.random.PRNGKey(6), (B, s, W))
+    h0 = jax.random.normal(jax.random.PRNGKey(7), (B, W))
+    hs, hf = griffin._lru_scan_chunked(a, b, h0, chunk)
+    h = np.asarray(h0, np.float64)
+    for t in range(s):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        np.testing.assert_allclose(hs[:, t], h, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(hf, h, atol=1e-4, rtol=1e-4)
+
+
+def test_rglru_decode_matches_prefill():
+    cfg = smoke_config(get_config('recurrentgemma-9b'))
+    p = layers.init_from_plan(jax.random.PRNGKey(0), griffin.rglru_plan(cfg),
+                              jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    full, cache = griffin.rglru_apply(p, cfg, x, return_cache=True)
+    dec = {'h': jnp.zeros((B, cfg.lru_width), jnp.float32),
+           'conv': jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width),
+                             jnp.float32)}
+    outs = []
+    for t in range(S):
+        o, dec = griffin.rglru_decode(p, cfg, x[:, t:t + 1], dec)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(dec['h'], cache['h'], atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+def test_moe_no_drop_equals_dense():
+    """With capacity >= all assignments, scatter-dispatch MoE equals the
+    dense gate-weighted mixture."""
+    cfg = dataclasses.replace(smoke_config(get_config('dbrx-132b')),
+                              capacity_factor=8.0, num_shared_experts=0)
+    p = layers.init_from_plan(jax.random.PRNGKey(0), moe.moe_plan(cfg),
+                              jnp.float32)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe.moe_apply(p, cfg, x)
+    gates, idx, probs = moe.route(p['router'], x, cfg)
+    dense = jnp.zeros_like(x)
+    for e in range(cfg.num_experts):
+        wi, wo = p['wi'][e], p['wo'][e]
+        h = x @ wi
+        g, u = jnp.split(h, 2, axis=-1)
+        out_e = (jax.nn.silu(g) * u) @ wo
+        w_e = jnp.sum(jnp.where(idx == e, gates, 0.0), axis=-1)
+        dense += out_e * w_e[..., None]
+    np.testing.assert_allclose(y, dense, atol=1e-4, rtol=1e-4)
+    assert float(aux) > 0.5          # load-balance loss is O(1)
+
+
+def test_moe_capacity_drops_bounded():
+    """With cf=1.0 some tokens drop, but outputs stay finite and within
+    the span of expert outputs (no garbage from the drop slot)."""
+    cfg = dataclasses.replace(smoke_config(get_config('deepseek-v2-236b')),
+                              capacity_factor=1.0)
+    p = layers.init_from_plan(jax.random.PRNGKey(0), moe.moe_plan(cfg),
+                              jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe.moe_apply(p, cfg, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_dispatch_indices_invariants():
+    """Capacity accounting: per expert, kept slots are unique and
+    in-order; dropped entries all map to the overflow slot."""
+    idx = jnp.asarray(np.random.default_rng(0).integers(0, 4, (32, 2)),
+                      jnp.int32)
+    E, C = 4, 8
+    order, dest, keep = moe._dispatch_indices(idx, E, C)
+    dest = np.asarray(dest)
+    keep = np.asarray(keep)
+    assert dest[keep].size == len(set(dest[keep].tolist()))   # unique slots
+    assert np.all(dest[~keep] == E * C)
+    counts = np.bincount(np.asarray(idx).reshape(-1), minlength=E)
+    kept_per_e = np.bincount(dest[keep] // C, minlength=E)
+    np.testing.assert_array_equal(kept_per_e, np.minimum(counts, C))
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 2, 16), jnp.float32)
+    pos = jnp.arange(8)[None]
+    y = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot_at(m, n):
+        qm = layers.apply_rope(q, jnp.asarray([[m]]))
+        kn = layers.apply_rope(k, jnp.asarray([[n]]))
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_mrope_equals_rope_when_streams_equal():
+    """If t/h/w position streams coincide, M-RoPE == standard RoPE."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 2, 16), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 6))
+    got = layers.apply_mrope(x, pos3, sections=(2, 3, 3))
+    want = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(got, want, atol=1e-5)

@@ -1,0 +1,78 @@
+"""Serving invariants: prefill + decode must reproduce the full
+forward pass (the correctness contract of every cache kind)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, make_batch, smoke_config
+from repro.models import model as M
+
+CAUSAL_TOKEN_ARCHS = [a for a in sorted(ARCHS)
+                      if ARCHS[a].causal and ARCHS[a].input_mode == 'tokens']
+
+
+def _no_drop(cfg):
+    if cfg.moe:
+        return dataclasses.replace(cfg, capacity_factor=8.0)
+    return cfg
+
+
+@pytest.mark.parametrize('arch', CAUSAL_TOKEN_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = _no_drop(smoke_config(get_config(arch)))
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    S, extra, cap = 24, 4, 32
+    batch = make_batch(cfg, batch=2, seq=S + extra, dtype=jnp.float32)
+    full_b = {k: v for k, v in batch.items() if k != 'labels'}
+    logits_full, _ = M.forward(params, cfg, full_b)
+    pre_b = {k: (v[:, :S] if k != 'positions' else v[..., :S])
+             for k, v in full_b.items()}
+    logits_pre, caches = M.prefill(params, cfg, pre_b, cache_cap=cap)
+    np.testing.assert_allclose(logits_pre[:, 0], logits_full[:, S - 1],
+                               atol=2e-3, rtol=2e-3)
+    for t in range(extra):                       # decode the continuation
+        tok = full_b['tokens'][:, S + t:S + t + 1]
+        logits_dec, caches = M.decode_step(params, cfg, caches, tok,
+                                           jnp.int32(S + t))
+        np.testing.assert_allclose(
+            logits_dec[:, 0], logits_full[:, S + t], atol=3e-3, rtol=3e-3)
+
+
+def test_ring_cache_beyond_window():
+    """Sliding-window ring buffer: decode far past the window length and
+    compare against the full forward with the same window mask."""
+    cfg = _no_drop(smoke_config(get_config('recurrentgemma-9b')))
+    assert cfg.window == 16
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    S_total = 48                                  # 3x the window
+    batch = make_batch(cfg, batch=2, seq=S_total, dtype=jnp.float32)
+    full_b = {'tokens': batch['tokens']}
+    logits_full, _ = M.forward(params, cfg, full_b)
+    S0 = 8                                        # prefill shorter than W
+    _, caches = M.prefill(params, cfg, {'tokens': batch['tokens'][:, :S0]},
+                          cache_cap=S_total)
+    for t in range(S0, S_total):
+        tok = batch['tokens'][:, t:t + 1]
+        logits_dec, caches = M.decode_step(params, cfg, caches, tok,
+                                           jnp.int32(t))
+        np.testing.assert_allclose(logits_dec[:, 0], logits_full[:, t],
+                                   atol=3e-3, rtol=3e-3,
+                                   err_msg=f'position {t}')
+
+
+def test_mla_cache_is_compressed():
+    """The MLA decode cache stores kv_lora + rope dims per token — not
+    2 * heads * head_dim (the memory claim of the architecture)."""
+    cfg = smoke_config(get_config('deepseek-v2-236b'))
+    plan = M.cache_plan(cfg, B=2, cap=32)
+    import jax.tree_util as jtu
+    from repro.models.layers import is_pspec
+    leaves = jax.tree.leaves(plan, is_leaf=is_pspec)
+    per_token = sum(np.prod(p.shape) / (2 * 32) for p in leaves
+                    if len(p.shape) == 3 and p.shape[1] == 32)
+    full_kv = cfg.num_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+    assert per_token <= (cfg.kv_lora_rank + cfg.rope_head_dim) + 1
+    assert per_token < full_kv / 8

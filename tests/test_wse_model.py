@@ -1,0 +1,120 @@
+"""Faithful-reproduction checks: our implementation of the paper's
+performance model (Eqs. 1-12) against the paper's own published claims."""
+import math
+
+import pytest
+
+from repro.core import wse_model as wm
+
+
+def test_headline_959us():
+    """§9: 959 microseconds for the 512^3 FP32 FFT."""
+    assert abs(wm.runtime_us(wm.TABLE1_CYCLES[512]['fp32']) - wm.PAPER_512_FP32_US) < 1.0
+
+
+def test_headline_tflops():
+    """§5.3: 18.9 TF/s FP32 and 32.7 TF/s FP16 at n=512."""
+    assert abs(wm.tflops(512, wm.TABLE1_CYCLES[512]['fp32'])
+               - wm.PAPER_512_TFLOPS['fp32']) < 0.1
+    assert abs(wm.tflops(512, wm.TABLE1_CYCLES[512]['fp16'])
+               - wm.PAPER_512_TFLOPS['fp16']) < 0.1
+
+
+def test_table2_dgx_claim():
+    """§5.4: wsFFT 18% faster than the fastest DGX 512^3 FP32 result."""
+    ours = wm.tflops(512, wm.TABLE1_CYCLES[512]['fp32'])
+    assert abs((ours / 16.0 - 1) - 0.18) < 0.01
+
+
+def test_model_tracks_table1():
+    """Closed-form model within 30% of every measured cycle count, always
+    a lower bound (it omits dispatch/queue overheads)."""
+    for row in wm.table1_report():
+        assert -0.30 < row['rel_err'] < 0.0, row
+
+
+def test_eq5_fp32_at_most_2x_fp16():
+    """Eq. 5: TT_comm_FP32(n) <= 2 * TT_comm_FP16(n)."""
+    for lg in range(5, 11):
+        n = 1 << lg
+        assert wm.tt_comm_single(n, 'fp32') <= 2 * wm.tt_comm_single(n, 'fp16')
+
+
+def test_eq7_multipencil_bound():
+    """Eq. 7: TT_comm(n, m) <= m * TT_comm(n, 1)."""
+    for n in (64, 256, 1024):
+        for m in (2, 4, 8):
+            for prec in ('fp16', 'fp32'):
+                assert wm.tt_comm(n, m, prec) <= m * wm.tt_comm(n, 1, prec) + 1e-9
+
+
+def test_pencil_throughput_endpoints():
+    """Fig 3 endpoints: 0.89 flops/cycle FP16 @4096, 0.57 FP32 @2048
+    (model within 10% of the measured values)."""
+    n, v = wm.PAPER_PENCIL_FLOPS_PER_CYCLE['fp16']
+    assert abs(wm.pencil_flops_per_cycle(n, 'fp16') - v) / v < 0.10
+    n, v = wm.PAPER_PENCIL_FLOPS_PER_CYCLE['fp32']
+    assert abs(wm.pencil_flops_per_cycle(n, 'fp32') - v) / v < 0.10
+
+
+def test_pencil_asymptotes():
+    """§5.1: asymptotes 5/3 (FP16) and 5/6.5 (FP32) flops/cycle —
+    the paper computes these from the n*log2(n) term ONLY."""
+    assert abs(wm.pencil_asymptote('fp16')
+               - wm.PAPER_PENCIL_ASYMPTOTE['fp16']) < 0.02
+    assert abs(wm.pencil_asymptote('fp32')
+               - wm.PAPER_PENCIL_ASYMPTOTE['fp32']) < 0.02
+    # and the finite-n model monotonically approaches it from below
+    prev = 0.0
+    for lg in range(6, 23, 4):
+        cur = wm.pencil_flops_per_cycle(1 << lg, 'fp16')
+        assert prev < cur < wm.pencil_asymptote('fp16')
+        prev = cur
+
+
+def test_strong_scaling_speedups():
+    """§5.3: 2.85x speedup scaling 256^3 FP32 from 64x64 to 128x128, and
+    2.54x on the next step (reconstruction within 5%)."""
+    s1 = wm.et_total_strong(256, 4, 'fp32') / wm.et_total_strong(256, 2, 'fp32')
+    s2 = wm.et_total_strong(256, 2, 'fp32') / wm.TABLE1_CYCLES[256]['fp32']
+    assert abs(s1 - 2.85) / 2.85 < 0.05, s1
+    assert abs(s2 - 2.54) / 2.54 < 0.05, s2
+
+
+def test_1024_strong_estimates():
+    """Table 2 starred rows: 22.5 TF/s FP32 and 36 TF/s FP16 for 1024^3
+    on a 512x512 submesh (m=2)."""
+    fp16 = wm.tflops(1024, wm.et_total_1024_strong(2, 'fp16'))
+    fp32 = wm.tflops(1024, wm.et_total_1024_strong(2, 'fp32'))
+    assert abs(fp16 - 36.0) / 36.0 < 0.05, fp16
+    assert abs(fp32 - 22.5) / 22.5 < 0.10, fp32
+
+
+def test_bisection_bandwidth():
+    """§6.2: 3.5 TB/s bisection bandwidth for a 512x512 mesh."""
+    assert abs(wm.bisection_bw_tbs(512) - 3.5) < 0.1
+
+
+def test_router_bandwidth():
+    """§5.3: 0.8 PB/s total router bandwidth at n=512 FP32."""
+    assert abs(wm.router_bw_pbs(512, 'fp32') - 0.8) / 0.8 < 0.10
+
+
+def test_comm_dominates_at_scale():
+    """§9: transposes dominate the runtime — up to ~80% at sizes of
+    interest."""
+    _, comm = wm.measured_split(512, 'fp32')
+    share = comm / wm.TABLE1_CYCLES[512]['fp32']
+    assert 0.70 < share < 0.90
+
+
+def test_fp32_comm_ratio_at_512():
+    """§5.3: measured FP32 communication at n=512 is ~1.8x FP16."""
+    _, c32 = wm.measured_split(512, 'fp32')
+    _, c16 = wm.measured_split(512, 'fp16')
+    assert abs(c32 / c16 - 1.8) < 0.15
+
+
+def test_flop_count_definition():
+    assert wm.fft_flops_1d(512) == 5 * 512 * 9
+    assert wm.fft_flops_3d(512) == 3 * 512 ** 2 * 5 * 512 * 9
