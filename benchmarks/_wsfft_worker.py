@@ -12,8 +12,7 @@ os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nx * ny}"
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
-from repro.core import distributed as dist  # noqa: E402
-from repro.core import plan as planlib  # noqa: E402
+import repro.fft as fft  # noqa: E402
 from repro.core import twiddle as tw  # noqa: E402
 from repro.core import wse_model as wm  # noqa: E402
 from benchmarks.common import emit, time_jax  # noqa: E402
@@ -23,15 +22,13 @@ def main():
     n = int(sys.argv[3])
     method = sys.argv[4] if len(sys.argv) > 4 else "auto"
     mesh = jax.make_mesh((nx, ny), ("x", "y"))
-    plan = planlib.make_fft3d_plan(n, mesh, method=method)
+    p = fft.plan((n, n, n), mesh, method=method)
     rng = np.random.default_rng(0)
     x = rng.standard_normal((n, n, n)) + 1j * rng.standard_normal((n, n, n))
     re, im = tw.to_planar(x)
-    re = jax.device_put(re, plan.sharding())
-    im = jax.device_put(im, plan.sharding())
-    fwd, _, _ = dist.make_fft(plan)
-    f = jax.jit(fwd)
-    us = time_jax(f, re, im)
+    re = jax.device_put(re, p.in_sharding)
+    im = jax.device_put(im, p.in_sharding)
+    us = time_jax(lambda a, b: p.forward((a, b)), re, im)
     gf = wm.fft_flops_3d(n) / (us * 1e-6) / 1e9
     emit(f"wsfft_host/fft3d_n{n}_{method}_{nx}x{ny}", us,
          f"gflops={gf:.2f} (host-CPU emulation of {nx * ny} devices)")

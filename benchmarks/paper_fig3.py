@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fft1d, twiddle as tw, wse_model as wm
+from repro.core import twiddle as tw, wse_model as wm
+from repro.fft import methods as fftm
 from benchmarks.common import emit, time_jax
 
 
@@ -43,7 +44,7 @@ def main() -> None:
         x = rng.standard_normal((batch, n)) + 1j * rng.standard_normal((batch, n))
         re, im = tw.to_planar(x)
         for meth in ('stockham', 'four_step'):
-            f = jax.jit(lambda a, b, m=meth: fft1d.fft1d(a, b, method=m))
+            f = jax.jit(lambda a, b, m=meth: fftm.apply(a, b, method=m))
             us = time_jax(f, re, im)
             gf = batch * wm.fft_flops_1d(n) / (us * 1e-6) / 1e9
             emit(f"fig3/pencil_{meth}_n{n}", us, f"gflops={gf:.2f}")

@@ -21,8 +21,7 @@ import time              # noqa: E402
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import distributed as D          # noqa: E402
-from repro.core import plan as planlib           # noqa: E402
+import repro.fft as fft                          # noqa: E402
 from repro.core import wse_model as wm           # noqa: E402
 from repro.launch import hlostats                # noqa: E402
 from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS,  # noqa: E402
@@ -36,33 +35,23 @@ def lower_fft(n: int, *, pods: int = 1, method: str = 'auto',
     """Lower fft3d (+ifft3d: the paper's measured loop) for n^3 on a
     16x16 chip grid (x pods)."""
     mesh = make_fft_mesh(16, 16, pods=pods)
-    plan = planlib.make_fft3d_plan(n, mesh, method=method)
     batched = pods > 1
     with mesh:
-        fwd, lay_in, lay_out = D.make_fft(
-            plan, batch=batched, batch_spec='pod' if batched else None,
-            overlap_chunks=overlap_chunks)
-        inv = None
-        if fwd_and_inv:
-            inv, _, _ = D.make_fft(
-                plan, inverse=True, batch=batched,
-                batch_spec='pod' if batched else None,
-                overlap_chunks=overlap_chunks)
+        p = fft.plan((n, n, n), mesh, method=method,
+                     mesh_axes=('x', 'y'), overlap_chunks=overlap_chunks,
+                     batch_spec='pod' if batched else None)
 
         def loop(re, im):
-            fr, fi = fwd(re, im)
-            if inv is not None:
-                fr, fi = inv(fr, fi)
+            fr, fi = p.forward((re, im))
+            if fwd_and_inv:
+                fr, fi = p.inverse((fr, fi))
             return fr, fi
 
         shape = ((pods, n, n, n) if batched else (n, n, n))
         sds = jax.ShapeDtypeStruct(shape, dtype)
-        spec = plan.sharding(lay_in).spec
-        if batched:
-            from jax.sharding import PartitionSpec as P
-            spec = P('pod', *spec)
-        sh = jax.sharding.NamedSharding(mesh, spec)
-        jitted = jax.jit(loop, in_shardings=(sh, sh), out_shardings=(sh, sh))
+        sh = p.in_sharding
+        osh = sh if fwd_and_inv else p.out_sharding
+        jitted = jax.jit(loop, in_shardings=(sh, sh), out_shardings=(osh, osh))
         lowered = jitted.lower(sds, sds)
     n_chips = 256 * pods
     return lowered, n_chips
@@ -87,7 +76,8 @@ def run(n: int, *, pods: int = 1, method: str = 'auto',
     stats['collective_bytes_raw_total'] = stats['collective_bytes_total']
     stats['collective_bytes'] = wire['collective_bytes']
     stats['collective_bytes_total'] = wire['collective_bytes_total']
-    cost = compiled.cost_analysis()
+    from repro.core.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     roof = roofline_terms(stats, n_chips,
                           cost_flops=float(cost.get('flops', 0.0)),
                           cost_bytes=float(cost.get('bytes accessed', 0.0)))

@@ -1,5 +1,6 @@
 """The paper's technique inside an LM: a long-convolution token mixer
-executed with the repo's own four-step FFT (core/fft1d).
+executed with the repo's own four-step FFT (the ``repro.fft`` method
+registry drives the mixer in models/ssd.py).
 
 A constant-decay SSM is exactly a causal convolution, so the sequence
 mixer is y = causal_conv(x, k) computed as FFT -> pointwise multiply ->

@@ -25,9 +25,7 @@ import jax                       # noqa: E402
 import jax.numpy as jnp          # noqa: E402
 import numpy as np               # noqa: E402
 
-from repro.core import distributed as D         # noqa: E402
-from repro.core import plan as planlib          # noqa: E402
-from repro.core import twiddle as tw            # noqa: E402
+import repro.fft as fft                         # noqa: E402
 from repro.launch.mesh import make_fft_mesh     # noqa: E402
 
 
@@ -42,10 +40,9 @@ def main():
     dt = 0.01
 
     mesh = make_fft_mesh(4, 4)
-    plan = planlib.make_fft3d_plan(n, mesh, method='auto')
-    fwd, _, lay_f = D.make_fft(plan)
-    # inverse consumes the forward's output layout -> exact round trip
-    inv, _, _ = D.make_fft(plan, inverse=True)
+    # one plan object; inverse consumes the forward's output sharding ->
+    # exact round trip with no extra redistribution
+    p = fft.plan((n, n, n), mesh, method='auto')
 
     # integer wavenumbers for the 2*pi-periodic domain; semantic axis
     # order (x, y, z) is unchanged by the FFT — only sharding rotates.
@@ -69,15 +66,15 @@ def main():
     def step_many(ur, ui, m):
         def body(carry, _):
             ur, ui = carry
-            fr, fi = fwd(ur, ui)
+            fr, fi = p.forward((ur, ui))
             fr, fi = fr * gr - fi * gi, fr * gi + fi * gr
-            return inv(fr, fi), None
+            return p.inverse((fr, fi)), None
         (ur, ui), _ = jax.lax.scan(body, (ur, ui), None, length=m)
         return ur, ui
 
     with mesh:
-        ur = jax.device_put(jnp.asarray(u0, jnp.float32), plan.sharding())
-        ui = jax.device_put(jnp.zeros_like(ur), plan.sharding())
+        ur = jax.device_put(jnp.asarray(u0, jnp.float32), p.in_sharding)
+        ui = jax.device_put(jnp.zeros_like(ur), p.in_sharding)
         t0 = time.perf_counter()
         ur, ui = step_many(ur, ui, steps)
         jax.block_until_ready(ur)

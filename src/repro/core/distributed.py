@@ -1,312 +1,42 @@
-"""wsFFT: distributed multidimensional FFT over a device mesh.
+"""DEPRECATED shim — the wsFFT machinery moved to :mod:`repro.fft`.
 
-Faithful to the paper's schedule (§4.2/§4.3): for a 3-D transform the
-input A[x, y, z] lives with (x, y) mapped to the two mesh axes and z in
-memory; each superstep FFTs the in-memory axis (every device transforms
-its m^2 local pencils), and between supersteps one all_to_all along one
-mesh dimension exchanges the in-memory axis with a mesh-resident axis
-(row transpose z<->x, then column transpose x<->y). The semantic (x,y,z)
-axis order of the global array never changes — only the PartitionSpec
-rotates: P('x','y',None) -> P('y',None,'x') after a forward 3-D FFT.
+Every name here now delegates to the ``repro.fft`` package:
 
-Beyond the paper: ``overlap_chunks`` splits the local pencil batch so
-chunk i+1's compute can overlap chunk i's collective (XLA latency-hiding
-scheduler materializes the overlap on TPU); the local pencil algorithm
-can be the MXU matmul form; bf16 compute is available via the plan.
+* ``make_fft`` / ``fft3d`` / ``ifft3d`` / ``fft2d`` / ``ifft2d`` and the
+  schedule algebra live in :mod:`repro.fft.pencil`;
+* ``make_fft1d_large`` lives in :mod:`repro.fft.large1d`;
+* local pencil dispatch is the single registry :mod:`repro.fft.methods`.
+
+New code should use the facade instead::
+
+    import repro.fft as fft
+    p = fft.plan(shape, mesh, method='auto')
+    y = p.forward(x)          # complex or planar, any supported rank
+
+This module is kept only so existing imports keep working; it adds no
+behavior of its own and will not grow new features.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Tuple
 
-import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import plan as planlib
-from repro.core import redistribute as rd
-from repro.core.plan import Layout, PencilPlan
-from repro.kernels import ops as kops
+# Re-exported for backward compatibility — the implementations moved.
+from repro.fft.pencil import (  # noqa: F401
+    forward_schedule,
+    inverse_schedule,
+    _fft_along,
+    _execute,
+    make_fft,
+    fft3d,
+    ifft3d,
+    fft2d,
+    ifft2d,
+)
+from repro.fft.large1d import (  # noqa: F401
+    _flat_axis_index,
+    make_fft1d_large,
+)
 
 Planar = Tuple[jnp.ndarray, jnp.ndarray]
-
-
-# ---------------------------------------------------------------------------
-# Schedule derivation (pure layout algebra — no data)
-# ---------------------------------------------------------------------------
-
-def forward_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
-    """Returns (steps, final_layout). Each step is ('fft', mem_pos) or
-    ('swap', mesh_axis, mem_pos)."""
-    steps: List[Tuple] = []
-    lay = layout
-    transformed = set()
-    ndim = len(layout)
-    while len(transformed) < ndim:
-        mems = [p for p in planlib.memory_axes(lay) if p not in transformed]
-        if not mems:
-            raise ValueError(f"no untransformed memory axis in {lay}")
-        mem = mems[0]
-        steps.append(('fft', mem))
-        transformed.add(mem)
-        # swap with the first untransformed mesh-owned axis, position order
-        pend = [(p, o) for p, o in enumerate(lay) if o is not None and p not in transformed]
-        if pend:
-            _, owner = pend[0]
-            steps.append(('swap', owner, mem))
-            lay = planlib.swap(lay, owner, mem)
-    return tuple(steps), lay
-
-
-def inverse_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
-    """Mirror of forward_schedule starting from the forward's *final*
-    layout: reverses each swap (split/concat positions exchanged) and
-    IFFTs in reverse superstep order, ending at the original layout."""
-    fwd, final = forward_schedule(layout)
-    pre_layouts = []
-    lay = layout
-    for step in fwd:
-        pre_layouts.append(lay)
-        if step[0] == 'swap':
-            lay = planlib.swap(lay, step[1], step[2])
-    assert lay == final
-    steps: List[Tuple] = []
-    for step, pre in zip(reversed(fwd), reversed(pre_layouts)):
-        if step[0] == 'fft':
-            steps.append(step)
-        else:
-            _, mesh_axis, _ = step
-            # the position that was sharded before the forward swap is the
-            # memory position of the inverse swap
-            steps.append(('swap', mesh_axis, planlib.owner_pos(pre, mesh_axis)))
-    return tuple(steps), layout
-
-
-# ---------------------------------------------------------------------------
-# Local execution of a schedule (inside shard_map)
-# ---------------------------------------------------------------------------
-
-def _fft_along(re, im, axis: int, *, inverse: bool, plan: PencilPlan) -> Planar:
-    n = re.shape[axis]
-    if plan.method in ('four_step', 'auto') and n >= 64 and not plan.use_kernel:
-        # §Perf iteration 1: in-place axis contraction — no moveaxis HBM
-        # passes around the pencil compute (EXPERIMENTS.md §Perf wsFFT)
-        from repro.core import fft1d as f1
-        return f1.fft_four_step_axis(re, im, axis, inverse=inverse,
-                                     compute_dtype=plan.compute_dtype)
-    re = jnp.moveaxis(re, axis, -1)
-    im = jnp.moveaxis(im, axis, -1)
-    if plan.method == 'four_step' or (plan.method == 'auto' and re.shape[-1] >= 64):
-        re, im = kops.pencil_fft(re, im, inverse=inverse, method='four_step',
-                                 use_kernel=plan.use_kernel)
-    else:
-        method = plan.method if plan.method != 'auto' else 'stockham'
-        re, im = kops.pencil_fft(re, im, inverse=inverse, method=method,
-                                 use_kernel=plan.use_kernel)
-    return jnp.moveaxis(re, -1, axis), jnp.moveaxis(im, -1, axis)
-
-
-def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
-             batch_ndim: int, overlap_chunks: int) -> Planar:
-    """Run fft/swap steps, threading the layout. When overlap_chunks > 1
-    each (fft, swap) pair is pipelined over chunks of the leading local
-    pencil-batch axis so compute of chunk i+1 overlaps the all_to_all of
-    chunk i (beyond-paper)."""
-    off = batch_ndim
-    lay = layout
-    i = 0
-    while i < len(steps):
-        step = steps[i]
-        nxt = steps[i + 1] if i + 1 < len(steps) else None
-        if (overlap_chunks > 1 and step[0] == 'fft' and nxt is not None
-                and nxt[0] == 'swap'):
-            mem = step[1]
-            _, mesh_axis, mem_pos = nxt
-            sp = planlib.owner_pos(lay, mesh_axis)
-            # chunk axis: a local axis that is neither the fft axis nor the
-            # swap axes; fall back to no overlap if none exists.
-            cand = [p for p in range(len(lay))
-                    if p not in (mem, mem_pos, sp)
-                    and plan.local_shape(lay)[p] % overlap_chunks == 0]
-            if cand:
-                ck = off + cand[0]
-                res_r, res_i = [], []
-                for cr, ci in zip(jnp.split(re, overlap_chunks, axis=ck),
-                                  jnp.split(im, overlap_chunks, axis=ck)):
-                    cr, ci = _fft_along(cr, ci, off + mem, inverse=inverse, plan=plan)
-                    cr = rd.swap_axes(cr, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
-                    ci = rd.swap_axes(ci, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
-                    res_r.append(cr)
-                    res_i.append(ci)
-                re = jnp.concatenate(res_r, axis=ck)
-                im = jnp.concatenate(res_i, axis=ck)
-                lay = planlib.swap(lay, mesh_axis, mem_pos)
-                i += 2
-                continue
-        if step[0] == 'fft':
-            re, im = _fft_along(re, im, off + step[1], inverse=inverse, plan=plan)
-        else:
-            _, mesh_axis, mem_pos = step
-            sp = planlib.owner_pos(lay, mesh_axis)
-            re = rd.swap_axes(re, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
-            im = rd.swap_axes(im, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
-            lay = planlib.swap(lay, mesh_axis, mem_pos)
-        i += 1
-    return re, im
-
-
-# ---------------------------------------------------------------------------
-# Public factories
-# ---------------------------------------------------------------------------
-
-def make_fft(plan: PencilPlan, *, inverse: bool = False,
-             restore_layout: bool = False, batch: bool = False,
-             batch_spec=None,
-             overlap_chunks: int = 1) -> Tuple[Callable, Layout, Layout]:
-    """Build a jit-able distributed FFT.
-
-    Returns (fn, in_layout, out_layout); fn maps planar global arrays
-    (re, im) -> (re, im). For ``inverse=True`` the function *consumes*
-    the forward's output layout and returns the original input layout —
-    ifft(fft(x)) is an exact round trip with no extra redistribution, the
-    paper's forward+inverse loop (§5: "ran forward and inverse Fourier
-    transforms consecutively").
-    """
-    plan.validate()
-    if inverse:
-        steps, _ = inverse_schedule(plan.layout)
-        in_layout, out_layout = forward_schedule(plan.layout)[1], plan.layout
-    else:
-        steps, out_layout = forward_schedule(plan.layout)
-        in_layout = plan.layout
-        if restore_layout:
-            steps = steps + tuple(('swap', ax, mp) for ax, mp
-                                  in planlib.plan_swaps(out_layout, plan.layout))
-            out_layout = plan.layout
-
-    batch_ndim = 1 if (batch or batch_spec is not None) else 0
-    in_spec = P(*(((batch_spec,) if batch_ndim else ()) + tuple(in_layout)))
-    out_spec = P(*(((batch_spec,) if batch_ndim else ()) + tuple(out_layout)))
-
-    def local(re, im):
-        if plan.method == 'block':
-            # §Perf iteration 2: block-complex state (leading axis 2) —
-            # each superstep is two dots, the transposes move one array
-            from repro.core import fft1d as f1
-            x = jnp.stack([re, im])
-            off = batch_ndim + 1
-            lay = in_layout
-            for step in steps:
-                if step[0] == 'fft':
-                    x = f1.fft_four_step_block(
-                        x, off + step[1], inverse=inverse,
-                        compute_dtype=plan.compute_dtype)
-                else:
-                    _, mesh_axis, mem_pos = step
-                    sp = planlib.owner_pos(lay, mesh_axis)
-                    narrow = x.dtype == jnp.bfloat16
-                    if narrow:
-                        # pin the narrow dtype ON the wire: without the
-                        # barriers XLA hoists the consumer's f32 upcast
-                        # across the all_to_all, doubling transpose
-                        # bytes (measured; CPU-backend dots upcast bf16)
-                        x = jax.lax.optimization_barrier(x)
-                    x = rd.swap_axes(x, mesh_axis, shard_pos=off + sp,
-                                     mem_pos=off + mem_pos)
-                    if narrow:
-                        x = jax.lax.optimization_barrier(x)
-                    lay = planlib.swap(lay, mesh_axis, mem_pos)
-            return x[0], x[1]
-        return _execute(re, im, in_layout, steps, inverse=inverse, plan=plan,
-                        batch_ndim=batch_ndim, overlap_chunks=overlap_chunks)
-
-    fn = jax.shard_map(local, mesh=plan.mesh,
-                       in_specs=(in_spec, in_spec),
-                       out_specs=(out_spec, out_spec),
-                       check_vma=False)
-    return fn, in_layout, out_layout
-
-
-def fft3d(re, im, plan: PencilPlan, **kw) -> Planar:
-    fn, _, _ = make_fft(plan, inverse=False, **kw)
-    return fn(re, im)
-
-
-def ifft3d(re, im, plan: PencilPlan, **kw) -> Planar:
-    fn, _, _ = make_fft(plan, inverse=True, **kw)
-    return fn(re, im)
-
-
-fft2d = fft3d          # same machinery; the plan carries the rank
-ifft2d = ifft3d
-
-
-# ---------------------------------------------------------------------------
-# Large 1-D FFT: distributed four-step over the mesh
-# ---------------------------------------------------------------------------
-
-def _flat_axis_index(ax):
-    """Row-major flattened index over a tuple of mesh axis names (matches
-    the group order all_to_all uses for tuple axis names)."""
-    if isinstance(ax, str):
-        return lax.axis_index(ax)
-    idx = lax.axis_index(ax[0])
-    for a in ax[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
-    return idx
-
-def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
-                     inverse: bool = False, natural_order: bool = False,
-                     method: str = 'auto', use_kernel: bool = False):
-    """1-D FFT of length n = n1*n2 as a distributed four-step.
-
-    Input x viewed as row-major A[k1, k2] (k = k1*n2 + k2), rows sharded
-    over the flattened mesh. Output D[j1, j2] with y[j1 + n1*j2] =
-    D[j1, j2] (factor-transposed order), or the natural-order (n2, n1)
-    matrix when ``natural_order``.
-    """
-    import numpy as np
-    from repro.core import twiddle as tw
-    n = n1 * n2
-    ax = mesh_axes if isinstance(mesh_axes, tuple) else (mesh_axes,)
-    psize = 1
-    for a in ax:
-        psize *= plan_mesh.shape[a]
-    if n1 % psize or n2 % psize:
-        raise ValueError(f"{psize} devices must divide both factors ({n1},{n2})")
-
-    def local(ar, ai):
-        # in: (n1/p, n2) rows-sharded. swap -> (n1, n2/p)
-        ar = rd.swap_axes(ar, ax, shard_pos=0, mem_pos=1)
-        ai = rd.swap_axes(ai, ax, shard_pos=0, mem_pos=1)
-        # columns DFT over k1 (local axis 0)
-        ar, ai = jnp.moveaxis(ar, 0, -1), jnp.moveaxis(ai, 0, -1)
-        ar, ai = kops.pencil_fft(ar, ai, inverse=inverse, method=method,
-                                 use_kernel=use_kernel)
-        ar, ai = jnp.moveaxis(ar, -1, 0), jnp.moveaxis(ai, -1, 0)
-        # twiddle W[j1, k2_global] on the local k2 chunk
-        idx = _flat_axis_index(ax)
-        m2 = n2 // psize
-        k2 = idx * m2 + jnp.arange(m2)
-        j1 = jnp.arange(n1)
-        ang = (-2.0 * np.pi / n) * (j1[:, None] * k2[None, :])
-        wr, wi = jnp.cos(ang), jnp.sin(ang)
-        if inverse:
-            wi = -wi
-        ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
-        # swap back -> (n1/p, n2); rows DFT over k2 (local axis 1)
-        ar = rd.swap_axes(ar, ax, shard_pos=1, mem_pos=0)
-        ai = rd.swap_axes(ai, ax, shard_pos=1, mem_pos=0)
-        ar, ai = kops.pencil_fft(ar, ai, inverse=inverse, method=method,
-                                 use_kernel=use_kernel)
-        if natural_order:
-            # content transpose D -> D.T: exchange ownership then local T
-            ar = rd.swap_axes(ar, ax, shard_pos=0, mem_pos=1)
-            ai = rd.swap_axes(ai, ax, shard_pos=0, mem_pos=1)
-            ar, ai = ar.swapaxes(0, 1), ai.swapaxes(0, 1)   # (n2/p?, ...)
-        return ar, ai
-
-    spec = P(ax, None)
-    return jax.shard_map(local, mesh=plan_mesh, in_specs=(spec, spec),
-                         out_specs=(spec, spec), check_vma=False)

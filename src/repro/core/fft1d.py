@@ -278,24 +278,24 @@ def dft_direct(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False) -> Pl
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Dispatch — deprecated shim over the single registry (repro.fft.methods)
 # ---------------------------------------------------------------------------
-
-METHODS = ('stockham', 'four_step', 'direct', 'auto')
-
 
 def fft1d(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
           method: str = 'auto', compute_dtype=None) -> Planar:
-    """Local pencil FFT dispatch. ``auto`` uses the MXU four-step for
-    n >= 64 (matmul shape large enough to feed the systolic array) and
-    Stockham below."""
-    n = re.shape[-1]
-    if method == 'auto':
-        method = 'four_step' if n >= 64 else ('stockham' if tw.is_pow2(n) else 'direct')
-    if method == 'stockham':
-        return fft_stockham(re, im, inverse=inverse, compute_dtype=compute_dtype)
-    if method == 'four_step':
-        return fft_four_step(re, im, inverse=inverse, compute_dtype=compute_dtype)
-    if method == 'direct':
-        return dft_direct(re, im, inverse=inverse)
-    raise ValueError(f"unknown method {method!r}")
+    """DEPRECATED: delegate to :func:`repro.fft.methods.apply`, the one
+    method registry. ``auto`` resolution (MXU four-step for n >= 64,
+    Stockham below, direct for non-pow2) lives there."""
+    from repro.fft import methods
+    return methods.apply(re, im, inverse=inverse, method=method,
+                         compute_dtype=compute_dtype)
+
+
+def __getattr__(name):
+    # METHODS is derived from the registry so there is exactly one list
+    # of method names in the codebase (lazy to avoid an import cycle:
+    # repro.fft.methods imports this module's implementations).
+    if name == 'METHODS':
+        from repro.fft import methods
+        return methods.names() + ('auto',)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

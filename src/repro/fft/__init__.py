@@ -1,0 +1,28 @@
+"""``repro.fft`` — the public FFT API of the wsFFT reproduction.
+
+Plan/execute model (FFTW-style)::
+
+    import repro.fft as fft
+
+    p = fft.plan((n, n, n), mesh)        # rank-dispatched: 1-D, 2-D, 3-D
+    y = p.forward(x)                     # complex in -> complex out
+    x2 = p.inverse(y)                    # exact round trip
+
+    re, im = p.forward((re, im))         # planar pairs work identically
+
+Everything else in the repo (``core.distributed``, ``core.fft1d``,
+``kernels.ops``) is either internal machinery or a deprecated shim over
+this package. Local pencil algorithms live in the single registry
+:mod:`repro.fft.methods`.
+"""
+from repro.fft import methods
+from repro.fft.api import FFT, plan
+from repro.fft.methods import apply as apply_method
+
+
+def available_methods():
+    """Concrete method names the registry knows (plus the 'auto' alias)."""
+    return methods.names() + ('auto',)
+
+
+__all__ = ['FFT', 'plan', 'methods', 'apply_method', 'available_methods']

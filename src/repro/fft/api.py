@@ -1,0 +1,305 @@
+"""The public plan/execute facade: ``repro.fft.plan(...)`` -> ``FFT``.
+
+One signature covers every rank the machinery supports:
+
+* rank 1 — the distributed four-step over the flattened mesh
+  (length n factored n1*n2; the (n,) <-> (n1, n2) view and the
+  natural-order output are handled here, so forward/inverse are a
+  plain FFT/IFFT pair on 1-D arrays),
+* rank 2 — rows sharded over the flattened mesh, one transpose,
+* rank 3 — the paper's pencil decomposition on the 2-D mesh.
+
+The returned :class:`FFT` is an FFTW-style plan object: build once,
+execute many times. ``forward``/``inverse`` accept either a complex
+array (``complex64``/``complex128``) or a planar ``(re, im)`` pair and
+return the same form they were given; jitted executables are cached per
+``(direction, batch_shape, dtype, form)`` so repeated calls never
+re-trace.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import twiddle as tw
+from repro.core.plan import Layout, PencilPlan
+from repro.fft import large1d, methods, pencil
+
+Planar = Tuple[jnp.ndarray, jnp.ndarray]
+
+
+def _default_axes(mesh: Mesh, batch_spec) -> Tuple[str, ...]:
+    axes = tuple(a for a in mesh.axis_names if a != batch_spec)
+    if not axes:
+        raise ValueError(f"mesh {mesh.axis_names} has no FFT axes left "
+                         f"after reserving batch_spec={batch_spec!r}")
+    return axes
+
+
+def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
+         compute_dtype=None, use_kernel: bool = False,
+         mesh_axes: Optional[Tuple[str, ...]] = None,
+         layout: Optional[Layout] = None,
+         overlap_chunks: int = 1, restore_layout: bool = False,
+         batch_spec: Optional[str] = None) -> 'FFT':
+    """Plan a distributed FFT of a ``len(shape)``-dimensional array.
+
+    Args:
+      shape: global transform shape — rank 1, 2 or 3.
+      mesh: the jax device mesh the data lives on.
+      method: local pencil algorithm from the method registry
+        ('auto' | 'stockham' | 'four_step' | 'block' | 'direct').
+      compute_dtype: matmul operand dtype for the matmul-form pencils
+        (e.g. ``jnp.bfloat16`` for the paper's half-precision study).
+      use_kernel: dispatch local pencils to the Pallas kernels.
+      mesh_axes: mesh axis names to transform over. Rank 3: the
+        (row, col) pair; ranks 1/2: axes flattened into one group.
+        Defaults to every mesh axis except ``batch_spec``.
+      layout: explicit initial ownership per array axis (ranks 2/3
+        only); overrides ``mesh_axes``.
+      overlap_chunks: pipeline local compute with the transpose
+        collectives (ranks 2/3, beyond-paper).
+      restore_layout: make forward/inverse consume AND produce the input
+        sharding instead of the rotated one (extra transposes).
+      batch_spec: mesh axis name a single leading batch dimension is
+        sharded over (each transform instance stays inside one slice of
+        that axis). Replicated batch dims need no declaration — any
+        leading dims on the operand are batched automatically.
+
+    Returns an :class:`FFT` plan with ``forward``/``inverse``/
+    ``in_sharding``/``out_sharding``.
+    """
+    shape = tuple(int(s) for s in shape)
+    rank = len(shape)
+    if rank not in (1, 2, 3):
+        raise ValueError(f"repro.fft.plan supports ranks 1-3, got shape {shape}")
+    methods.validate(method)
+    if batch_spec is not None and batch_spec not in mesh.axis_names:
+        raise ValueError(f"batch_spec {batch_spec!r} not a mesh axis "
+                         f"of {mesh.axis_names}")
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+
+    if rank == 1:
+        if layout is not None:
+            raise ValueError("layout applies to ranks 2/3 only; rank-1 "
+                             "plans take mesh_axes")
+        if overlap_chunks != 1:
+            raise ValueError("overlap_chunks applies to ranks 2/3 only")
+        axes = mesh_axes if mesh_axes is not None else _default_axes(mesh, batch_spec)
+        n = shape[0]
+        n1, n2 = tw.four_step_factors(n)
+        psize = 1
+        for a in axes:
+            psize *= mesh.shape[a]
+        if n1 % psize or n2 % psize:
+            raise ValueError(
+                f"rank-1 FFT of n={n} factors as {n1}x{n2}; the {psize} "
+                f"devices of mesh axes {axes} must divide both factors")
+        return FFT(shape=shape, mesh=mesh, method=method,
+                   compute_dtype=compute_dtype, use_kernel=use_kernel,
+                   overlap_chunks=overlap_chunks, restore_layout=restore_layout,
+                   batch_spec=batch_spec, axes1d=axes, factors=(n1, n2))
+
+    if layout is None:
+        if rank == 2:
+            axes = mesh_axes if mesh_axes is not None else _default_axes(mesh, batch_spec)
+            layout = (tuple(axes) if len(axes) > 1 else axes[0], None)
+        else:
+            if mesh_axes is not None:
+                if len(mesh_axes) != 2:
+                    raise ValueError(
+                        f"rank-3 mesh_axes must be a (row, col) pair of "
+                        f"mesh axis names, got {mesh_axes!r}")
+                row, col = mesh_axes
+            else:
+                cand = _default_axes(mesh, batch_spec)
+                if 'x' in cand and 'y' in cand:
+                    row, col = 'x', 'y'
+                elif len(cand) >= 2:
+                    row, col = cand[0], cand[1]
+                else:
+                    raise ValueError(
+                        f"rank-3 FFT needs two mesh axes, mesh has {cand}")
+            layout = (row, col, None)
+    pplan = PencilPlan(shape=shape, mesh=mesh, layout=layout, method=method,
+                       use_kernel=use_kernel, compute_dtype=compute_dtype)
+    pplan.validate()
+    return FFT(shape=shape, mesh=mesh, method=method,
+               compute_dtype=compute_dtype, use_kernel=use_kernel,
+               overlap_chunks=overlap_chunks, restore_layout=restore_layout,
+               batch_spec=batch_spec, pplan=pplan)
+
+
+class FFT:
+    """A planned distributed FFT: build once, execute many times.
+
+    ``forward(x)`` / ``inverse(x)`` accept a complex array or a planar
+    ``(re, im)`` pair — with any number of leading (replicated) batch
+    dimensions, or exactly one when the plan has ``batch_spec`` — and
+    return the same form. ``inverse(forward(x))`` is an exact round trip:
+    the inverse consumes the forward's output sharding and restores the
+    input sharding with no extra redistribution.
+    """
+
+    def __init__(self, *, shape, mesh, method, compute_dtype, use_kernel,
+                 overlap_chunks, restore_layout, batch_spec,
+                 pplan: Optional[PencilPlan] = None,
+                 axes1d: Optional[Tuple[str, ...]] = None,
+                 factors: Optional[Tuple[int, int]] = None):
+        self.shape = shape
+        self.rank = len(shape)
+        self.mesh = mesh
+        self.method = method
+        self.compute_dtype = compute_dtype
+        self.use_kernel = use_kernel
+        self.overlap_chunks = overlap_chunks
+        self.restore_layout = restore_layout
+        self.batch_spec = batch_spec
+        self._pplan = pplan
+        self._axes1d = axes1d
+        self._factors = factors
+        self._raw_cache = {}    # (direction, batched) -> planar global fn
+        self._exec_cache = {}   # (direction, batch_shape, dtype, form) -> jitted
+
+    # -- layouts / shardings ------------------------------------------------
+
+    @property
+    def in_layout(self) -> Layout:
+        if self.rank == 1:
+            return (self._axes1d if len(self._axes1d) > 1 else self._axes1d[0],)
+        return self._pplan.layout
+
+    @property
+    def out_layout(self) -> Layout:
+        if self.rank == 1 or self.restore_layout:
+            return self.in_layout
+        return pencil.forward_schedule(self._pplan.layout)[1]
+
+    def _sharding(self, layout: Layout) -> NamedSharding:
+        lead = (self.batch_spec,) if self.batch_spec is not None else ()
+        return NamedSharding(self.mesh, P(*(lead + tuple(layout))))
+
+    @property
+    def in_sharding(self) -> NamedSharding:
+        """Sharding forward() consumes (and inverse() produces) for an
+        operand of exactly the planned shape — plus the one leading
+        batch dim when ``batch_spec`` is set. Replicated leading batch
+        dims are not covered: a NamedSharding binds its spec to the
+        leading axes, so ``device_put`` a batched operand with
+        ``P(*([None] * nbatch), *spec)`` instead."""
+        return self._sharding(self.in_layout)
+
+    @property
+    def out_sharding(self) -> NamedSharding:
+        """Sharding forward() produces (and inverse() consumes); same
+        operand-shape caveat as :attr:`in_sharding`."""
+        return self._sharding(self.out_layout)
+
+    # -- execution ----------------------------------------------------------
+
+    def forward(self, x):
+        """FFT of ``x`` (complex array or planar (re, im) pair)."""
+        return self._apply('fwd', x)
+
+    def inverse(self, x):
+        """IFFT of ``x``; exact round trip with :meth:`forward`."""
+        return self._apply('inv', x)
+
+    def _apply(self, direction, x):
+        planar = isinstance(x, (tuple, list))
+        if planar:
+            re, im = x
+            re = jnp.asarray(re) if isinstance(re, np.ndarray) else re
+            im = jnp.asarray(im) if isinstance(im, np.ndarray) else im
+            if im.shape != re.shape or im.dtype != re.dtype:
+                raise ValueError(
+                    f"planar operand mismatch: re is {re.dtype}{re.shape}, "
+                    f"im is {im.dtype}{im.shape}")
+            shape, dtype = re.shape, re.dtype
+        else:
+            x = jnp.asarray(x) if isinstance(x, np.ndarray) else x
+            shape, dtype = x.shape, x.dtype
+        if (len(shape) < self.rank
+                or tuple(shape[len(shape) - self.rank:]) != self.shape):
+            raise ValueError(
+                f"operand shape {tuple(shape)} does not end with the "
+                f"planned transform shape {self.shape}")
+        batch_shape = tuple(shape[:len(shape) - self.rank])
+        if self.batch_spec is not None and len(batch_shape) != 1:
+            raise ValueError(
+                f"plan with batch_spec={self.batch_spec!r} takes exactly one "
+                f"leading batch dim, got batch shape {batch_shape}")
+        key = (direction, batch_shape, jnp.dtype(dtype).name, planar)
+        fn = self._exec_cache.get(key)
+        if fn is None:
+            fn = self._build(direction, batch_shape, planar)
+            self._exec_cache[key] = fn
+        return fn(re, im) if planar else fn(x)
+
+    def _raw(self, direction, batched):
+        key = (direction, batched)
+        fn = self._raw_cache.get(key)
+        if fn is not None:
+            return fn
+        inverse = direction == 'inv'
+        batch = batched and self.batch_spec is None
+        if self.rank == 1:
+            n1, n2 = self._factors
+            f1, f2 = ((n2, n1) if inverse else (n1, n2))
+            fn = large1d.make_fft1d_large(
+                f1, f2, self.mesh, self._axes1d, inverse=inverse,
+                natural_order=True, method=self.method,
+                use_kernel=self.use_kernel, compute_dtype=self.compute_dtype,
+                batch=batch, batch_spec=self.batch_spec)
+        else:
+            fn, _, _ = pencil.make_fft(
+                self._pplan, inverse=inverse,
+                restore_layout=self.restore_layout, batch=batch,
+                batch_spec=self.batch_spec,
+                overlap_chunks=self.overlap_chunks)
+        self._raw_cache[key] = fn
+        return fn
+
+    def _build(self, direction, batch_shape, planar):
+        raw = self._raw(direction, batched=len(batch_shape) > 0)
+        nb = len(batch_shape)
+        flatb = (int(np.prod(batch_shape)),) if nb else ()
+        if self.rank == 1:
+            n1, n2 = self._factors
+            # the four-step works on the (n1, n2) row-major view; its
+            # natural-order output is the (n2, n1) view of y (and the
+            # inverse consumes exactly that form)
+            in_core = (n2, n1) if direction == 'inv' else (n1, n2)
+        else:
+            in_core = self.shape
+        out_shape = batch_shape + self.shape
+        collapse = nb > 1 or self.rank == 1
+
+        def run_planar(re, im):
+            if collapse:
+                re = re.reshape(flatb + in_core)
+                im = im.reshape(flatb + in_core)
+            yr, yi = raw(re, im)
+            if collapse:
+                yr = yr.reshape(out_shape)
+                yi = yi.reshape(out_shape)
+            return yr, yi
+
+        if planar:
+            return jax.jit(run_planar)
+
+        def run_complex(x):
+            yr, yi = run_planar(x.real, x.imag)
+            return jax.lax.complex(yr, yi)
+
+        return jax.jit(run_complex)
+
+    def __repr__(self):
+        return (f"FFT(shape={self.shape}, rank={self.rank}, "
+                f"method={self.method!r}, mesh={dict(self.mesh.shape)}, "
+                f"batch_spec={self.batch_spec!r})")

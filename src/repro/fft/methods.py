@@ -1,0 +1,226 @@
+"""The single pencil-method registry of the FFT stack.
+
+Every local (per-device) pencil transform in the codebase dispatches
+through here: the facade (`repro.fft.plan`), the distributed pencil
+machinery (`repro.fft.pencil`), the large-1D four-step
+(`repro.fft.large1d`), and the legacy shims (`core.fft1d.fft1d`,
+`kernels.ops.pencil_fft`). There is exactly one method->implementation
+table and one ``'auto'`` resolution rule in the repo — this module.
+
+A method owns up to three callables:
+
+* ``pencil_fn``  — pure-jnp transform along the LAST axis
+                   ``(re, im, *, inverse, compute_dtype) -> (re, im)``
+* ``axis_fn``    — optional pure-jnp transform along an ARBITRARY axis
+                   with no moveaxis HBM passes (the §Perf in-place axis
+                   contraction); same signature plus ``axis``
+* ``kernel_fn``  — optional Pallas kernel form along the last axis
+                   ``(re, im, *, inverse, interpret) -> (re, im)``
+
+``'block'`` (block-complex four-step: complex carried as a leading
+size-2 axis, two real dots per pencil) is a first-class method here —
+previously it was reachable only through ``make_fft``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft1d as _f1
+from repro.core import twiddle as tw
+
+Planar = Tuple[jnp.ndarray, jnp.ndarray]
+
+#: below this pencil length the matmul form cannot feed the MXU; the
+#: ``'auto'`` rule falls back to Stockham butterflies (or the direct
+#: O(n^2) DFT for non-power-of-two sizes).
+AUTO_MATMUL_MIN = 64
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == 'tpu'
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """One registered local pencil algorithm."""
+    name: str
+    pencil_fn: Callable
+    axis_fn: Optional[Callable] = None
+    kernel_fn: Optional[Callable] = None
+    pow2_only: bool = True
+    description: str = ''
+
+
+_REGISTRY: Dict[str, Method] = {}
+
+
+def register(method: Method) -> Method:
+    if method.name in _REGISTRY:
+        raise ValueError(f"method {method.name!r} already registered")
+    _REGISTRY[method.name] = method
+    return method
+
+
+def names() -> Tuple[str, ...]:
+    """Registered concrete method names (excludes the 'auto' alias)."""
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> Method:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown FFT method {name!r}; known: {names() + ('auto',)}"
+        ) from None
+
+
+def validate(name: str) -> str:
+    """Check ``name`` is 'auto' or a registered method; returns it."""
+    if name != 'auto':
+        get(name)
+    return name
+
+
+def resolve(name: str, n: int) -> Method:
+    """Resolve a method name (including 'auto') for pencil length n.
+
+    The single 'auto' rule: MXU matmul four-step once the pencil is long
+    enough to feed the systolic array, Stockham butterflies for smaller
+    powers of two, dense DFT otherwise.
+    """
+    if name == 'auto':
+        if n >= AUTO_MATMUL_MIN and tw.is_pow2(n):
+            return _REGISTRY['four_step']
+        return _REGISTRY['stockham' if tw.is_pow2(n) else 'direct']
+    return get(name)
+
+
+def apply(re: jnp.ndarray, im: jnp.ndarray, *, axis: int = -1,
+          inverse: bool = False, method: str = 'auto',
+          compute_dtype=None, use_kernel: bool = False,
+          interpret: Optional[bool] = None) -> Planar:
+    """Run a registered pencil method along ``axis`` of planar (re, im).
+
+    ``use_kernel`` routes to the method's Pallas kernel when it has one
+    (interpret mode defaults to True off-TPU); otherwise the pure-jnp
+    path runs, preferring the axis-general form (no moveaxis) when the
+    method provides one.
+    """
+    axis = axis % re.ndim
+    n = re.shape[axis]
+    m = resolve(method, n)
+    if m.pow2_only and not tw.is_pow2(n):
+        raise ValueError(
+            f"method {m.name!r} requires a power-of-two pencil length, "
+            f"got {n} (use method='direct' or 'auto')")
+    last = axis == re.ndim - 1
+    if use_kernel and m.kernel_fn is not None:
+        itp = (not on_tpu()) if interpret is None else interpret
+        if not last:
+            re, im = jnp.moveaxis(re, axis, -1), jnp.moveaxis(im, axis, -1)
+        yr, yi = m.kernel_fn(re, im, inverse=inverse, interpret=itp)
+        if not last:
+            yr, yi = jnp.moveaxis(yr, -1, axis), jnp.moveaxis(yi, -1, axis)
+        return yr, yi
+    if m.axis_fn is not None and not last:
+        return m.axis_fn(re, im, axis, inverse=inverse,
+                         compute_dtype=compute_dtype)
+    if not last:
+        re, im = jnp.moveaxis(re, axis, -1), jnp.moveaxis(im, axis, -1)
+    yr, yi = m.pencil_fn(re, im, inverse=inverse, compute_dtype=compute_dtype)
+    if not last:
+        yr, yi = jnp.moveaxis(yr, -1, axis), jnp.moveaxis(yi, -1, axis)
+    return yr, yi
+
+
+def apply_block(x: jnp.ndarray, *, axis: int, inverse: bool = False,
+                compute_dtype=None, use_kernel: bool = False,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Block-complex form of the 'block' method: ``x`` carries a leading
+    size-2 complex axis (x[0]=re, x[1]=im) and is transformed along
+    ``axis`` (counted over x's own dims). This is the representation the
+    distributed block execution path threads through every superstep, so
+    it dispatches here without unstacking."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if not tw.is_pow2(n):
+        raise ValueError(
+            f"method 'block' requires a power-of-two pencil length, got {n}")
+    if use_kernel:
+        from repro.kernels import fft_block as _kb
+        itp = (not on_tpu()) if interpret is None else interpret
+        last = axis == x.ndim - 1
+        if not last:
+            x = jnp.moveaxis(x, axis, -1)
+        y = _kb.fft_block(x, inverse=inverse, interpret=itp)
+        return y if last else jnp.moveaxis(y, -1, axis)
+    return _f1.fft_four_step_block(x, axis, inverse=inverse,
+                                   compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Built-in methods
+# ---------------------------------------------------------------------------
+
+def _stockham_kernel(re, im, *, inverse, interpret):
+    from repro.kernels import fft_pencil as _kp
+    return _kp.fft_pencil(re, im, inverse=inverse, interpret=interpret)
+
+
+def _four_step_kernel(re, im, *, inverse, interpret):
+    from repro.kernels import fft_matmul as _km
+    return _km.fft_matmul(re, im, inverse=inverse, interpret=interpret)
+
+
+def _direct(re, im, *, inverse=False, compute_dtype=None):
+    return _f1.dft_direct(re, im, inverse=inverse)
+
+
+def _block_pencil(re, im, *, inverse=False, compute_dtype=None):
+    y = apply_block(jnp.stack([re, im]), axis=re.ndim, inverse=inverse,
+                    compute_dtype=compute_dtype)
+    return y[0], y[1]
+
+
+def _block_axis(re, im, axis, *, inverse=False, compute_dtype=None):
+    y = apply_block(jnp.stack([re, im]), axis=axis + 1, inverse=inverse,
+                    compute_dtype=compute_dtype)
+    return y[0], y[1]
+
+
+def _block_kernel(re, im, *, inverse, interpret):
+    y = apply_block(jnp.stack([re, im]), axis=re.ndim, inverse=inverse,
+                    use_kernel=True, interpret=interpret)
+    return y[0], y[1]
+
+
+register(Method(
+    name='stockham',
+    pencil_fn=_f1.fft_stockham,
+    kernel_fn=_stockham_kernel,
+    description='radix-2 Stockham autosort butterflies (paper-faithful)'))
+
+register(Method(
+    name='four_step',
+    pencil_fn=_f1.fft_four_step,
+    axis_fn=_f1.fft_four_step_axis,
+    kernel_fn=_four_step_kernel,
+    description='Bailey four-step as dense matmuls (MXU form)'))
+
+register(Method(
+    name='block',
+    pencil_fn=_block_pencil,
+    axis_fn=_block_axis,
+    kernel_fn=_block_kernel,
+    description='block-complex four-step: two real dots, fused twiddle'))
+
+register(Method(
+    name='direct',
+    pencil_fn=_direct,
+    pow2_only=False,
+    description='dense O(n^2) DFT matrix (oracle / non-pow2 sizes)'))

@@ -1,0 +1,239 @@
+"""wsFFT pencil machinery: distributed multidimensional FFT over a mesh.
+
+Faithful to the paper's schedule (§4.2/§4.3): for a 3-D transform the
+input A[x, y, z] lives with (x, y) mapped to the two mesh axes and z in
+memory; each superstep FFTs the in-memory axis (every device transforms
+its m^2 local pencils), and between supersteps one all_to_all along one
+mesh dimension exchanges the in-memory axis with a mesh-resident axis
+(row transpose z<->x, then column transpose x<->y). The semantic (x,y,z)
+axis order of the global array never changes — only the PartitionSpec
+rotates: P('x','y',None) -> P('y',None,'x') after a forward 3-D FFT.
+
+Beyond the paper: ``overlap_chunks`` splits the local pencil batch so
+chunk i+1's compute can overlap chunk i's collective (XLA latency-hiding
+scheduler materializes the overlap on TPU); the local pencil algorithm
+comes from the single method registry (`repro.fft.methods`), including
+the MXU matmul form and the block-complex state.
+
+This module is internal to the ``repro.fft`` package — users should go
+through ``repro.fft.plan``.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import plan as planlib
+from repro.core import redistribute as rd
+from repro.core.compat import shard_map
+from repro.core.plan import Layout, PencilPlan
+from repro.fft import methods
+
+Planar = Tuple[jnp.ndarray, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Schedule derivation (pure layout algebra — no data)
+# ---------------------------------------------------------------------------
+
+def forward_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
+    """Returns (steps, final_layout). Each step is ('fft', mem_pos) or
+    ('swap', mesh_axis, mem_pos)."""
+    steps: List[Tuple] = []
+    lay = layout
+    transformed = set()
+    ndim = len(layout)
+    while len(transformed) < ndim:
+        mems = [p for p in planlib.memory_axes(lay) if p not in transformed]
+        if not mems:
+            raise ValueError(f"no untransformed memory axis in {lay}")
+        mem = mems[0]
+        steps.append(('fft', mem))
+        transformed.add(mem)
+        # swap with the first untransformed mesh-owned axis, position order
+        pend = [(p, o) for p, o in enumerate(lay) if o is not None and p not in transformed]
+        if pend:
+            _, owner = pend[0]
+            steps.append(('swap', owner, mem))
+            lay = planlib.swap(lay, owner, mem)
+    return tuple(steps), lay
+
+
+def inverse_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
+    """Mirror of forward_schedule starting from the forward's *final*
+    layout: reverses each swap (split/concat positions exchanged) and
+    IFFTs in reverse superstep order, ending at the original layout."""
+    fwd, final = forward_schedule(layout)
+    pre_layouts = []
+    lay = layout
+    for step in fwd:
+        pre_layouts.append(lay)
+        if step[0] == 'swap':
+            lay = planlib.swap(lay, step[1], step[2])
+    assert lay == final
+    steps: List[Tuple] = []
+    for step, pre in zip(reversed(fwd), reversed(pre_layouts)):
+        if step[0] == 'fft':
+            steps.append(step)
+        else:
+            _, mesh_axis, _ = step
+            # the position that was sharded before the forward swap is the
+            # memory position of the inverse swap
+            steps.append(('swap', mesh_axis, planlib.owner_pos(pre, mesh_axis)))
+    return tuple(steps), layout
+
+
+# ---------------------------------------------------------------------------
+# Local execution of a schedule (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _fft_along(re, im, axis: int, *, inverse: bool, plan: PencilPlan) -> Planar:
+    return methods.apply(re, im, axis=axis, inverse=inverse,
+                         method=plan.method, compute_dtype=plan.compute_dtype,
+                         use_kernel=plan.use_kernel)
+
+
+def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
+             batch_ndim: int, overlap_chunks: int) -> Planar:
+    """Run fft/swap steps, threading the layout. When overlap_chunks > 1
+    each (fft, swap) pair is pipelined over chunks of the leading local
+    pencil-batch axis so compute of chunk i+1 overlaps the all_to_all of
+    chunk i (beyond-paper)."""
+    off = batch_ndim
+    lay = layout
+    i = 0
+    while i < len(steps):
+        step = steps[i]
+        nxt = steps[i + 1] if i + 1 < len(steps) else None
+        if (overlap_chunks > 1 and step[0] == 'fft' and nxt is not None
+                and nxt[0] == 'swap'):
+            mem = step[1]
+            _, mesh_axis, mem_pos = nxt
+            sp = planlib.owner_pos(lay, mesh_axis)
+            # chunk axis: a local axis that is neither the fft axis nor the
+            # swap axes; fall back to no overlap if none exists.
+            cand = [p for p in range(len(lay))
+                    if p not in (mem, mem_pos, sp)
+                    and plan.local_shape(lay)[p] % overlap_chunks == 0]
+            if cand:
+                ck = off + cand[0]
+                res_r, res_i = [], []
+                for cr, ci in zip(jnp.split(re, overlap_chunks, axis=ck),
+                                  jnp.split(im, overlap_chunks, axis=ck)):
+                    cr, ci = _fft_along(cr, ci, off + mem, inverse=inverse, plan=plan)
+                    cr = rd.swap_axes(cr, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
+                    ci = rd.swap_axes(ci, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
+                    res_r.append(cr)
+                    res_i.append(ci)
+                re = jnp.concatenate(res_r, axis=ck)
+                im = jnp.concatenate(res_i, axis=ck)
+                lay = planlib.swap(lay, mesh_axis, mem_pos)
+                i += 2
+                continue
+        if step[0] == 'fft':
+            re, im = _fft_along(re, im, off + step[1], inverse=inverse, plan=plan)
+        else:
+            _, mesh_axis, mem_pos = step
+            sp = planlib.owner_pos(lay, mesh_axis)
+            re = rd.swap_axes(re, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
+            im = rd.swap_axes(im, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
+            lay = planlib.swap(lay, mesh_axis, mem_pos)
+        i += 1
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+def make_fft(plan: PencilPlan, *, inverse: bool = False,
+             restore_layout: bool = False, batch: bool = False,
+             batch_spec=None,
+             overlap_chunks: int = 1) -> Tuple[Callable, Layout, Layout]:
+    """Build a jit-able distributed FFT.
+
+    Returns (fn, in_layout, out_layout); fn maps planar global arrays
+    (re, im) -> (re, im). For ``inverse=True`` the function *consumes*
+    the forward's output layout and returns the original input layout —
+    ifft(fft(x)) is an exact round trip with no extra redistribution, the
+    paper's forward+inverse loop (§5: "ran forward and inverse Fourier
+    transforms consecutively"). With ``restore_layout`` both directions
+    consume AND produce the plan's initial layout (extra swaps pay for
+    the layout stability).
+    """
+    plan.validate()
+    methods.validate(plan.method)
+    if inverse:
+        steps, _ = inverse_schedule(plan.layout)
+        in_layout, out_layout = forward_schedule(plan.layout)[1], plan.layout
+        if restore_layout:
+            # consume the plan layout: pre-rotate into the forward's final
+            # layout, then run the mirrored schedule back
+            steps = tuple(('swap', ax, mp) for ax, mp
+                          in planlib.plan_swaps(plan.layout, in_layout)) + steps
+            in_layout = plan.layout
+    else:
+        steps, out_layout = forward_schedule(plan.layout)
+        in_layout = plan.layout
+        if restore_layout:
+            steps = steps + tuple(('swap', ax, mp) for ax, mp
+                                  in planlib.plan_swaps(out_layout, plan.layout))
+            out_layout = plan.layout
+
+    batch_ndim = 1 if (batch or batch_spec is not None) else 0
+    in_spec = P(*(((batch_spec,) if batch_ndim else ()) + tuple(in_layout)))
+    out_spec = P(*(((batch_spec,) if batch_ndim else ()) + tuple(out_layout)))
+
+    def local(re, im):
+        if plan.method == 'block':
+            # §Perf iteration 2: block-complex state (leading axis 2) —
+            # each superstep is two dots, the transposes move one array
+            x = jnp.stack([re, im])
+            off = batch_ndim + 1
+            lay = in_layout
+            for step in steps:
+                if step[0] == 'fft':
+                    x = methods.apply_block(
+                        x, axis=off + step[1], inverse=inverse,
+                        compute_dtype=plan.compute_dtype,
+                        use_kernel=plan.use_kernel)
+                else:
+                    _, mesh_axis, mem_pos = step
+                    sp = planlib.owner_pos(lay, mesh_axis)
+                    narrow = x.dtype == jnp.bfloat16
+                    if narrow:
+                        # pin the narrow dtype ON the wire: without the
+                        # barriers XLA hoists the consumer's f32 upcast
+                        # across the all_to_all, doubling transpose
+                        # bytes (measured; CPU-backend dots upcast bf16)
+                        x = jax.lax.optimization_barrier(x)
+                    x = rd.swap_axes(x, mesh_axis, shard_pos=off + sp,
+                                     mem_pos=off + mem_pos)
+                    if narrow:
+                        x = jax.lax.optimization_barrier(x)
+                    lay = planlib.swap(lay, mesh_axis, mem_pos)
+            return x[0], x[1]
+        return _execute(re, im, in_layout, steps, inverse=inverse, plan=plan,
+                        batch_ndim=batch_ndim, overlap_chunks=overlap_chunks)
+
+    fn = shard_map(local, mesh=plan.mesh,
+                   in_specs=(in_spec, in_spec),
+                   out_specs=(out_spec, out_spec))
+    return fn, in_layout, out_layout
+
+
+def fft3d(re, im, plan: PencilPlan, **kw) -> Planar:
+    fn, _, _ = make_fft(plan, inverse=False, **kw)
+    return fn(re, im)
+
+
+def ifft3d(re, im, plan: PencilPlan, **kw) -> Planar:
+    fn, _, _ = make_fft(plan, inverse=True, **kw)
+    return fn(re, im)
+
+
+fft2d = fft3d          # same machinery; the plan carries the rank
+ifft2d = ifft3d

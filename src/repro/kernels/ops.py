@@ -1,4 +1,4 @@
-"""Jit'd dispatch wrappers: Pallas kernel <-> pure-jnp path.
+"""DEPRECATED shim — pencil dispatch moved to :mod:`repro.fft.methods`.
 
 On a real TPU fleet ``interpret=False`` runs the Mosaic-compiled kernels;
 in this CPU container the kernels execute under ``interpret=True``
@@ -6,52 +6,32 @@ in this CPU container the kernels execute under ``interpret=True``
 framework's default compute path (``use_kernel=False``) is the pure-jnp
 implementation, which XLA:CPU fuses natively and which lowers on the TPU
 dry-run meshes without a Mosaic dependency.
+
+Both routes are now decided by the single method registry; this module
+only preserves the old ``pencil_fft`` entry point.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import fft1d as _fft1d
-from repro.core import twiddle as tw
-from repro.kernels import fft_matmul as _km
-from repro.kernels import fft_pencil as _kp
+from repro.fft.methods import on_tpu  # noqa: F401  (re-exported)
 
 Planar = Tuple[jnp.ndarray, jnp.ndarray]
-
-
-def on_tpu() -> bool:
-    return jax.default_backend() == 'tpu'
 
 
 def pencil_fft(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
                method: str = 'auto', use_kernel: bool = False,
                interpret: Optional[bool] = None) -> Planar:
-    """Batched pencil FFT along the last axis.
+    """DEPRECATED: batched pencil FFT along the last axis — delegates to
+    :func:`repro.fft.methods.apply` (the one method registry).
 
     method: 'stockham' (paper-faithful radix-2) | 'four_step' (MXU matmul
-    form) | 'direct' | 'auto'. With ``use_kernel`` the Pallas kernels run
-    (interpret mode defaults to True off-TPU).
+    form) | 'block' (block-complex) | 'direct' | 'auto'. With
+    ``use_kernel`` the Pallas kernels run (interpret mode defaults to
+    True off-TPU).
     """
-    n = re.shape[-1]
-    if method == 'auto':
-        method = 'four_step' if n >= 64 else ('stockham' if tw.is_pow2(n) else 'direct')
-    if use_kernel and method in ('stockham', 'four_step', 'block'):
-        itp = (not on_tpu()) if interpret is None else interpret
-        if method == 'stockham':
-            return _kp.fft_pencil(re, im, inverse=inverse, interpret=itp)
-        if method == 'block':
-            from repro.kernels import fft_block as _kb
-            import jax.numpy as _jnp
-            y = _kb.fft_block(_jnp.stack([re, im]), inverse=inverse,
-                              interpret=itp)
-            return y[0], y[1]
-        return _km.fft_matmul(re, im, inverse=inverse, interpret=itp)
-    if method == 'block':
-        import jax.numpy as _jnp
-        y = _fft1d.fft_four_step_block(_jnp.stack([re, im]),
-                                       re.ndim, inverse=inverse)
-        return y[0], y[1]
-    return _fft1d.fft1d(re, im, inverse=inverse, method=method)
+    from repro.fft import methods
+    return methods.apply(re, im, inverse=inverse, method=method,
+                         use_kernel=use_kernel, interpret=interpret)

@@ -164,8 +164,9 @@ def ulysses_attention(q, k, v, mesh, *, seq_axis: str = 'model',
         o = flash_attention(ql, kl, vl, causal=causal, window=window, chunk=chunk)
         return rd.swap_axes(o, seq_axis, shard_pos=o.ndim - 2, mem_pos=o.ndim - 3)
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
-                       out_specs=spec, check_vma=False)
+    from repro.core.compat import shard_map
+    fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                   out_specs=spec)
     return fn(q, k, v)
 
 

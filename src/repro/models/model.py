@@ -108,7 +108,7 @@ def active_param_count(cfg) -> int:
         return param_count(cfg)
     import numpy as np
     total = 0
-    for path, p in jax.tree.flatten_with_path(
+    for path, p in jax.tree_util.tree_flatten_with_path(
             model_plan(cfg), is_leaf=L.is_pspec)[0]:
         n = int(np.prod(p.shape))
         keys = [getattr(k, 'key', '') for k in path]

@@ -204,14 +204,15 @@ def fftconv_plan(cfg) -> Dict:
 
 def fftconv_apply(p: Dict, cfg, x):
     """y = causal_conv(x, k) via FFT: pad to 2S, planar four-step FFT from
-    the core library, pointwise product, inverse. The long-conv form of a
+    the repro.fft method registry, pointwise product, inverse. The
+    long-conv form of a
     constant-decay SSM — the wsFFT engine as an LM mixer.
 
     No multiplicative gate: a pointwise content gate corrupts the
     relative-offset copy path that IS the conv mixer's strength
     (measured: gated version cannot learn period-k copying; ungated
     reaches ~0.3 nats on it)."""
-    from repro.core import fft1d as f1
+    from repro.fft import methods as fftm
     B, S, d = x.shape
     h = L.apply_linear(p['wi'], x)
     klen = min(cfg.fftconv_len, S)
@@ -223,10 +224,10 @@ def fftconv_apply(p: Dict, cfg, x):
     kf = ker.T                                                    # (d, klen)
     hr = jnp.pad(hf, ((0, 0), (0, 0), (0, n - S)))
     kr = jnp.pad(kf, ((0, 0), (0, n - klen)))
-    hre, him = f1.fft1d(hr, jnp.zeros_like(hr), method='four_step')
-    kre, kim = f1.fft1d(kr, jnp.zeros_like(kr), method='four_step')
+    hre, him = fftm.apply(hr, jnp.zeros_like(hr), method='four_step')
+    kre, kim = fftm.apply(kr, jnp.zeros_like(kr), method='four_step')
     yre = hre * kre - him * kim
     yim = hre * kim + him * kre
-    yr, _ = f1.fft1d(yre, yim, inverse=True, method='four_step')
+    yr, _ = fftm.apply(yre, yim, inverse=True, method='four_step')
     y = yr[..., :S].swapaxes(1, 2).astype(x.dtype)
     return L.apply_linear(p['wo'], y)

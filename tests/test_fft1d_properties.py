@@ -1,0 +1,67 @@
+"""FFT mathematical properties via hypothesis (optional dev dependency;
+the whole module is skipped when hypothesis is not installed — the
+deterministic numerics coverage lives in test_fft1d.py)."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import fft1d, twiddle as tw  # noqa: E402
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape):
+    return RNG.standard_normal(shape) + 1j * RNG.standard_normal(shape)
+
+
+def _run(x, method, inverse=False, **kw):
+    re, im = tw.to_planar(x)
+    yr, yi = fft1d.fft1d(re, im, method=method, inverse=inverse, **kw)
+    return tw.from_planar((yr, yi))
+
+
+sizes = st.sampled_from([8, 16, 32, 64, 128])
+methods = st.sampled_from(["stockham", "four_step"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, method=methods, data=st.data())
+def test_linearity(n, method, data):
+    a = data.draw(st.floats(-3, 3, allow_nan=False))
+    x, y = _rand((n,)), _rand((n,))
+    fx, fy = _run(x, method), _run(y, method)
+    fxy = _run(a * x + y, method)
+    np.testing.assert_allclose(fxy, a * fx + fy, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, method=methods)
+def test_parseval(n, method):
+    x = _rand((n,))
+    fx = _run(x, method)
+    np.testing.assert_allclose(np.sum(np.abs(fx) ** 2) / n,
+                               np.sum(np.abs(x) ** 2), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, method=methods, data=st.data())
+def test_shift_theorem(n, method, data):
+    """FFT(roll(x, s))[k] = FFT(x)[k] * exp(-2 pi i s k / n)."""
+    s = data.draw(st.integers(0, 7))
+    x = _rand((n,))
+    lhs = _run(np.roll(x, s), method)
+    k = np.arange(n)
+    rhs = _run(x, method) * np.exp(-2j * np.pi * s * k / n)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=sizes)
+def test_impulse_response(n):
+    """FFT(delta) = ones — catches indexing/permutation bugs exactly."""
+    x = np.zeros(n, dtype=complex)
+    x[0] = 1.0
+    for method in ("stockham", "four_step"):
+        np.testing.assert_allclose(_run(x, method), np.ones(n), atol=1e-5)

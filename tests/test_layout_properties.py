@@ -1,0 +1,45 @@
+"""Hypothesis invariants of the layout algebra (optional dev dependency;
+skipped when hypothesis is not installed — deterministic layout coverage
+lives in test_layout.py)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import plan as planlib  # noqa: E402
+from repro.fft import pencil as dist  # noqa: E402
+
+# property: any forward schedule transforms every axis exactly once and
+# the inverse schedule ends at the original layout.
+layouts = st.permutations(['x', 'y', None]).map(tuple)
+
+
+@settings(max_examples=30, deadline=None)
+@given(lay=layouts)
+def test_schedules_cover_all_axes(lay):
+    steps, final = dist.forward_schedule(lay)
+    ffts = [s[1] for s in steps if s[0] == 'fft']
+    assert sorted(ffts) == [0, 1, 2]
+    ins, back = dist.inverse_schedule(lay)
+    assert back == lay
+    assert sorted(s[1] for s in ins if s[0] == 'fft') == [0, 1, 2]
+
+
+@settings(max_examples=30, deadline=None)
+@given(lay=layouts, data=st.data())
+def test_plan_swaps_reaches_any_reachable_layout(lay, data):
+    """BFS planner: applying random swaps yields a layout the planner can
+    reach back from."""
+    cur = lay
+    for _ in range(data.draw(st.integers(0, 3))):
+        mems = planlib.memory_axes(cur)
+        axes = [o for o in cur if o is not None]
+        if not mems or not axes:
+            return
+        ax = data.draw(st.sampled_from(axes))
+        mp = data.draw(st.sampled_from(list(mems)))
+        cur = planlib.swap(cur, ax, mp)
+    path = planlib.plan_swaps(cur, lay)
+    for ax, mp in path:
+        cur = planlib.swap(cur, ax, mp)
+    assert cur == lay

@@ -1,10 +1,8 @@
-"""Sharding rules: divisibility guard, axis-collision guard, and
-hypothesis property tests over arbitrary shapes."""
+"""Sharding rules: divisibility guard and axis-collision guard.
+Hypothesis property tests over arbitrary shapes live in
+test_sharding_properties.py (skipped without hypothesis)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import make_rules, spec_for
@@ -66,45 +64,3 @@ def test_serve_mode_kv_seq():
         P('data', 'model')
 
 
-@settings(max_examples=200, deadline=None)
-@given(st.lists(st.tuples(
-    st.integers(min_value=1, max_value=4096),
-    st.sampled_from(['batch', 'embed', 'heads', 'kv_heads', 'mlp',
-                     'vocab', 'expert', 'seq', 'kv_seq', None])),
-    min_size=1, max_size=5))
-def test_spec_always_valid(dims_axes):
-    """Property: for ANY shape/axes combination the produced spec (a) only
-    shards divisible dims, (b) never reuses a mesh axis."""
-    r = rules('serve')
-    shape = tuple(d for d, _ in dims_axes)
-    axes = tuple(a for _, a in dims_axes)
-    spec = spec_for(r, shape, axes)
-    used = []
-    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
-        if part is None:
-            continue
-        parts = part if isinstance(part, tuple) else (part,)
-        for p in parts:
-            assert p not in used, f'axis {p} reused in {spec}'
-            used.append(p)
-        size = 1
-        for p in parts:
-            size *= FakeMesh.shape[p]
-        assert dim % size == 0, f'dim {dim} not divisible by {size}'
-
-
-@settings(max_examples=50, deadline=None)
-@given(st.integers(min_value=1, max_value=8),
-       st.integers(min_value=1, max_value=8),
-       st.integers(min_value=1, max_value=6))
-def test_xent_matches_manual(b, s, v):
-    """Property: softmax_xent equals -log p[label] computed directly."""
-    from repro.models.layers import softmax_xent
-    key = jax.random.PRNGKey(b * 64 + s * 8 + v)
-    logits = jax.random.normal(key, (b, s, v + 1), jnp.float32) * 3
-    labels = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, v + 1)
-    got = float(softmax_xent(logits, labels))
-    p = jax.nn.log_softmax(logits, -1)
-    want = float(-jnp.mean(jnp.take_along_axis(p, labels[..., None],
-                                               -1)))
-    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
