@@ -1,0 +1,83 @@
+"""Microbenchmark of the repro.comm redistribution strategies.
+
+Sweeps mesh shapes x axis groups x message sizes on the fake-device
+mesh (16 host devices), timing one ownership swap per registered
+strategy and printing it next to the wse_model prediction. Emits
+``BENCH_redistribute.json`` at the repo root so the perf trajectory
+starts accumulating data across PRs.
+
+Run:  PYTHONPATH=src python benchmarks/bench_redistribute.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                  # noqa: E402
+import jax.numpy as jnp                     # noqa: E402
+import numpy as np                          # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import comm                      # noqa: E402
+from repro.core.compat import shard_map     # noqa: E402
+from benchmarks.common import time_jax, emit  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_redistribute.json")
+
+MESHES = [((4, 4), ("x", "y")), ((2, 8), ("x", "y"))]
+GROUPS = ["x", "y", ("x", "y")]
+#: local (mem_dim, row) sizes — mem_dim must divide by the group size
+SIZES = [(16, 64), (64, 256), (256, 1024)]
+
+
+def bench_swap(mesh, group, strategy, mem_dim, rows):
+    def f(a):
+        return comm.swap_axes(a, group, shard_pos=0, mem_pos=1,
+                              strategy=strategy)
+
+    fn = jax.jit(shard_map(f, mesh=mesh, in_specs=P(group, None),
+                           out_specs=P(None, group)))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (rows * comm.strategies.static_group_size(group, dict(mesh.shape)),
+         mem_dim)), jnp.float32)
+    return time_jax(fn, x)
+
+
+def main() -> None:
+    print("# bench_redistribute: one ownership swap per strategy")
+    print("mesh,group,strategy,p,local_elems,us,model_cycles")
+    results = []
+    for mesh_dims, names in MESHES:
+        mesh = jax.make_mesh(mesh_dims, names)
+        mesh_shape = dict(mesh.shape)
+        for group in GROUPS:
+            p = comm.strategies.static_group_size(group, mesh_shape)
+            for mem_dim, rows in SIZES:
+                if mem_dim % p:
+                    continue
+                elems = mem_dim * rows          # per-device f32 elements
+                for strategy in comm.names():
+                    us = bench_swap(mesh, group, strategy, mem_dim, rows)
+                    model = comm.get(strategy).cost(
+                        group, mesh_shape, elems / 2.0, 'fp32').cycles
+                    gname = group if isinstance(group, str) else '*'.join(group)
+                    tag = (f"redistribute/{mesh_dims[0]}x{mesh_dims[1]}/"
+                           f"{gname}/{strategy}/e{elems}")
+                    emit(tag, us, f"model_cycles={model:.0f}")
+                    results.append(dict(
+                        mesh=f"{mesh_dims[0]}x{mesh_dims[1]}", group=gname,
+                        strategy=strategy, p=p, local_elems=elems,
+                        us=us, model_cycles=model))
+    with open(OUT, "w") as f:
+        json.dump(dict(benchmark="redistribute", backend=jax.default_backend(),
+                       results=results), f, indent=1)
+    print(f"wrote {os.path.normpath(OUT)} ({len(results)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,12 @@ def main():
     err3 = np.max(np.abs(np.asarray(y1, np.complex128) - w1)) / np.max(np.abs(w1))
     print(f'1D FFT n={n1d} over 16 devices: rel err vs numpy = {err3:.2e}')
     assert err3 < 1e-4
+
+    # every plan prices its schedule with the paper's cycle model; the
+    # comm='auto' default also USES it to pick the redistribution
+    # strategy and overlap depth (see repro.comm)
+    print()
+    print(p.cost_report())
     print('quickstart OK')
 
 

@@ -1,0 +1,90 @@
+"""``repro.comm`` — the pluggable, cost-model-driven redistribution
+engine.
+
+The inter-superstep redistributions — the all-to-all transposes between
+1-D pencil passes (paper §4.2-§4.4) — are where wsFFT's performance
+lives or dies. This package makes them a first-class subsystem:
+
+* :mod:`repro.comm.strategies` — a strategy registry (mirroring
+  ``repro.fft.methods``) with three bit-exact-equivalent schedules:
+  ``'all_to_all'`` (tiled collective), ``'ppermute'`` (pairwise ring),
+  ``'hierarchical'`` (two-phase pod-split exchange).
+* :mod:`repro.comm.overlap` — chunked compute/communication pipelining
+  that composes with *any* strategy (lifted out of ``fft/pencil.py``).
+* :mod:`repro.comm.cost` — the paper's cycle model (extended in
+  ``core.wse_model``) pricing each schedule so ``fft.plan(...,
+  comm='auto')`` can choose strategy, pipelining depth and local
+  method, and ``FFT.cost_report()`` can print predicted cycles per
+  superstep next to the paper's Table 1.
+
+The module-level helpers below are the drop-in replacements for the
+old ``repro.core.redistribute`` functions (now a deprecation shim),
+with an extra ``strategy=`` knob. They run *inside* ``shard_map``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax import lax
+
+from repro.core import plan as planlib
+from repro.core.plan import Layout, MeshAxis
+from repro.comm import cost, overlap, strategies
+from repro.comm.strategies import (  # noqa: F401  (re-exported API)
+    Strategy,
+    axis_tuple,
+    get,
+    group_index,
+    group_size,
+    names,
+    register,
+    resolve,
+    validate,
+)
+
+DEFAULT_STRATEGY = 'all_to_all'
+
+
+def swap_axes(x: jax.Array, mesh_axis: MeshAxis, *, shard_pos: int,
+              mem_pos: int, strategy: str = DEFAULT_STRATEGY) -> jax.Array:
+    """In-place ownership swap: after this, local axis ``shard_pos``
+    holds the full global axis previously sharded over ``mesh_axis``
+    and local axis ``mem_pos`` holds only this device's block of the
+    previously full axis. ``strategy`` picks how the bytes move; every
+    registered strategy produces bit-identical results."""
+    return get(strategy).swap_axes(x, mesh_axis, shard_pos=shard_pos,
+                                   mem_pos=mem_pos)
+
+
+def apply_swap(x: jax.Array, layout: Layout, mesh_axis: MeshAxis,
+               mem_pos: int, *, strategy: str = DEFAULT_STRATEGY
+               ) -> Tuple[jax.Array, Layout]:
+    """swap + layout bookkeeping."""
+    return get(strategy).swap(x, layout, mesh_axis, mem_pos)
+
+
+def redistribute(x: jax.Array, src: Layout, dst: Layout, *,
+                 strategy: str = DEFAULT_STRATEGY) -> jax.Array:
+    """General layout change via the minimal swap sequence (BFS planned
+    at trace time). Reused by wsFFT (supersteps), by the MoE dispatch
+    and by sequence-parallel attention."""
+    st = get(strategy)
+    for mesh_axis, mem_pos in planlib.plan_swaps(src, dst):
+        x, src = st.swap(x, src, mesh_axis, mem_pos)
+    assert src == dst
+    return x
+
+
+def pod_fold(x: jax.Array, pod_axis: str, batch_pos: int = 0) -> jax.Array:
+    """Gather a batch axis sharded over the pod axis (used when an FFT
+    batch spans pods but each FFT instance must stay within one pod)."""
+    return lax.all_gather(x, pod_axis, axis=batch_pos, tiled=True)
+
+
+__all__ = [
+    'DEFAULT_STRATEGY', 'Strategy', 'apply_swap', 'axis_tuple', 'cost',
+    'get', 'group_index', 'group_size', 'names', 'overlap', 'pod_fold',
+    'redistribute', 'register', 'resolve', 'strategies', 'swap_axes',
+    'validate',
+]

@@ -1,0 +1,294 @@
+"""Trace-time plan costing and the ``comm='auto'`` selector.
+
+The paper's closed-form performance model (:mod:`repro.core.wse_model`,
+Eqs. 1-12) previously only validated figures; here it *makes
+decisions*: given (shape, mesh extents, precision) it prices every
+superstep of a distributed-FFT schedule under each registered
+redistribution strategy, picks the cheapest strategy, a pipelining
+depth (``overlap_chunks``), and — for ``method='auto'`` — the local
+pencil algorithm.
+
+Costing works on a plain ``{axis_name: extent}`` mapping, never on
+device objects, so paper-scale configurations (512^3 on a 512x512
+mesh) are priced exactly; ``FFT.cost_report()`` prints the result next
+to the paper's Table 1 entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.core import wse_model as wm
+from repro.core.plan import Layout
+from repro.comm import strategies as strat
+
+#: per-chunk dispatch overhead of the overlap pipeline (cycles): each
+#: extra chunk re-issues the collective and the local kernel.
+OVERLAP_CHUNK_OVERHEAD = 1000.0
+#: real flops per complex element of the four-step inter-factor twiddle
+#: (one complex multiply = 6 flops, plus the address stream).
+TWIDDLE_FLOPS_PER_ELEM = 8.0
+
+_OVERLAP_CANDIDATES = (1, 2, 4, 8)
+
+
+def select_method(n: int, precision: wm.Precision = 'fp32') -> str:
+    """Cost-model local-method choice for a length-n pencil: cheapest of
+    the butterfly and MXU-matmul cycle models (dense DFT for non-pow2).
+    Calibrated to agree with the registry's AUTO_MATMUL_MIN rule."""
+    if n & (n - 1):
+        return 'direct'
+    stock = wm.pencil_cycles_method(n, precision, 'stockham')
+    mxu = wm.pencil_cycles_method(n, precision, 'four_step')
+    return 'stockham' if stock <= mxu else 'four_step'
+
+
+# ---------------------------------------------------------------------------
+# Step-by-step plan costing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    kind: str                 # 'fft' | 'swap' | 'twiddle' | 'reorder'
+    detail: str
+    cycles: float
+    swap: Optional[wm.SwapCost] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """Predicted cycles for one direction of a distributed FFT plan."""
+    steps: Tuple[StepCost, ...]
+    strategy: str
+    method: str
+    precision: wm.Precision
+    overlap_chunks: int = 1
+
+    @property
+    def serial_cycles(self) -> float:
+        return sum(s.cycles for s in self.steps)
+
+    @property
+    def cycles(self) -> float:
+        """Total with the overlap pipeline applied to every adjacent
+        (fft, swap) pair: each pair costs (Tf+Ts)/c + (c-1)/c *
+        max(Tf, Ts) + c * overhead instead of Tf + Ts."""
+        c = self.overlap_chunks
+        if c <= 1:
+            return self.serial_cycles
+        total, i, steps = 0.0, 0, self.steps
+        while i < len(steps):
+            s = steps[i]
+            nxt = steps[i + 1] if i + 1 < len(steps) else None
+            if s.kind == 'fft' and nxt is not None and nxt.kind == 'swap':
+                tf, ts = s.cycles, nxt.cycles
+                total += ((tf + ts) / c + (c - 1) / c * max(tf, ts)
+                          + c * OVERLAP_CHUNK_OVERHEAD)
+                i += 2
+                continue
+            total += s.cycles
+            i += 1
+        return total
+
+    def runtime_us(self) -> float:
+        return wm.runtime_us(self.cycles)
+
+
+def _local_shape(shape: Sequence[int], layout: Layout,
+                 mesh_shape: Mapping[str, int]) -> Tuple[int, ...]:
+    return tuple(s // strat.static_group_size(o, mesh_shape)
+                 for s, o in zip(shape, layout))
+
+
+def _fft_step(n_ax: int, axis: int, elems: int, method: str,
+              precision: wm.Precision) -> StepCost:
+    pencils = elems // n_ax
+    meth = select_method(n_ax, precision) if method == 'auto' else method
+    cyc = pencils * wm.pencil_cycles_method(n_ax, precision, meth)
+    return StepCost('fft', f'n={n_ax} axis={axis} x{pencils} ({meth})', cyc)
+
+
+def _swap_step(mesh_axis, mesh_shape, elems: int, strategy: str,
+               precision: wm.Precision) -> StepCost:
+    sc = strat.get(strategy).cost(mesh_axis, mesh_shape, elems, precision)
+    ax = '*'.join(strat.axis_tuple(mesh_axis))
+    return StepCost('swap', f'{ax} p={sc.p} ({sc.strategy})', sc.cycles, sc)
+
+
+def pencil_plan_cost(shape: Sequence[int], layout: Layout,
+                     mesh_shape: Mapping[str, int], *,
+                     precision: wm.Precision = 'fp32',
+                     method: str = 'auto', strategy: str = 'all_to_all',
+                     overlap_chunks: int = 1) -> PlanCost:
+    """Cost the rank-2/3 pencil schedule (``forward_schedule``) step by
+    step. Per-device element count is layout-invariant (= global elems /
+    total devices in the layout), so every swap exchanges ``elems``
+    local complex elements — exactly the paper's n*m^2 at m-pencil
+    granularity."""
+    from repro.fft import pencil as _pencil   # lazy: avoids import cycle
+    steps_sym, _ = _pencil.forward_schedule(tuple(layout))
+    local = _local_shape(shape, layout, mesh_shape)
+    elems = math.prod(local)
+    out = []
+    for step in steps_sym:
+        if step[0] == 'fft':
+            out.append(_fft_step(shape[step[1]], step[1], elems, method,
+                                 precision))
+        else:
+            out.append(_swap_step(step[1], mesh_shape, elems, strategy,
+                                  precision))
+    return PlanCost(tuple(out), strategy, method, precision, overlap_chunks)
+
+
+def large1d_plan_cost(n1: int, n2: int, mesh_axes,
+                      mesh_shape: Mapping[str, int], *,
+                      precision: wm.Precision = 'fp32',
+                      method: str = 'auto', strategy: str = 'all_to_all',
+                      natural_order: bool = True,
+                      overlap_chunks: int = 1) -> PlanCost:
+    """Cost the distributed four-step 1-D schedule: swap, n1-DFT,
+    twiddle, swap, n2-DFT (+ the natural-order content transpose).
+    ``overlap_chunks`` is the plan's pipelining depth — it only takes
+    effect at execution time when a batch axis is present, so the
+    pipelined total here is the batched-operand estimate."""
+    ax = mesh_axes if isinstance(mesh_axes, tuple) else (mesh_axes,)
+    mesh_axis = ax if len(ax) > 1 else ax[0]
+    p = strat.static_group_size(mesh_axis, mesh_shape)
+    elems = n1 * n2 // p
+    steps = [
+        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision),
+        _fft_step(n1, 0, elems, method, precision),
+        StepCost('twiddle', f'W[j1,k2] x{elems}',
+                 TWIDDLE_FLOPS_PER_ELEM * elems),
+        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision),
+        _fft_step(n2, 1, elems, method, precision),
+    ]
+    if natural_order:
+        steps.append(_swap_step(mesh_axis, mesh_shape, elems, strategy,
+                                precision))
+        steps.append(StepCost('reorder', f'local T x{elems}',
+                              wm.LOCAL_REORDER_CPE * elems))
+    return PlanCost(tuple(steps), strategy, method, precision,
+                    overlap_chunks)
+
+
+# ---------------------------------------------------------------------------
+# Overlap feasibility (mirror of the executor's chunk-axis rule)
+# ---------------------------------------------------------------------------
+
+def feasible_overlap(shape: Sequence[int], layout: Layout,
+                     mesh_shape: Mapping[str, int]) -> Tuple[int, ...]:
+    """Chunk counts for which *every* (fft, swap) pair of the forward
+    schedule has a free local axis to pipeline over — the same
+    candidate rule the executor applies per pair."""
+    from repro.fft import pencil as _pencil
+    from repro.core import plan as planlib
+    steps, _ = _pencil.forward_schedule(tuple(layout))
+    lay = tuple(layout)
+    pair_axes = []
+    for i, step in enumerate(steps):
+        if step[0] == 'swap':
+            _, mesh_axis, mem_pos = step
+            sp = planlib.owner_pos(lay, mesh_axis)
+            fft_mem = steps[i - 1][1] if i and steps[i - 1][0] == 'fft' else None
+            local = _local_shape(shape, lay, mesh_shape)
+            pair_axes.append(tuple(
+                local[p] for p in range(len(lay))
+                if p not in (mem_pos, sp, fft_mem)))
+            lay = planlib.swap(lay, mesh_axis, mem_pos)
+    ok = []
+    for c in _OVERLAP_CANDIDATES:
+        if all(any(s % c == 0 and s >= c for s in sizes)
+               for sizes in pair_axes):
+            ok.append(c)
+    return tuple(ok) or (1,)
+
+
+# ---------------------------------------------------------------------------
+# The selector
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    strategy: str
+    overlap_chunks: int
+    method: str
+    costs: Dict[str, PlanCost]        # strategy name -> best-overlap cost
+
+    @property
+    def cost(self) -> PlanCost:
+        return self.costs[self.strategy]
+
+
+def select(shape: Sequence[int], layout: Layout,
+           mesh_shape: Mapping[str, int], *,
+           precision: wm.Precision = 'fp32', method: str = 'auto',
+           strategies: Optional[Sequence[str]] = None) -> Selection:
+    """Pick (strategy, overlap_chunks, method) minimizing predicted
+    cycles for the pencil schedule of ``shape``/``layout``.
+
+    Method: resolved per transform axis by :func:`select_method`; the
+    plan gets a concrete name only when all axes agree (otherwise the
+    registry's per-length 'auto' rule stays in charge at trace time).
+    """
+    if method == 'auto':
+        picks = {select_method(n, precision) for n in shape}
+        method = picks.pop() if len(picks) == 1 else 'auto'
+    chunk_opts = feasible_overlap(shape, layout, mesh_shape)
+    costs: Dict[str, PlanCost] = {}
+    for name in (strategies or strat.names()):
+        best = None
+        for c in chunk_opts:
+            pc = pencil_plan_cost(shape, layout, mesh_shape,
+                                  precision=precision, method=method,
+                                  strategy=name, overlap_chunks=c)
+            if best is None or pc.cycles < best.cycles:
+                best = pc
+        costs[name] = best
+    winner = min(costs, key=lambda k: costs[k].cycles)
+    return Selection(winner, costs[winner].overlap_chunks, method, costs)
+
+
+# ---------------------------------------------------------------------------
+# Report formatting (FFT.cost_report)
+# ---------------------------------------------------------------------------
+
+def format_report(pc: PlanCost, shape: Sequence[int],
+                  mesh_shape: Mapping[str, int]) -> str:
+    """Human-readable per-step table, with the paper's Table-1 model/
+    measured numbers alongside when the config is an n^3 cube the paper
+    measured (n in Table 1, m-pencil granularity)."""
+    shape = tuple(shape)
+    lines = [
+        f"cost_report shape={tuple(shape)} mesh={dict(mesh_shape)} "
+        f"strategy={pc.strategy} method={pc.method} "
+        f"precision={pc.precision} overlap_chunks={pc.overlap_chunks}",
+        f"{'step':>4}  {'kind':<8} {'detail':<34} {'cycles':>14}",
+    ]
+    for i, s in enumerate(pc.steps):
+        lines.append(f"{i:>4}  {s.kind:<8} {s.detail:<34} {s.cycles:>14.0f}")
+    lines.append(f"{'':>4}  {'total':<8} {'(serial)':<34} "
+                 f"{pc.serial_cycles:>14.0f}")
+    if pc.overlap_chunks > 1:
+        lines.append(f"{'':>4}  {'total':<8} "
+                     f"{f'(pipelined x{pc.overlap_chunks})':<34} "
+                     f"{pc.cycles:>14.0f}")
+    lines.append(f"      predicted runtime: {pc.runtime_us():.1f} us "
+                 f"@ {wm.CLOCK_HZ / 1e6:.0f} MHz")
+    n = shape[0]
+    cube = len(shape) == 3 and shape == (n,) * 3
+    if cube and n in wm.TABLE1_CYCLES:
+        sizes = list(mesh_shape.values())
+        m = n // sizes[0] if sizes and n % sizes[0] == 0 else 0
+        if m and all(n // s == m for s in sizes):
+            model = wm.total_cycles_model(n, m, pc.precision)
+            lines.append(f"      wse_model total_cycles_model(n={n}, m={m}):"
+                         f" {model:.0f} cycles")
+            if m == 1:
+                meas = wm.TABLE1_CYCLES[n][pc.precision]
+                lines.append(
+                    f"      paper Table 1 measured ({pc.precision}): {meas} "
+                    f"cycles = {wm.runtime_us(meas):.1f} us "
+                    f"(model/measured = {pc.serial_cycles / meas:.2f})")
+    return "\n".join(lines)

@@ -1,0 +1,72 @@
+"""Compute/communication overlap, composable with any comm strategy.
+
+The wsFFT schedule alternates local compute (a pencil FFT, an expert
+matmul, an attention block) with an ownership swap. Running them
+back-to-back leaves the wires idle during compute and the ALUs idle
+during the swap; splitting the local batch into chunks and issuing
+``compute(chunk_i+1)`` while ``swap(chunk_i)`` is in flight lets XLA's
+latency-hiding scheduler overlap the two (the beyond-paper pipelining
+previously hardcoded inside ``fft/pencil.py``).
+
+This module owns the generic machinery so the *same* pipelining
+composes with every registered strategy and every caller: the pencil
+supersteps, the large-1D four-step, MoE expert dispatch and Ulysses
+sequence-parallel attention.
+
+Everything here runs *inside* ``shard_map`` on per-device local blocks.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def pick_chunk_axis(local_shape: Sequence[int], exclude: Sequence[int],
+                    n_chunks: int) -> Optional[int]:
+    """First local axis that can carry the pipeline: not involved in the
+    compute/swap pair (``exclude``) and divisible into ``n_chunks``.
+    Returns None when no axis qualifies (caller falls back to the
+    unpipelined path)."""
+    if n_chunks <= 1:
+        return None
+    for pos, size in enumerate(local_shape):
+        if pos not in exclude and size % n_chunks == 0 and size >= n_chunks:
+            return pos
+    return None
+
+
+def pipelined(n_chunks: int, axis: int, fn: Callable, *arrays: jnp.ndarray):
+    """Run ``fn`` over ``n_chunks`` slices of ``arrays`` along ``axis``
+    and concatenate the per-chunk results along the same axis.
+
+    ``fn(*chunks)`` is the per-chunk stage composition — typically
+    compute followed by a strategy swap (or swap, compute, swap); chunk
+    i+1's compute overlaps chunk i's collective. ``fn`` may return one
+    array or a tuple; shapes may change on any axis other than the
+    chunk axis's *position* (the swap moves sizes between axes, the
+    chunk axis position itself must be preserved).
+
+    With ``n_chunks <= 1`` this is exactly ``fn(*arrays)``.
+    """
+    if n_chunks <= 1:
+        return fn(*arrays)
+    parts = zip(*(jnp.split(a, n_chunks, axis=axis) for a in arrays))
+    outs = [fn(*chunk) for chunk in parts]
+    if isinstance(outs[0], tuple):
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(len(outs[0])))
+    return jnp.concatenate(outs, axis=axis)
+
+
+def overlapped_fft_swap(re: jnp.ndarray, im: jnp.ndarray, *,
+                        fft_fn: Callable, swap_fn: Callable,
+                        chunk_axis: int, n_chunks: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The pencil superstep pair — ``fft`` then ``swap`` — pipelined
+    over ``n_chunks`` slices of ``chunk_axis``. ``fft_fn(re, im)`` and
+    ``swap_fn(x)`` operate on local chunks."""
+    def stage(cr, ci):
+        cr, ci = fft_fn(cr, ci)
+        return swap_fn(cr), swap_fn(ci)
+    return pipelined(n_chunks, chunk_axis, stage, re, im)

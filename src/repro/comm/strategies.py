@@ -1,0 +1,314 @@
+"""The redistribution strategy registry.
+
+One inter-device ownership swap — exchange the in-memory array axis
+with an axis owned by a mesh axis — is the repo's universal collective:
+the wsFFT transpose supersteps (§4.2-§4.4), the four-step 1-D factor
+exchanges, MoE expert dispatch and Ulysses sequence-parallel attention
+all reduce to it. This module makes *how* that swap moves bytes a
+pluggable choice, mirroring the local-pencil method registry
+(:mod:`repro.fft.methods`):
+
+* ``'all_to_all'`` — one tiled ``lax.all_to_all``: the TPU-native form
+  of the paper's broadcast-and-filter transpose (§4.3). Default.
+* ``'ppermute'``   — a pairwise ring schedule built from
+  ``lax.ppermute``: p-1 rounds, round s sending each device's block for
+  its s-th successor. Every round is a plain point-to-point permute, so
+  it lowers on meshes/backends where all_to_all lowers poorly, and its
+  bottleneck-link traffic is roughly half the broadcast-and-filter
+  stream (cf. the multi-phase schedules of arXiv 2404.15888).
+* ``'hierarchical'`` — a two-phase pod-split exchange for swaps over a
+  *tuple* of mesh axes: all_to_all across the pod (outer) axis first,
+  then within pods, then one local reorder of the concatenated blocks.
+  Pays two small-group exchanges plus a local transpose instead of one
+  p-wide exchange — it wins when the per-peer reconfiguration/latency
+  term dominates (many peers, small blocks).
+
+Every strategy implements the same :class:`Strategy` interface and is
+**bit-exact**: for any operand the three produce identical results
+(identical data placement — they are pure data movement), so swapping
+strategies can never change numerics, only the schedule on the wire.
+
+All ``swap``/``swap_axes`` calls run *inside* ``shard_map``: they see
+per-device local blocks and named mesh axes. Group sizes are recovered
+at trace time with the static ``lax.psum(1, axis)`` idiom, so no Mesh
+object is threaded through.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import plan as planlib
+from repro.core import wse_model as wm
+from repro.core.plan import Layout, MeshAxis
+
+
+# ---------------------------------------------------------------------------
+# Group helpers (trace-time, inside shard_map)
+# ---------------------------------------------------------------------------
+
+def axis_tuple(mesh_axis: MeshAxis) -> Tuple[str, ...]:
+    """Canonicalize a mesh-axis spec to a tuple of axis names."""
+    if mesh_axis is None:
+        return ()
+    return mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+
+
+def group_size(mesh_axis: MeshAxis) -> int:
+    """Static group size of a (possibly tuple) mesh axis, from inside
+    shard_map: ``lax.psum(1, axis)`` of a Python literal folds to the
+    axis extent at trace time."""
+    p = 1
+    for a in axis_tuple(mesh_axis):
+        p *= lax.psum(1, a)
+    return p
+
+
+def group_index(mesh_axis: MeshAxis):
+    """This device's row-major flat index within the (possibly tuple)
+    mesh-axis group — the same member order ``all_to_all`` uses for
+    tuple axis names."""
+    axes = axis_tuple(mesh_axis)
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * lax.psum(1, a) + lax.axis_index(a)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# Strategy interface
+# ---------------------------------------------------------------------------
+
+class Strategy:
+    """One registered redistribution schedule.
+
+    ``swap_axes`` is the low-level form (explicit split/concat
+    positions); ``swap`` adds the layout bookkeeping the planners
+    thread; ``cost`` is the trace-time hook into the paper's cycle
+    model (:mod:`repro.core.wse_model`) the ``comm='auto'`` selector
+    ranks strategies with.
+    """
+    name: str = ''
+    description: str = ''
+
+    def swap_axes(self, x: jax.Array, mesh_axis: MeshAxis, *,
+                  shard_pos: int, mem_pos: int) -> jax.Array:
+        """Exchange ownership: split local axis ``mem_pos`` across the
+        group, concatenate received blocks (in group order) along
+        ``shard_pos``. Must be bit-identical to the tiled all_to_all."""
+        raise NotImplementedError
+
+    def swap(self, x: jax.Array, layout: Layout, mesh_axis: MeshAxis,
+             mem_pos: int) -> Tuple[jax.Array, Layout]:
+        """swap + layout bookkeeping."""
+        sp = planlib.owner_pos(layout, mesh_axis)
+        y = self.swap_axes(x, mesh_axis, shard_pos=sp, mem_pos=mem_pos)
+        return y, planlib.swap(layout, mesh_axis, mem_pos)
+
+    def cost(self, mesh_axis: MeshAxis, mesh_shape, elems: float,
+             precision: wm.Precision) -> wm.SwapCost:
+        """Predicted cycles for one swap of ``elems`` local complex
+        elements over ``mesh_axis`` of a mesh with extents
+        ``mesh_shape`` (a name->size mapping; no device objects
+        needed, so paper-scale meshes can be costed abstractly)."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Strategy] = {}
+
+
+def register(strategy: Strategy) -> Strategy:
+    if strategy.name in _REGISTRY:
+        raise ValueError(f"comm strategy {strategy.name!r} already registered")
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def names() -> Tuple[str, ...]:
+    """Registered concrete strategy names (excludes the 'auto' alias)."""
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> Strategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm strategy {name!r}; known: {names() + ('auto',)}"
+        ) from None
+
+
+def validate(name: str) -> str:
+    """Check ``name`` is 'auto' or a registered strategy; returns it."""
+    if name != 'auto':
+        get(name)
+    return name
+
+
+def resolve(name: str) -> Strategy:
+    """Strategy instance for ``name``. The ``'auto'`` alias maps to the
+    default schedule ('all_to_all'): cost-model *selection* happens at
+    the plan layer (``fft.plan`` / :func:`repro.comm.cost.select`);
+    executors below it treat 'auto' as "the default"."""
+    return get('all_to_all' if name == 'auto' else name)
+
+
+def static_group_size(mesh_axis: MeshAxis, mesh_shape) -> int:
+    """Group size from a name->extent mapping (outside shard_map)."""
+    p = 1
+    for a in axis_tuple(mesh_axis):
+        p *= mesh_shape[a]
+    return p
+
+
+# ---------------------------------------------------------------------------
+# 'all_to_all': the paper's broadcast-and-filter transpose, TPU form
+# ---------------------------------------------------------------------------
+
+class AllToAllStrategy(Strategy):
+    name = 'all_to_all'
+    description = ('one tiled lax.all_to_all (broadcast-and-filter '
+                   'transpose, §4.3)')
+
+    def swap_axes(self, x, mesh_axis, *, shard_pos, mem_pos):
+        return lax.all_to_all(x, mesh_axis, split_axis=mem_pos,
+                              concat_axis=shard_pos, tiled=True)
+
+    def cost(self, mesh_axis, mesh_shape, elems, precision):
+        p = static_group_size(mesh_axis, mesh_shape)
+        return wm.swap_cost_a2a(p, elems, precision, strategy=self.name)
+
+
+# ---------------------------------------------------------------------------
+# Shared two-phase (pod-split) decomposition
+# ---------------------------------------------------------------------------
+
+def two_phase_swap(x, axes: Tuple[str, ...], *, shard_pos: int, mem_pos: int,
+                   exchange) -> jax.Array:
+    """Ownership swap over a tuple axis group as two phased exchanges.
+
+    ``exchange(x, axis, shard_pos, mem_pos)`` performs the single-group
+    swap for one phase (``axis`` is the outer name, then the inner
+    name/tuple). Phase 1 delivers the p_out superblocks — superblock j
+    covers the p_in blocks bound for pod j, because the flat group
+    order is row-major (outer major); phase 2 splits every received
+    superblock identically across the pod. Received order is then
+    (inner-source, outer-source); one local transpose restores the flat
+    row-major group order, making the whole thing bit-identical to the
+    one-shot exchange over the full group.
+    """
+    outer = axes[0]
+    inner = axes[1] if len(axes) == 2 else axes[1:]
+    p_out = group_size(outer)
+    p_in = group_size(inner)
+    seg = x.shape[shard_pos]
+    y = exchange(x, outer, shard_pos, mem_pos)
+    z = exchange(y, inner, shard_pos, mem_pos)
+    shp = z.shape
+    z = z.reshape(shp[:shard_pos] + (p_in, p_out, seg) + shp[shard_pos + 1:])
+    z = z.swapaxes(shard_pos, shard_pos + 1)
+    return z.reshape(shp)
+
+
+# ---------------------------------------------------------------------------
+# 'ppermute': pairwise ring exchange
+# ---------------------------------------------------------------------------
+
+class PpermuteStrategy(Strategy):
+    name = 'ppermute'
+    description = ('p-1 pairwise ppermute rounds per axis (ring schedule; '
+                   'point-to-point only)')
+
+    @staticmethod
+    def _ring(x, axis_name: str, shard_pos: int, mem_pos: int):
+        """Single-named-axis ring: round s sends each device's block for
+        its s-th successor. (Tuple groups go through the two-phase
+        decomposition: jax flattens a tuple-axis ppermute's perm in mesh
+        order, not tuple order, so only single-axis perms are
+        portable.)"""
+        p = lax.psum(1, axis_name)
+        if p == 1:
+            return x
+        if x.shape[mem_pos] % p:
+            # match the loud failure of the tiled all_to_all instead of
+            # truncating blocks (dynamic_slice clamps out-of-range starts)
+            raise ValueError(
+                f"ring swap: mem axis size {x.shape[mem_pos]} not divisible "
+                f"by group size {p} of axis {axis_name!r}")
+        idx = lax.axis_index(axis_name)
+        blk = x.shape[mem_pos] // p
+        seg = x.shape[shard_pos]
+        out_shape = list(x.shape)
+        out_shape[mem_pos] = blk
+        out_shape[shard_pos] = seg * p
+        # own block keeps its relative position: global slot = own index
+        own = lax.dynamic_slice_in_dim(x, idx * blk, blk, axis=mem_pos)
+        out = jnp.zeros(tuple(out_shape), x.dtype)
+        out = lax.dynamic_update_slice_in_dim(out, own, idx * seg,
+                                              axis=shard_pos)
+        for s in range(1, p):
+            # round s: send the block for my s-th successor, receive the
+            # block my s-th predecessor holds for me
+            dst = (idx + s) % p
+            send = lax.dynamic_slice_in_dim(x, dst * blk, blk, axis=mem_pos)
+            recv = lax.ppermute(send, axis_name,
+                                [(i, (i + s) % p) for i in range(p)])
+            src = (idx - s) % p
+            out = lax.dynamic_update_slice_in_dim(out, recv, src * seg,
+                                                  axis=shard_pos)
+        return out
+
+    def swap_axes(self, x, mesh_axis, *, shard_pos, mem_pos):
+        axes = axis_tuple(mesh_axis)
+        if len(axes) == 1:
+            return self._ring(x, axes[0], shard_pos, mem_pos)
+        return two_phase_swap(
+            x, axes, shard_pos=shard_pos, mem_pos=mem_pos,
+            exchange=lambda a, ax, sp, mp: self.swap_axes(
+                a, ax, shard_pos=sp, mem_pos=mp))
+
+    def cost(self, mesh_axis, mesh_shape, elems, precision):
+        p = static_group_size(mesh_axis, mesh_shape)
+        return wm.swap_cost_ring(p, elems, precision, strategy=self.name)
+
+
+# ---------------------------------------------------------------------------
+# 'hierarchical': two-phase pod-split exchange over a tuple axis group
+# ---------------------------------------------------------------------------
+
+class HierarchicalStrategy(Strategy):
+    name = 'hierarchical'
+    description = ('two-phase pod-split exchange (outer-axis all_to_all, '
+                   'inner-axis all_to_all, local reorder)')
+
+    def swap_axes(self, x, mesh_axis, *, shard_pos, mem_pos):
+        axes = axis_tuple(mesh_axis)
+        if len(axes) < 2:
+            # no pod factorization available on a single named axis
+            return _A2A.swap_axes(x, mesh_axis, shard_pos=shard_pos,
+                                  mem_pos=mem_pos)
+        return two_phase_swap(
+            x, axes, shard_pos=shard_pos, mem_pos=mem_pos,
+            exchange=lambda a, ax, sp, mp: lax.all_to_all(
+                a, ax, split_axis=mp, concat_axis=sp, tiled=True))
+
+    def cost(self, mesh_axis, mesh_shape, elems, precision):
+        axes = axis_tuple(mesh_axis)
+        if len(axes) < 2:
+            # degenerates to the plain exchange
+            return wm.swap_cost_a2a(
+                static_group_size(mesh_axis, mesh_shape), elems, precision,
+                strategy=self.name)
+        p_out = static_group_size(axes[0], mesh_shape)
+        p_in = static_group_size(axes[1] if len(axes) == 2 else axes[1:],
+                                 mesh_shape)
+        return wm.swap_cost_hierarchical(p_out, p_in, elems, precision,
+                                         strategy=self.name)
+
+
+_A2A = register(AllToAllStrategy())
+register(PpermuteStrategy())
+register(HierarchicalStrategy())

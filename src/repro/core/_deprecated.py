@@ -1,0 +1,34 @@
+"""One-time DeprecationWarning plumbing for the compatibility shims.
+
+Each shim (``core.distributed``, ``core.redistribute``, the old
+``core.fft1d.fft1d`` / ``kernels.ops.pencil_fft`` entry points) calls
+:func:`warn_once` naming its replacement; the warning fires once per
+process per shim. With ``stacklevel=2`` the warning is attributed to
+the *calling shim module* (``repro.core.redistribute`` etc.), so the
+``ignore::DeprecationWarning:repro.*`` regex in pyproject's
+filterwarnings — and the explicit per-shim-module ``-W`` list in CI,
+where pytest escapes the module field — keep the shims importable
+while every other DeprecationWarning escalates to an error.
+"""
+from __future__ import annotations
+
+import warnings
+
+_seen: set = set()
+
+
+def warn_once(name: str, replacement: str) -> None:
+    """Emit one DeprecationWarning per process for shim ``name``,
+    telling callers to use ``replacement``."""
+    if name in _seen:
+        return
+    _seen.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} instead",
+        DeprecationWarning, stacklevel=2)
+
+
+def reset(name: str) -> None:
+    """Forget that ``name`` warned (test hook: lets a test assert the
+    one-time warning actually fires regardless of import order)."""
+    _seen.discard(name)

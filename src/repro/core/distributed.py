@@ -22,6 +22,10 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
+from repro.core._deprecated import warn_once
+
+warn_once('repro.core.distributed', 'repro.fft (fft.plan / repro.fft.pencil)')
+
 # Re-exported for backward compatibility — the implementations moved.
 from repro.fft.pencil import (  # noqa: F401
     forward_schedule,

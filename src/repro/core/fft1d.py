@@ -286,6 +286,8 @@ def fft1d(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
     """DEPRECATED: delegate to :func:`repro.fft.methods.apply`, the one
     method registry. ``auto`` resolution (MXU four-step for n >= 64,
     Stockham below, direct for non-pow2) lives there."""
+    from repro.core._deprecated import warn_once
+    warn_once('repro.core.fft1d.fft1d', 'repro.fft.methods.apply')
     from repro.fft import methods
     return methods.apply(re, im, inverse=inverse, method=method,
                          compute_dtype=compute_dtype)

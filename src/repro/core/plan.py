@@ -83,6 +83,8 @@ class PencilPlan:
     method      local pencil algorithm ('stockham'|'four_step'|'auto')
     use_kernel  dispatch local pencils to the Pallas kernels
     compute_dtype  matmul operand dtype for the four-step (bf16 study)
+    comm        redistribution strategy from the repro.comm registry
+                ('all_to_all'|'ppermute'|'hierarchical')
     """
     shape: Tuple[int, ...]
     mesh: Mesh
@@ -90,6 +92,7 @@ class PencilPlan:
     method: str = 'auto'
     use_kernel: bool = False
     compute_dtype: Optional[object] = None
+    comm: str = 'all_to_all'
 
     def axis_size(self, mesh_axis: MeshAxis) -> int:
         if mesh_axis is None:

@@ -1,61 +1,36 @@
-"""The mesh redistribution engine: layout-tracked all_to_all transposes.
+"""DEPRECATED shim — the redistribution engine moved to :mod:`repro.comm`.
 
-This is the TPU-native form of the paper's broadcast-and-filter
-transpose (§4.3): each mesh row (or column) performs an all-to-all that
-exchanges the in-memory axis with the axis that row/column owns. On the
-WSE the router filters pick single wavelets off two opposing streams; on
-TPU the ICI all-to-all moves m^3-element blocks — the paper's §4.4
-multi-pencil regime, where message granularity is no longer the
-bottleneck.
+The layout-tracked ownership swaps (the paper's §4.3 transposes as
+tiled ``all_to_all`` collectives) are now a first-class subsystem with
+a strategy registry (``'all_to_all'`` | ``'ppermute'`` |
+``'hierarchical'``), composable compute/communication overlap
+(:mod:`repro.comm.overlap`) and a cost model that drives
+``fft.plan(..., comm='auto')`` (:mod:`repro.comm.cost`).
 
-All functions here run *inside* shard_map: they see per-device local
-blocks and named mesh axes.
+New code should call :func:`repro.comm.swap_axes` /
+:func:`repro.comm.redistribute` directly (each takes a ``strategy=``
+keyword). This module is kept only so existing imports keep working; it
+adds no behavior of its own and will not grow new features.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
-from jax import lax
 
-from repro.core import plan as planlib
+from repro.core._deprecated import warn_once
 from repro.core.plan import Layout, MeshAxis
+from repro.comm import (  # noqa: F401  (re-exported for compatibility)
+    apply_swap,
+    pod_fold,
+    redistribute,
+)
+
+warn_once('repro.core.redistribute', 'repro.comm')
 
 
-def swap_axes(x: jax.Array, mesh_axis: MeshAxis, shard_pos: int, mem_pos: int) -> jax.Array:
-    """In-place ownership swap: after this, local axis ``shard_pos`` holds
-    the full global axis previously sharded over ``mesh_axis`` and local
-    axis ``mem_pos`` holds only this device's block of the previously
-    full axis.
-
-    Implemented as one tiled all_to_all: split the memory axis into p
-    blocks (block c -> device c of the group), concatenate received
-    blocks (in group order — which reconstructs global order) along the
-    previously-sharded axis.
-    """
-    return lax.all_to_all(x, mesh_axis, split_axis=mem_pos, concat_axis=shard_pos,
-                          tiled=True)
-
-
-def apply_swap(x: jax.Array, layout: Layout, mesh_axis: MeshAxis,
-               mem_pos: int) -> Tuple[jax.Array, Layout]:
-    """swap + layout bookkeeping."""
-    sp = planlib.owner_pos(layout, mesh_axis)
-    y = swap_axes(x, mesh_axis, shard_pos=sp, mem_pos=mem_pos)
-    return y, planlib.swap(layout, mesh_axis, mem_pos)
-
-
-def redistribute(x: jax.Array, src: Layout, dst: Layout) -> jax.Array:
-    """General layout change via the minimal swap sequence (BFS planned
-    at trace time). Reused by wsFFT (supersteps), by the MoE dispatch and
-    by sequence-parallel attention."""
-    for mesh_axis, mem_pos in planlib.plan_swaps(src, dst):
-        x, src = apply_swap(x, src, mesh_axis, mem_pos)
-    assert src == dst
-    return x
-
-
-def pod_fold(x: jax.Array, pod_axis: str, batch_pos: int = 0) -> jax.Array:
-    """Gather a batch axis sharded over the pod axis (used when an FFT
-    batch spans pods but each FFT instance must stay within one pod)."""
-    return lax.all_gather(x, pod_axis, axis=batch_pos, tiled=True)
+def swap_axes(x: jax.Array, mesh_axis: MeshAxis, shard_pos: int,
+              mem_pos: int) -> jax.Array:
+    """DEPRECATED: positional-argument form of
+    :func:`repro.comm.swap_axes` (all_to_all strategy)."""
+    from repro import comm
+    return comm.swap_axes(x, mesh_axis, shard_pos=shard_pos,
+                          mem_pos=mem_pos)

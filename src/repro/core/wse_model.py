@@ -98,15 +98,109 @@ def tt_comm(n: int, m: int, precision: Precision) -> float:
 
     p(p-1)/2 messages of m^3 complex numbers through the hottest link at
     r cycles per number, plus d*(p-1) router-reconfiguration gaps.
+
+    This is the p = n/m, elems = n*m^2 instance of the generalized
+    :func:`swap_cycles_a2a` (each PE holds n*m^2 complex elements per
+    transpose; the per-peer message is elems/p = m^3).
     """
-    r = r_factor(precision)
-    p = n // m
-    return (p * (p - 1) / 2) * (m ** 3) * r + ROUTER_RECONFIG * (p - 1)
+    return swap_cycles_a2a(n // m, n * m * m, precision)
 
 
 def tt_comm_single(n: int, precision: Precision) -> float:
     """Eqs. 3-4 (m = 1)."""
     return tt_comm(n, 1, precision)
+
+
+# ---------------------------------------------------------------------------
+# Generalized swap-cost models (the repro.comm strategy hooks)
+#
+# One "swap" is the universal ownership exchange of repro.comm: every
+# device contributes ``elems`` complex elements, sending elems/p to each
+# of its p-1 peers. Eq. 1 is the all_to_all instance; the other
+# strategies get the same structural treatment (hottest-link wire term
+# + per-peer fixed term) so the comparisons the ``comm='auto'`` selector
+# makes are like-for-like.
+# ---------------------------------------------------------------------------
+
+#: per-round injection/synchronization overhead of a pairwise ppermute
+#: round (cycles). A ring round is a full point-to-point collective
+#: launch, far heavier than the d=30-cycle router-filter reprogram of
+#: the streaming broadcast-and-filter transpose — this is what makes
+#: the ring lose at paper-scale single-pencil granularity (m=1) and win
+#: once messages are m^3-sized (§4.4's multi-pencil regime).
+RING_ROUND_OVERHEAD = 512
+#: local reorder cost of the hierarchical exchange's final block
+#: transpose, cycles per complex element (one load+store per element).
+LOCAL_REORDER_CPE = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapCost:
+    """Predicted cycles for one ownership swap, split into the wire
+    (serialized stream) and fixed (reconfig/launch/reorder) terms."""
+    strategy: str
+    p: int
+    elems: float          # local complex elements exchanged
+    wire_cycles: float
+    fixed_cycles: float
+
+    @property
+    def cycles(self) -> float:
+        return self.wire_cycles + self.fixed_cycles
+
+
+def swap_cycles_a2a(p: int, elems: float, precision: Precision) -> float:
+    """Generalized Eq. 1: broadcast-and-filter / all_to_all exchange of
+    ``elems`` local complex elements over a group of p devices."""
+    if p <= 1:
+        return 0.0
+    r = r_factor(precision)
+    return (p * (p - 1) / 2.0) * (elems / p) * r + ROUTER_RECONFIG * (p - 1)
+
+
+def swap_cycles_ring(p: int, elems: float, precision: Precision) -> float:
+    """Pairwise ring exchange: p-1 rounds of elems/p-element point-to-
+    point messages. The bottleneck (mid-group) link carries ~p^2/4
+    messages in total — about half the broadcast-and-filter stream,
+    which runs every wavelet to the end of the row — but each round
+    pays a full collective-launch overhead."""
+    if p <= 1:
+        return 0.0
+    r = r_factor(precision)
+    return (p * p / 4.0) * (elems / p) * r + RING_ROUND_OVERHEAD * (p - 1)
+
+
+def swap_cycles_hierarchical(p_outer: int, p_inner: int, elems: float,
+                             precision: Precision) -> float:
+    """Two-phase pod-split exchange: a p_outer-group exchange, a
+    p_inner-group exchange, and one local reorder pass. Fixed terms
+    scale with p_outer + p_inner instead of p_outer * p_inner."""
+    return (swap_cycles_a2a(p_outer, elems, precision)
+            + swap_cycles_a2a(p_inner, elems, precision)
+            + LOCAL_REORDER_CPE * elems)
+
+
+def swap_cost_a2a(p: int, elems: float, precision: Precision, *,
+                  strategy: str = 'all_to_all') -> SwapCost:
+    total = swap_cycles_a2a(p, elems, precision)
+    fixed = ROUTER_RECONFIG * (p - 1) if p > 1 else 0.0
+    return SwapCost(strategy, p, elems, total - fixed, fixed)
+
+
+def swap_cost_ring(p: int, elems: float, precision: Precision, *,
+                   strategy: str = 'ppermute') -> SwapCost:
+    total = swap_cycles_ring(p, elems, precision)
+    fixed = RING_ROUND_OVERHEAD * (p - 1) if p > 1 else 0.0
+    return SwapCost(strategy, p, elems, total - fixed, fixed)
+
+
+def swap_cost_hierarchical(p_outer: int, p_inner: int, elems: float,
+                           precision: Precision, *,
+                           strategy: str = 'hierarchical') -> SwapCost:
+    total = swap_cycles_hierarchical(p_outer, p_inner, elems, precision)
+    fixed = (ROUTER_RECONFIG * ((p_outer - 1) + (p_inner - 1))
+             + LOCAL_REORDER_CPE * elems)
+    return SwapCost(strategy, p_outer * p_inner, elems, total - fixed, fixed)
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +215,34 @@ def pencil_cycles(n: int, precision: Precision) -> float:
     if precision == 'fp16':
         return 3.0 * n * lg + 34.0 * n + 34.0 * lg
     return 6.5 * n * lg + 35.0 * n + 36.0 * lg
+
+
+#: MXU-form estimates for the matmul pencil algorithms ('four_step' /
+#: 'block'): sustained real multiply-accumulates per cycle, and the
+#: fixed fill/twiddle-load cost per pencil. Calibrated so the
+#: model-driven method choice reproduces the registry's empirical
+#: AUTO_MATMUL_MIN = 64 crossover (butterflies below, matmuls above).
+MXU_MACS_PER_CYCLE = {'fp16': 16.0, 'fp32': 8.0}
+MXU_SETUP_CYCLES = 3000.0
+
+
+def pencil_cycles_method(n: int, precision: Precision,
+                         method: str = 'stockham') -> float:
+    """Per-PE cycles for one length-n pencil under a named local
+    algorithm. 'stockham' (and the 'auto' placeholder) is the paper's
+    assembly-level butterfly model (:func:`pencil_cycles`); the matmul
+    forms count the dense-DFT MACs of the Bailey four-step (n = n1*n2:
+    4*n*(n1+n2) real MACs) at the MXU rate plus a fixed setup; 'direct'
+    is the dense O(n^2) DFT at the same rate."""
+    if method in ('four_step', 'block'):
+        k = max(1, round(math.log2(n)))
+        n1 = 1 << ((k + 1) // 2)
+        n2 = n // n1
+        macs = 4.0 * n * (n1 + n2)
+        return macs / MXU_MACS_PER_CYCLE[precision] + MXU_SETUP_CYCLES
+    if method == 'direct':
+        return 4.0 * n * n / MXU_MACS_PER_CYCLE[precision] + MXU_SETUP_CYCLES
+    return pencil_cycles(n, precision)
 
 
 def pencil_flops_per_cycle(n: int, precision: Precision) -> float:

@@ -13,8 +13,12 @@ Plan/execute model (FFTW-style)::
 Everything else in the repo (``core.distributed``, ``core.fft1d``,
 ``kernels.ops``) is either internal machinery or a deprecated shim over
 this package. Local pencil algorithms live in the single registry
-:mod:`repro.fft.methods`.
+:mod:`repro.fft.methods`; inter-device redistributions dispatch through
+the strategy registry :mod:`repro.comm` (``plan(..., comm='auto')``
+picks one via the cost model; ``FFT.cost_report()`` prints the
+predicted per-superstep cycles).
 """
+from repro import comm as _comm
 from repro.fft import methods
 from repro.fft.api import FFT, plan
 from repro.fft.methods import apply as apply_method
@@ -25,4 +29,10 @@ def available_methods():
     return methods.names() + ('auto',)
 
 
-__all__ = ['FFT', 'plan', 'methods', 'apply_method', 'available_methods']
+def available_comm_strategies():
+    """Registered redistribution strategies (plus the 'auto' alias)."""
+    return _comm.names() + ('auto',)
+
+
+__all__ = ['FFT', 'plan', 'methods', 'apply_method', 'available_methods',
+           'available_comm_strategies']

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import comm as commlib
 from repro.core import twiddle as tw
 from repro.core.plan import Layout, PencilPlan
 from repro.fft import large1d, methods, pencil
@@ -44,13 +45,16 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
          compute_dtype=None, use_kernel: bool = False,
          mesh_axes: Optional[Tuple[str, ...]] = None,
          layout: Optional[Layout] = None,
-         overlap_chunks: int = 1, restore_layout: bool = False,
+         comm: str = 'auto', overlap_chunks: Optional[int] = None,
+         restore_layout: bool = False,
          batch_spec: Optional[str] = None) -> 'FFT':
     """Plan a distributed FFT of a ``len(shape)``-dimensional array.
 
     Args:
       shape: global transform shape — rank 1, 2 or 3.
-      mesh: the jax device mesh the data lives on.
+      mesh: the jax device mesh the data lives on. A
+        ``jax.sharding.AbstractMesh`` also works for cost-only plans
+        (``.cost_report()``) — execution then needs real devices.
       method: local pencil algorithm from the method registry
         ('auto' | 'stockham' | 'four_step' | 'block' | 'direct').
       compute_dtype: matmul operand dtype for the matmul-form pencils
@@ -61,8 +65,17 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         Defaults to every mesh axis except ``batch_spec``.
       layout: explicit initial ownership per array axis (ranks 2/3
         only); overrides ``mesh_axes``.
+      comm: redistribution strategy from the :mod:`repro.comm` registry
+        ('auto' | 'all_to_all' | 'ppermute' | 'hierarchical').
+        ``'auto'`` prices the whole schedule with the paper's cycle
+        model (:mod:`repro.comm.cost`, fp32 wire assumption) and picks
+        the strategy, the pipelining depth, and — when ``method`` is
+        also 'auto' — the local pencil algorithm. All strategies are
+        bit-exact equivalent; only the schedule on the wire changes.
       overlap_chunks: pipeline local compute with the transpose
-        collectives (ranks 2/3, beyond-paper).
+        collectives (beyond-paper; rank 1 overlaps over a leading
+        batch axis). Default: cost-model choice under ``comm='auto'``,
+        else 1.
       restore_layout: make forward/inverse consume AND produce the input
         sharding instead of the rotated one (extra transposes).
       batch_spec: mesh axis name a single leading batch dimension is
@@ -71,13 +84,14 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         leading dims on the operand are batched automatically.
 
     Returns an :class:`FFT` plan with ``forward``/``inverse``/
-    ``in_sharding``/``out_sharding``.
+    ``in_sharding``/``out_sharding``/``cost_report``.
     """
     shape = tuple(int(s) for s in shape)
     rank = len(shape)
     if rank not in (1, 2, 3):
         raise ValueError(f"repro.fft.plan supports ranks 1-3, got shape {shape}")
     methods.validate(method)
+    commlib.validate(comm)
     if batch_spec is not None and batch_spec not in mesh.axis_names:
         raise ValueError(f"batch_spec {batch_spec!r} not a mesh axis "
                          f"of {mesh.axis_names}")
@@ -88,8 +102,6 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         if layout is not None:
             raise ValueError("layout applies to ranks 2/3 only; rank-1 "
                              "plans take mesh_axes")
-        if overlap_chunks != 1:
-            raise ValueError("overlap_chunks applies to ranks 2/3 only")
         axes = mesh_axes if mesh_axes is not None else _default_axes(mesh, batch_spec)
         n = shape[0]
         n1, n2 = tw.four_step_factors(n)
@@ -100,9 +112,12 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
             raise ValueError(
                 f"rank-1 FFT of n={n} factors as {n1}x{n2}; the {psize} "
                 f"devices of mesh axes {axes} must divide both factors")
-        return FFT(shape=shape, mesh=mesh, method=method,
+        strategy, oc, meth = _resolve_comm_1d(
+            (n1, n2), axes, dict(mesh.shape), comm, overlap_chunks, method)
+        return FFT(shape=shape, mesh=mesh, method=meth,
                    compute_dtype=compute_dtype, use_kernel=use_kernel,
-                   overlap_chunks=overlap_chunks, restore_layout=restore_layout,
+                   comm=strategy, overlap_chunks=oc,
+                   restore_layout=restore_layout,
                    batch_spec=batch_spec, axes1d=axes, factors=(n1, n2))
 
     if layout is None:
@@ -126,13 +141,49 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
                     raise ValueError(
                         f"rank-3 FFT needs two mesh axes, mesh has {cand}")
             layout = (row, col, None)
-    pplan = PencilPlan(shape=shape, mesh=mesh, layout=layout, method=method,
-                       use_kernel=use_kernel, compute_dtype=compute_dtype)
+    strategy, oc, meth = _resolve_comm(
+        shape, layout, dict(mesh.shape), comm, overlap_chunks, method)
+    pplan = PencilPlan(shape=shape, mesh=mesh, layout=layout, method=meth,
+                       use_kernel=use_kernel, compute_dtype=compute_dtype,
+                       comm=strategy)
     pplan.validate()
-    return FFT(shape=shape, mesh=mesh, method=method,
+    return FFT(shape=shape, mesh=mesh, method=meth,
                compute_dtype=compute_dtype, use_kernel=use_kernel,
-               overlap_chunks=overlap_chunks, restore_layout=restore_layout,
+               comm=strategy, overlap_chunks=oc,
+               restore_layout=restore_layout,
                batch_spec=batch_spec, pplan=pplan)
+
+
+def _resolve_comm(shape, layout, mesh_shape, comm, overlap_chunks, method):
+    """Cost-model resolution of (strategy, overlap_chunks, method) for
+    the pencil ranks. Explicit user choices always win; the selector
+    runs only under comm='auto' (an explicit strategy keeps the
+    documented overlap_chunks default of 1)."""
+    if comm != 'auto':
+        return comm, 1 if overlap_chunks is None else overlap_chunks, method
+    sel = commlib.cost.select(shape, layout, mesh_shape, method=method)
+    oc = overlap_chunks if overlap_chunks is not None else sel.overlap_chunks
+    meth = sel.method if method == 'auto' else method
+    return sel.strategy, oc, meth
+
+
+def _resolve_comm_1d(factors, axes, mesh_shape, comm, overlap_chunks, method):
+    """Rank-1 resolution: strategy by the four-step schedule's cost;
+    overlap stays 1 unless the caller asks (it needs a batch axis only
+    present at execution time); method per the two factor lengths."""
+    oc = 1 if overlap_chunks is None else overlap_chunks
+    mesh_axes = tuple(axes) if len(axes) > 1 else axes[0]
+    if comm == 'auto':
+        n1, n2 = factors
+        costs = {
+            name: commlib.cost.large1d_plan_cost(
+                n1, n2, mesh_axes, mesh_shape, method=method, strategy=name)
+            for name in commlib.names()}
+        comm = min(costs, key=lambda k: costs[k].cycles)
+        if method == 'auto':
+            picks = {commlib.cost.select_method(n) for n in factors}
+            method = picks.pop() if len(picks) == 1 else 'auto'
+    return comm, oc, method
 
 
 class FFT:
@@ -147,7 +198,7 @@ class FFT:
     """
 
     def __init__(self, *, shape, mesh, method, compute_dtype, use_kernel,
-                 overlap_chunks, restore_layout, batch_spec,
+                 comm, overlap_chunks, restore_layout, batch_spec,
                  pplan: Optional[PencilPlan] = None,
                  axes1d: Optional[Tuple[str, ...]] = None,
                  factors: Optional[Tuple[int, int]] = None):
@@ -157,6 +208,7 @@ class FFT:
         self.method = method
         self.compute_dtype = compute_dtype
         self.use_kernel = use_kernel
+        self.comm = comm
         self.overlap_chunks = overlap_chunks
         self.restore_layout = restore_layout
         self.batch_spec = batch_spec
@@ -255,7 +307,8 @@ class FFT:
                 f1, f2, self.mesh, self._axes1d, inverse=inverse,
                 natural_order=True, method=self.method,
                 use_kernel=self.use_kernel, compute_dtype=self.compute_dtype,
-                batch=batch, batch_spec=self.batch_spec)
+                batch=batch, batch_spec=self.batch_spec, comm=self.comm,
+                overlap_chunks=self.overlap_chunks)
         else:
             fn, _, _ = pencil.make_fft(
                 self._pplan, inverse=inverse,
@@ -299,7 +352,36 @@ class FFT:
 
         return jax.jit(run_complex)
 
+    # -- cost model ---------------------------------------------------------
+
+    def plan_cost(self, precision: str = 'fp32'):
+        """The paper's cycle model (Eqs. 1-12, extended) applied to this
+        plan's schedule under its resolved strategy/method/overlap:
+        returns a :class:`repro.comm.cost.PlanCost`."""
+        mesh_shape = dict(self.mesh.shape)
+        if self.rank == 1:
+            n1, n2 = self._factors
+            ax = self._axes1d
+            return commlib.cost.large1d_plan_cost(
+                n1, n2, tuple(ax) if len(ax) > 1 else ax[0], mesh_shape,
+                precision=precision, method=self.method, strategy=self.comm,
+                overlap_chunks=self.overlap_chunks)
+        return commlib.cost.pencil_plan_cost(
+            self.shape, self._pplan.layout, mesh_shape, precision=precision,
+            method=self.method, strategy=self.comm,
+            overlap_chunks=self.overlap_chunks)
+
+    def cost_report(self, precision: str = 'fp32') -> str:
+        """Predicted cycles per superstep/transpose, formatted next to
+        the paper's Table-1 entries when the config matches a measured
+        one (n^3 cube, m-pencil mesh). Works on AbstractMesh plans, so
+        the paper's 512^3 / 512x512 config can be priced without
+        devices."""
+        return commlib.cost.format_report(self.plan_cost(precision),
+                                          self.shape, dict(self.mesh.shape))
+
     def __repr__(self):
         return (f"FFT(shape={self.shape}, rank={self.rank}, "
-                f"method={self.method!r}, mesh={dict(self.mesh.shape)}, "
+                f"method={self.method!r}, comm={self.comm!r}, "
+                f"mesh={dict(self.mesh.shape)}, "
                 f"batch_spec={self.batch_spec!r})")

@@ -3,9 +3,12 @@
 The length-n transform is factored n = n1 * n2 and viewed as the 2-D
 array A[k1, k2] (k = k1*n2 + k2) with rows sharded over the flattened
 mesh; columns DFT -> inter-factor twiddle -> rows DFT, with one
-all_to_all ownership swap on each side — the 1-D analogue of the
-paper's pencil supersteps (and the TPU adaptation the paper cites
-as [17]).
+ownership swap on each side — the 1-D analogue of the paper's pencil
+supersteps (and the TPU adaptation the paper cites as [17]). The swaps
+dispatch through the :mod:`repro.comm` strategy registry; with a batch
+axis present, ``overlap_chunks`` pipelines the whole four-step over
+batch chunks so chunk i+1's DFTs overlap chunk i's exchanges
+(:mod:`repro.comm.overlap`).
 
 Internal to ``repro.fft`` — users should go through ``repro.fft.plan``,
 which also handles the (n,) <-> (n1, n2) view and the natural-order
@@ -15,32 +18,29 @@ from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import redistribute as rd
+from repro import comm as commlib
+from repro.comm import overlap as ov
 from repro.core.compat import shard_map
 from repro.fft import methods
 
 
-def _flat_axis_index(ax, sizes):
-    """Row-major flattened index over a tuple of mesh axis names (matches
-    the group order all_to_all uses for tuple axis names). ``sizes`` maps
-    axis name -> extent (static, from the mesh; older jax has no
-    ``lax.axis_size`` to read it from inside the shard_map)."""
-    if isinstance(ax, str):
-        return lax.axis_index(ax)
-    idx = lax.axis_index(ax[0])
-    for a in ax[1:]:
-        idx = idx * sizes[a] + lax.axis_index(a)
-    return idx
+def _flat_axis_index(ax, sizes=None):
+    """DEPRECATED alias of :func:`repro.comm.group_index` (kept for the
+    ``core.distributed`` shim): row-major flattened index over a tuple
+    of mesh axis names, matching the group order all_to_all uses.
+    ``sizes`` is ignored — the comm helper reads extents with the
+    static ``lax.psum(1, axis)`` idiom."""
+    return commlib.group_index(ax)
 
 
 def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
                      inverse: bool = False, natural_order: bool = False,
                      method: str = 'auto', use_kernel: bool = False,
                      compute_dtype=None, batch: bool = False,
-                     batch_spec=None):
+                     batch_spec=None, comm: str = 'all_to_all',
+                     overlap_chunks: int = 1):
     """1-D FFT of length n = n1*n2 as a distributed four-step.
 
     Input x viewed as row-major A[k1, k2] (k = k1*n2 + k2), rows sharded
@@ -48,9 +48,12 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
     D[j1, j2] (factor-transposed order), or the natural-order (n2, n1)
     matrix when ``natural_order``. With ``batch`` (or ``batch_spec``)
     one leading batch axis rides along, replicated or sharded over
-    ``batch_spec``.
+    ``batch_spec``; ``overlap_chunks > 1`` pipelines the schedule over
+    chunks of that batch axis. ``comm`` names the redistribution
+    strategy (:mod:`repro.comm`).
     """
     methods.validate(method)
+    commlib.validate(comm)
     n = n1 * n2
     ax = mesh_axes if isinstance(mesh_axes, tuple) else (mesh_axes,)
     psize = 1
@@ -59,17 +62,19 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
     if n1 % psize or n2 % psize:
         raise ValueError(f"{psize} devices must divide both factors ({n1},{n2})")
     off = 1 if (batch or batch_spec is not None) else 0
+    mesh_axis = ax if len(ax) > 1 else ax[0]
+    strategy = commlib.resolve(comm)
 
-    def local(ar, ai):
+    def body(ar, ai):
         # in: (n1/p, n2) rows-sharded. swap -> (n1, n2/p)
-        ar = rd.swap_axes(ar, ax, shard_pos=off + 0, mem_pos=off + 1)
-        ai = rd.swap_axes(ai, ax, shard_pos=off + 0, mem_pos=off + 1)
+        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
         # columns DFT over k1 (local axis 0)
         ar, ai = methods.apply(ar, ai, axis=off + 0, inverse=inverse,
                                method=method, compute_dtype=compute_dtype,
                                use_kernel=use_kernel)
         # twiddle W[j1, k2_global] on the local k2 chunk
-        idx = _flat_axis_index(ax, dict(plan_mesh.shape))
+        idx = commlib.group_index(mesh_axis)
         m2 = n2 // psize
         k2 = idx * m2 + jnp.arange(m2)
         j1 = jnp.arange(n1)
@@ -79,19 +84,26 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
             wi = -wi
         ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
         # swap back -> (n1/p, n2); rows DFT over k2 (local axis 1)
-        ar = rd.swap_axes(ar, ax, shard_pos=off + 1, mem_pos=off + 0)
-        ai = rd.swap_axes(ai, ax, shard_pos=off + 1, mem_pos=off + 0)
+        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
+        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
         ar, ai = methods.apply(ar, ai, axis=off + 1, inverse=inverse,
                                method=method, compute_dtype=compute_dtype,
                                use_kernel=use_kernel)
         if natural_order:
             # content transpose D -> D.T: exchange ownership then local T
-            ar = rd.swap_axes(ar, ax, shard_pos=off + 0, mem_pos=off + 1)
-            ai = rd.swap_axes(ai, ax, shard_pos=off + 0, mem_pos=off + 1)
+            ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+            ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
             ar = ar.swapaxes(off + 0, off + 1)          # (n2/p, n1)
             ai = ai.swapaxes(off + 0, off + 1)
         return ar, ai
 
-    spec = P(*(((batch_spec,) if off else ()) + (ax, None)))
+    def local(ar, ai):
+        # the whole four-step is batch-independent: pipelining it over
+        # batch chunks overlaps chunk i's swaps with chunk i+1's DFTs
+        if off and overlap_chunks > 1 and ar.shape[0] % overlap_chunks == 0:
+            return ov.pipelined(overlap_chunks, 0, body, ar, ai)
+        return body(ar, ai)
+
+    spec = P(*(((batch_spec,) if off else ()) + (mesh_axis, None)))
     return shard_map(local, mesh=plan_mesh, in_specs=(spec, spec),
                      out_specs=(spec, spec))

@@ -11,7 +11,9 @@ rotates: P('x','y',None) -> P('y',None,'x') after a forward 3-D FFT.
 
 Beyond the paper: ``overlap_chunks`` splits the local pencil batch so
 chunk i+1's compute can overlap chunk i's collective (XLA latency-hiding
-scheduler materializes the overlap on TPU); the local pencil algorithm
+scheduler materializes the overlap on TPU) — the chunking machinery
+lives in :mod:`repro.comm.overlap` so it composes with any registered
+redistribution strategy (``plan.comm``); the local pencil algorithm
 comes from the single method registry (`repro.fft.methods`), including
 the MXU matmul form and the block-complex state.
 
@@ -26,8 +28,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import comm
+from repro.comm import overlap as ov
 from repro.core import plan as planlib
-from repro.core import redistribute as rd
 from repro.core.compat import shard_map
 from repro.core.plan import Layout, PencilPlan
 from repro.fft import methods
@@ -99,11 +102,13 @@ def _fft_along(re, im, axis: int, *, inverse: bool, plan: PencilPlan) -> Planar:
 def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
              batch_ndim: int, overlap_chunks: int) -> Planar:
     """Run fft/swap steps, threading the layout. When overlap_chunks > 1
-    each (fft, swap) pair is pipelined over chunks of the leading local
-    pencil-batch axis so compute of chunk i+1 overlaps the all_to_all of
-    chunk i (beyond-paper)."""
+    each (fft, swap) pair is pipelined (via repro.comm.overlap) over
+    chunks of a free local axis so compute of chunk i+1 overlaps the
+    collective of chunk i (beyond-paper); swaps dispatch through the
+    plan's registered comm strategy."""
     off = batch_ndim
     lay = layout
+    strategy = comm.resolve(plan.comm)
     i = 0
     while i < len(steps):
         step = steps[i]
@@ -115,21 +120,17 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
             sp = planlib.owner_pos(lay, mesh_axis)
             # chunk axis: a local axis that is neither the fft axis nor the
             # swap axes; fall back to no overlap if none exists.
-            cand = [p for p in range(len(lay))
-                    if p not in (mem, mem_pos, sp)
-                    and plan.local_shape(lay)[p] % overlap_chunks == 0]
-            if cand:
-                ck = off + cand[0]
-                res_r, res_i = [], []
-                for cr, ci in zip(jnp.split(re, overlap_chunks, axis=ck),
-                                  jnp.split(im, overlap_chunks, axis=ck)):
-                    cr, ci = _fft_along(cr, ci, off + mem, inverse=inverse, plan=plan)
-                    cr = rd.swap_axes(cr, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
-                    ci = rd.swap_axes(ci, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
-                    res_r.append(cr)
-                    res_i.append(ci)
-                re = jnp.concatenate(res_r, axis=ck)
-                im = jnp.concatenate(res_i, axis=ck)
+            ck = ov.pick_chunk_axis(plan.local_shape(lay),
+                                    (mem, mem_pos, sp), overlap_chunks)
+            if ck is not None:
+                re, im = ov.overlapped_fft_swap(
+                    re, im,
+                    fft_fn=lambda r, i_, m=mem: _fft_along(
+                        r, i_, off + m, inverse=inverse, plan=plan),
+                    swap_fn=lambda a, ma=mesh_axis, s=sp, mp=mem_pos:
+                        strategy.swap_axes(a, ma, shard_pos=off + s,
+                                           mem_pos=off + mp),
+                    chunk_axis=off + ck, n_chunks=overlap_chunks)
                 lay = planlib.swap(lay, mesh_axis, mem_pos)
                 i += 2
                 continue
@@ -138,8 +139,10 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
         else:
             _, mesh_axis, mem_pos = step
             sp = planlib.owner_pos(lay, mesh_axis)
-            re = rd.swap_axes(re, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
-            im = rd.swap_axes(im, mesh_axis, shard_pos=off + sp, mem_pos=off + mem_pos)
+            re = strategy.swap_axes(re, mesh_axis, shard_pos=off + sp,
+                                    mem_pos=off + mem_pos)
+            im = strategy.swap_axes(im, mesh_axis, shard_pos=off + sp,
+                                    mem_pos=off + mem_pos)
             lay = planlib.swap(lay, mesh_axis, mem_pos)
         i += 1
     return re, im
@@ -166,6 +169,7 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
     """
     plan.validate()
     methods.validate(plan.method)
+    comm.validate(plan.comm)
     if inverse:
         steps, _ = inverse_schedule(plan.layout)
         in_layout, out_layout = forward_schedule(plan.layout)[1], plan.layout
@@ -194,6 +198,7 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
             x = jnp.stack([re, im])
             off = batch_ndim + 1
             lay = in_layout
+            strategy = comm.resolve(plan.comm)
             for step in steps:
                 if step[0] == 'fft':
                     x = methods.apply_block(
@@ -210,8 +215,8 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                         # across the all_to_all, doubling transpose
                         # bytes (measured; CPU-backend dots upcast bf16)
                         x = jax.lax.optimization_barrier(x)
-                    x = rd.swap_axes(x, mesh_axis, shard_pos=off + sp,
-                                     mem_pos=off + mem_pos)
+                    x = strategy.swap_axes(x, mesh_axis, shard_pos=off + sp,
+                                           mem_pos=off + mem_pos)
                     if narrow:
                         x = jax.lax.optimization_barrier(x)
                     lay = planlib.swap(lay, mesh_axis, mem_pos)

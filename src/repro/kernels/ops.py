@@ -32,6 +32,8 @@ def pencil_fft(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
     ``use_kernel`` the Pallas kernels run (interpret mode defaults to
     True off-TPU).
     """
+    from repro.core._deprecated import warn_once
+    warn_once('repro.kernels.ops.pencil_fft', 'repro.fft.methods.apply')
     from repro.fft import methods
     return methods.apply(re, im, inverse=inverse, method=method,
                          use_kernel=use_kernel, interpret=interpret)

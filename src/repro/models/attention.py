@@ -8,10 +8,11 @@
   compressed latent (kv_lora + rope dims) per token.
 * ``ulysses`` — sequence-parallel attention. This is the paper's pencil
   transpose applied to an LM: activations arrive sequence-sharded over
-  the 'model' mesh axis, one all_to_all (redistribute.swap_axes — the
-  exact primitive wsFFT uses between supersteps) re-shards heads instead
-  of sequence, local attention runs on full-length pencils, and a second
-  all_to_all restores sequence sharding.
+  the 'model' mesh axis, one ownership swap (repro.comm.swap_axes — the
+  exact primitive wsFFT uses between supersteps, under any registered
+  strategy) re-shards heads instead of sequence, local attention runs on
+  full-length pencils, and a second swap restores sequence sharding;
+  ``overlap_chunks`` pipelines the whole thing over head groups.
 """
 from __future__ import annotations
 
@@ -22,7 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import redistribute as rd
+from repro import comm
+from repro.comm import overlap as ov
 from repro.models import layers as L
 from repro.models.layers import PSpec
 
@@ -124,27 +126,57 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 def ulysses_attention(q, k, v, mesh, *, seq_axis: str = 'model',
                       batch_spec=P(), causal: bool = True, window: int = 0,
-                      chunk: int = 1024) -> jnp.ndarray:
+                      chunk: int = 1024, comm_strategy: str = 'all_to_all',
+                      overlap_chunks: int = 1) -> jnp.ndarray:
     """Attention over sequence-sharded activations.
 
     In-specs: q/k/v sharded (batch..., seq/p, heads, D) over ``seq_axis``.
-    Inside shard_map: swap seq<->heads via the same tiled all_to_all the
-    FFT supersteps use (rd.swap_axes), attend over the full sequence with
-    heads/p local heads, swap back. KV heads that don't divide p are
-    all-gathered instead (MQA/GQA fallback).
+    Inside shard_map: swap seq<->heads via the same ownership exchange
+    the FFT supersteps use (``repro.comm``, any registered
+    ``comm_strategy``), attend over the full sequence with heads/p local
+    heads, swap back. KV heads that don't divide p are all-gathered
+    instead (MQA/GQA fallback).
+
+    ``overlap_chunks > 1`` pipelines the whole exchange-attend-exchange
+    over head groups (heads are independent), so chunk i+1's attention
+    overlaps chunk i's collectives; requires both H and KH divisible by
+    ``overlap_chunks * p`` (falls back to the unpipelined path
+    otherwise).
     """
     p = mesh.shape[seq_axis]
     H, KH = q.shape[-2], k.shape[-2]
     if H % p:
         raise ValueError(f'{H} heads not divisible by SP degree {p}')
     spec = P(*batch_spec, seq_axis, None, None)
+    # NB: 'auto' here means the default schedule, not cost-selection —
+    # the cost model drives choices at the fft.plan layer only
+    strategy = comm.resolve(comm_strategy)
+
+    def swap_in(t):    # seq (axis -3) sharded -> heads (axis -2) sharded
+        return strategy.swap_axes(t, seq_axis, shard_pos=t.ndim - 3,
+                                  mem_pos=t.ndim - 2)
+
+    def swap_out(t):   # heads sharded -> seq sharded
+        return strategy.swap_axes(t, seq_axis, shard_pos=t.ndim - 2,
+                                  mem_pos=t.ndim - 3)
 
     def local(ql, kl, vl):
-        # seq (axis -3) sharded -> heads (axis -2) sharded
-        ql = rd.swap_axes(ql, seq_axis, shard_pos=ql.ndim - 3, mem_pos=ql.ndim - 2)
+        if (overlap_chunks > 1 and H % (overlap_chunks * p) == 0
+                and KH % (overlap_chunks * p) == 0):
+            # chunk q/k/v by the SAME head groups so the positional GQA
+            # pairing inside each chunk matches the global one (groups
+            # nest within chunks since KH % overlap_chunks == 0)
+            def stage(qc, kc, vc):
+                qc, kc, vc = swap_in(qc), swap_in(kc), swap_in(vc)
+                o = flash_attention(qc, kc, vc, causal=causal,
+                                    window=window, chunk=chunk)
+                return swap_out(o)
+            return ov.pipelined(overlap_chunks, ql.ndim - 2, stage,
+                                ql, kl, vl)
+        ql = swap_in(ql)
         if KH % p == 0:
-            kl = rd.swap_axes(kl, seq_axis, shard_pos=kl.ndim - 3, mem_pos=kl.ndim - 2)
-            vl = rd.swap_axes(vl, seq_axis, shard_pos=vl.ndim - 3, mem_pos=vl.ndim - 2)
+            kl = swap_in(kl)
+            vl = swap_in(vl)
         else:
             # MQA/GQA with KH < p: gather the sequence, then slice the
             # kv head(s) THIS device's contiguous q-head block maps to —
@@ -162,7 +194,7 @@ def ulysses_attention(q, k, v, mesh, *, seq_axis: str = 'model',
             kl = jax.lax.dynamic_slice_in_dim(kl, start, count, axis=kl.ndim - 2)
             vl = jax.lax.dynamic_slice_in_dim(vl, start, count, axis=vl.ndim - 2)
         o = flash_attention(ql, kl, vl, causal=causal, window=window, chunk=chunk)
-        return rd.swap_axes(o, seq_axis, shard_pos=o.ndim - 2, mem_pos=o.ndim - 3)
+        return swap_out(o)
 
     from repro.core.compat import shard_map
     fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),

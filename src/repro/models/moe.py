@@ -11,7 +11,8 @@ EP is the paper's row all-to-all: the (groups, E, C, D) dispatch buffer
 is sharding-constrained to put E on 'model' while tokens arrive
 data-sharded — under pjit XLA lowers the re-sharding to an all-to-all
 along 'model', the same collective wsFFT issues between supersteps. An
-explicit shard_map variant using redistribute.swap_axes directly is
+explicit shard_map variant using repro.comm.swap_axes directly (any
+registered strategy, optional capacity-chunked compute/comm overlap) is
 provided for the perf study (moe_ep_explicit).
 """
 from __future__ import annotations
@@ -141,12 +142,20 @@ def moe_apply(p: Dict, cfg, x, *, rules=None) -> Tuple[jnp.ndarray, jnp.ndarray]
 # ---------------------------------------------------------------------------
 
 def moe_ep_explicit(p: Dict, cfg, x, mesh, *, ep_axis: str = 'model',
-                    batch_spec=P('data'), fsdp_axes=None
+                    batch_spec=P('data'), fsdp_axes=None,
+                    comm_strategy: str = 'all_to_all',
+                    overlap_chunks: int = 1
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Same math, but every re-sharding is an explicit
-    redistribute.swap_axes (tiled all_to_all) along the EP axis — the
-    identical primitive wsFFT uses between supersteps — plus an explicit
+    repro.comm ownership swap (``comm_strategy`` picks the schedule;
+    default the tiled all_to_all) along the EP axis — the identical
+    primitive wsFFT uses between supersteps — plus an explicit
     all-gather of the FSDP-sharded expert weights at use.
+    ``overlap_chunks > 1`` pipelines dispatch-a2a -> expert FFN ->
+    return-a2a over capacity chunks (repro.comm.overlap), so chunk
+    i+1's expert matmul overlaps chunk i's exchanges; the expert
+    capacity itself never depends on the knob (chunking falls back to
+    the unpipelined path when the capacity doesn't split evenly).
 
     This is the production train/serve path: under pure pjit XLA's
     sharding propagation either all-reduces the dispatched-hidden
@@ -157,7 +166,11 @@ def moe_ep_explicit(p: Dict, cfg, x, mesh, *, ep_axis: str = 'model',
     reverse all_to_all -> local combine; AD transposes it to the
     mirror-image schedule with reduce-scattered weight gradients.
     """
-    from repro.core import redistribute as rd
+    from repro import comm
+    from repro.comm import overlap as ov
+    # NB: 'auto' here means the default schedule, not cost-selection —
+    # the cost model drives choices at the fft.plan layer only
+    strategy = comm.resolve(comm_strategy)
     B, S, d = x.shape
     E, K = cfg.num_experts, cfg.top_k
     ep = mesh.shape[ep_axis]
@@ -177,21 +190,34 @@ def moe_ep_explicit(p: Dict, cfg, x, mesh, *, ep_axis: str = 'model',
         Bl, Sl, _ = xl.shape
         C = capacity(Sl * Bl, cfg)
         C = ((C + ep - 1) // ep) * ep                  # divisible for a2a
+        # capacity must NOT depend on the pipelining knob (it would
+        # change token-drop behavior); chunk only when C splits evenly
+        chunks = overlap_chunks if C % max(1, overlap_chunks) == 0 else 1
         xf = xl.reshape(Bl * Sl, d)
         order, dest, keep = _dispatch_indices(il.reshape(Bl * Sl, K), E, C)
         tok = order // K
         buf = jnp.zeros((E * C + 1, d), xl.dtype).at[dest].set(xf[tok])
         buf = buf[:E * C].reshape(E, C, d)
-        # EP all-to-all: E sharded, capacity gathered (the FFT transpose)
-        # split axis 0 (experts), concat axis 1 (capacity)
-        buf = rd.swap_axes(buf, ep_axis, shard_pos=1, mem_pos=0)  # (E/ep, C*ep, d)
-        h = jnp.einsum('ecd,edf->ecf', buf, wi_l.astype(buf.dtype),
-                       preferred_element_type=jnp.float32).astype(buf.dtype)
-        g, u = jnp.split(h, 2, axis=-1)
-        out = jnp.einsum('ecf,efd->ecd', jax.nn.silu(g) * u,
-                         wo_l.astype(buf.dtype),
-                         preferred_element_type=jnp.float32).astype(buf.dtype)
-        out = rd.swap_axes(out, ep_axis, shard_pos=0, mem_pos=1)  # (E, C, d)
+
+        def expert_ffn(bufc):
+            # EP all-to-all: E sharded, capacity gathered (the FFT
+            # transpose): split axis 0 (experts), concat axis 1 (capacity)
+            bufc = strategy.swap_axes(bufc, ep_axis, shard_pos=1,
+                                      mem_pos=0)   # (E/ep, C*ep, d)
+            h = jnp.einsum('ecd,edf->ecf', bufc, wi_l.astype(bufc.dtype),
+                           preferred_element_type=jnp.float32
+                           ).astype(bufc.dtype)
+            g, u = jnp.split(h, 2, axis=-1)
+            o = jnp.einsum('ecf,efd->ecd', jax.nn.silu(g) * u,
+                           wo_l.astype(bufc.dtype),
+                           preferred_element_type=jnp.float32
+                           ).astype(bufc.dtype)
+            return strategy.swap_axes(o, ep_axis, shard_pos=0,
+                                      mem_pos=1)   # (E, C, d)
+
+        # every capacity row is independent through the expert FFN, so
+        # the exchange->matmul->exchange pipeline chunks along capacity
+        out = ov.pipelined(chunks, 1, expert_ffn, buf)
         out = jnp.concatenate([out.reshape(E * C, d),
                                jnp.zeros((1, d), out.dtype)], axis=0)
         y_sorted = out[dest] * keep[:, None].astype(out.dtype)

@@ -1,0 +1,95 @@
+"""The compatibility shims emit a one-time DeprecationWarning naming
+their replacement (and only one — the warning must not spam every
+call)."""
+import importlib
+import warnings
+
+import pytest
+import jax.numpy as jnp
+
+from repro.core import _deprecated
+
+
+def _fresh(name):
+    """Make the one-time warning for shim ``name`` fire again."""
+    _deprecated.reset(name)
+
+
+def test_warn_once_is_once():
+    _fresh('repro.test.dummy')
+    with pytest.warns(DeprecationWarning, match='repro.test.replacement'):
+        _deprecated.warn_once('repro.test.dummy', 'repro.test.replacement')
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter('always')
+        _deprecated.warn_once('repro.test.dummy', 'repro.test.replacement')
+    assert rec == []
+
+
+def test_core_redistribute_shim_warns():
+    import repro.core.redistribute as m
+    _fresh('repro.core.redistribute')
+    with pytest.warns(DeprecationWarning, match='repro.comm'):
+        importlib.reload(m)
+    # and the shim still delegates to the engine
+    from repro import comm
+    assert m.redistribute is comm.redistribute
+    assert m.pod_fold is comm.pod_fold
+
+
+def test_core_distributed_shim_warns():
+    import repro.core.distributed as m
+    _fresh('repro.core.distributed')
+    with pytest.warns(DeprecationWarning, match='repro.fft'):
+        importlib.reload(m)
+
+
+def test_fft1d_entrypoint_warns():
+    from repro.core import fft1d
+    _fresh('repro.core.fft1d.fft1d')
+    re = jnp.zeros((8,), jnp.float32)
+    im = jnp.zeros((8,), jnp.float32)
+    with pytest.warns(DeprecationWarning, match='repro.fft.methods.apply'):
+        fft1d.fft1d(re, im, method='stockham')
+
+
+def test_ops_pencil_fft_warns():
+    from repro.kernels import ops
+    _fresh('repro.kernels.ops.pencil_fft')
+    re = jnp.zeros((8,), jnp.float32)
+    im = jnp.zeros((8,), jnp.float32)
+    with pytest.warns(DeprecationWarning, match='repro.fft.methods.apply'):
+        ops.pencil_fft(re, im, method='stockham')
+
+
+def _shim_offenders(pat, exclude_names):
+    import pathlib
+    import re
+    rx = re.compile(pat, re.M)
+    root = pathlib.Path(__file__).resolve().parents[1] / 'src' / 'repro'
+    return [str(f) for f in root.rglob('*.py')
+            if f.name not in exclude_names and rx.search(f.read_text())]
+
+
+def test_no_internal_module_imports_the_redistribute_shim():
+    """Acceptance: no non-shim module imports core.redistribute — the
+    engine is repro.comm now."""
+    assert not _shim_offenders(
+        r'^\s*(from\s+repro\.core\s+import\s+.*\bredistribute\b'
+        r'|from\s+repro\.core\.redistribute\s+import'
+        r'|import\s+repro\.core\.redistribute)',
+        {'redistribute.py'})
+
+
+def test_no_internal_module_uses_the_other_shims():
+    """The warning filters cannot flag internal shim usage (warn_once
+    fires once, attributed to the shim module itself), so enforce it
+    statically: no src module imports core.distributed or calls the
+    deprecated fft1d.fft1d / ops.pencil_fft entry points."""
+    assert not _shim_offenders(
+        r'^\s*(from\s+repro\.core\s+import\s+.*\bdistributed\b'
+        r'|from\s+repro\.core\.distributed\s+import'
+        r'|import\s+repro\.core\.distributed)',
+        {'distributed.py'})
+    assert not _shim_offenders(r'\bfft1d\.fft1d\(', {'fft1d.py'})
+    assert not _shim_offenders(r'\bops\.pencil_fft\(|\bpencil_fft\(',
+                               {'ops.py'})
