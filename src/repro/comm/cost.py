@@ -16,7 +16,10 @@ to the paper's Table 1 entries.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
 import math
+import os
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.core import wse_model as wm
@@ -45,12 +48,104 @@ def select_method(n: int, precision: wm.Precision = 'fp32') -> str:
 
 
 # ---------------------------------------------------------------------------
+# Measured-cost table (autotune-by-measurement)
+#
+# ``benchmarks/bench_redistribute.py`` writes BENCH_redistribute.json:
+# measured wall-us per (mesh, axis group, strategy, per-device f32
+# element count) on this host. When an entry covers a swap being
+# priced, the selector prefers the measurement over the analytic model
+# — measured numbers beat any model of them — with nearest-size
+# (log-space) interpolation between measured element counts. Unmeasured
+# configs (paper-scale abstract meshes, other hosts) fall back to the
+# analytic model, so paper-faithful costing is untouched.
+# ---------------------------------------------------------------------------
+
+#: environment override for the measured table ('' disables it).
+MEASURED_ENV = 'REPRO_MEASURED_COSTS'
+
+
+def _default_measured_path() -> str:
+    return os.path.join(os.path.dirname(__file__), '..', '..', '..',
+                        'BENCH_redistribute.json')
+
+
+class MeasuredTable:
+    """Measured swap timings: (mesh, group, strategy) -> sorted
+    (per-device f32 elems, us) samples."""
+
+    def __init__(self, rows):
+        table: Dict[Tuple[str, str, str], list] = {}
+        for r in rows:
+            key = (str(r['mesh']), str(r['group']), str(r['strategy']))
+            table.setdefault(key, []).append(
+                (float(r['local_elems']), float(r['us'])))
+        self._table = {k: sorted(v) for k, v in table.items()}
+
+    def __len__(self):
+        return sum(len(v) for v in self._table.values())
+
+    def swap_us(self, strategy: str, mesh_shape: Mapping[str, int],
+                mesh_axis, elems: float) -> Optional[float]:
+        """Interpolated us for ONE array of ``elems`` f32 elements per
+        device, or None when this (mesh, group, strategy) was never
+        measured. A planar complex swap is two such arrays."""
+        mesh_key = 'x'.join(str(v) for v in mesh_shape.values())
+        group = '*'.join(strat.axis_tuple(mesh_axis))
+        pts = self._table.get((mesh_key, group, strategy))
+        if not pts:
+            return None
+        # only trust measurements near the measured size range —
+        # far-extrapolated host timings are worse than the model
+        if not pts[0][0] / 2.0 <= elems <= pts[-1][0] * 2.0:
+            return None
+        if elems <= pts[0][0]:
+            return pts[0][1]
+        if elems >= pts[-1][0]:
+            return pts[-1][1]
+        for (e0, u0), (e1, u1) in zip(pts, pts[1:]):
+            if e0 <= elems <= e1:
+                t = (math.log(elems) - math.log(e0)) / (
+                    math.log(e1) - math.log(e0))
+                return math.exp(math.log(u0) * (1 - t) + math.log(u1) * t)
+        return None  # pragma: no cover
+
+
+@functools.lru_cache(maxsize=8)
+def _load_measured(path: str) -> Optional[MeasuredTable]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        tbl = MeasuredTable(data.get('results', ()))
+        return tbl if len(tbl) else None
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def measured_table(path: Optional[str] = None) -> Optional[MeasuredTable]:
+    """The active measured-cost table: explicit ``path``, else the
+    ``REPRO_MEASURED_COSTS`` env var ('' disables), else the repo-root
+    BENCH_redistribute.json. None when nothing usable exists."""
+    if path is None:
+        path = os.environ.get(MEASURED_ENV)
+        if path == '':
+            return None
+        if path is None:
+            path = _default_measured_path()
+    return _load_measured(os.path.abspath(path))
+
+
+def _resolve_measured(measured):
+    """'auto' -> the default table; None -> disabled; else as given."""
+    return measured_table() if measured == 'auto' else measured
+
+
+# ---------------------------------------------------------------------------
 # Step-by-step plan costing
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class StepCost:
-    kind: str                 # 'fft' | 'swap' | 'twiddle' | 'reorder'
+    kind: str                 # 'fft' | 'rfft' | 'swap' | 'twiddle' | 'reorder'
     detail: str
     cycles: float
     swap: Optional[wm.SwapCost] = None
@@ -68,6 +163,14 @@ class PlanCost:
     @property
     def serial_cycles(self) -> float:
         return sum(s.cycles for s in self.steps)
+
+    @property
+    def wire_cycles(self) -> float:
+        """Cycles spent on inter-device data movement (ownership swaps
+        plus any np-layout boundary gather) — the share real (rfft)
+        plans halve."""
+        return sum(s.cycles for s in self.steps
+                   if s.kind in ('swap', 'gather'))
 
     @property
     def cycles(self) -> float:
@@ -109,35 +212,90 @@ def _fft_step(n_ax: int, axis: int, elems: int, method: str,
     return StepCost('fft', f'n={n_ax} axis={axis} x{pencils} ({meth})', cyc)
 
 
-def _swap_step(mesh_axis, mesh_shape, elems: int, strategy: str,
-               precision: wm.Precision) -> StepCost:
-    sc = strat.get(strategy).cost(mesh_axis, mesh_shape, elems, precision)
+def _swap_step(mesh_axis, mesh_shape, elems: float, strategy: str,
+               precision: wm.Precision,
+               measured: Optional[MeasuredTable] = None, *,
+               measured_arrays: int = 2,
+               measured_elems: Optional[float] = None) -> StepCost:
+    """One swap of ``elems`` local complex elements. The measured path
+    prices what actually moves: by default a planar pair — two f32
+    arrays of ``elems`` elements each; a single-real-array swap (the
+    rank-1 real four-step's first exchange) passes ``measured_arrays=1``
+    with its own f32 ``measured_elems``."""
     ax = '*'.join(strat.axis_tuple(mesh_axis))
+    if measured is not None:
+        us = measured.swap_us(strategy, mesh_shape, mesh_axis,
+                              elems if measured_elems is None
+                              else measured_elems)
+        if us is not None:
+            cyc = measured_arrays * us * (wm.CLOCK_HZ / 1e6)
+            p = strat.static_group_size(mesh_axis, mesh_shape)
+            sc = wm.SwapCost(strategy, p, elems, cyc, 0.0)
+            return StepCost('swap', f'{ax} p={p} ({strategy}, measured)',
+                            cyc, sc)
+    sc = strat.get(strategy).cost(mesh_axis, mesh_shape, elems, precision)
     return StepCost('swap', f'{ax} p={sc.p} ({sc.strategy})', sc.cycles, sc)
+
+
+def _rfft_step(n_ax: int, axis: int, elems: int, method: str,
+               precision: wm.Precision) -> StepCost:
+    pencils = elems // n_ax
+    meth = (select_method(max(n_ax // 2, 1), precision)
+            if method == 'auto' else method)
+    cyc = pencils * wm.rfft_pencil_cycles_method(n_ax, precision, meth)
+    return StepCost('rfft', f'n={n_ax} axis={axis} x{pencils} ({meth}, r2c)',
+                    cyc)
 
 
 def pencil_plan_cost(shape: Sequence[int], layout: Layout,
                      mesh_shape: Mapping[str, int], *,
                      precision: wm.Precision = 'fp32',
                      method: str = 'auto', strategy: str = 'all_to_all',
-                     overlap_chunks: int = 1) -> PlanCost:
+                     overlap_chunks: int = 1, real: bool = False,
+                     padded_spectrum: bool = True,
+                     measured='auto') -> PlanCost:
     """Cost the rank-2/3 pencil schedule (``forward_schedule``) step by
-    step. Per-device element count is layout-invariant (= global elems /
-    total devices in the layout), so every swap exchanges ``elems``
-    local complex elements — exactly the paper's n*m^2 at m-pencil
-    granularity."""
+    step. Per-superstep element counts are schedule-dependent: complex
+    plans exchange a layout-invariant ``elems`` per swap (the paper's
+    n*m^2 at m-pencil granularity), while real plans halve every count
+    after the r2c superstep truncates the last axis to its (padded)
+    half spectrum. ``padded_spectrum=False`` adds the facade's
+    np-layout boundary 'gather' of the truncated axis (the default
+    public contract); True prices the pure distributed pipeline.
+    ``measured='auto'`` prefers the measured swap-us table
+    (:func:`measured_table`) over the analytic model for swaps it
+    covers."""
     from repro.fft import pencil as _pencil   # lazy: avoids import cycle
-    steps_sym, _ = _pencil.forward_schedule(tuple(layout))
-    local = _local_shape(shape, layout, mesh_shape)
-    elems = math.prod(local)
+    tbl = _resolve_measured(measured)
+    ra = len(shape) - 1 if real else None
+    steps_sym, final_lay = _pencil.forward_schedule(tuple(layout), ra)
+    p_total = 1
+    for o in layout:
+        p_total *= strat.static_group_size(o, mesh_shape)
+    cur = list(shape)
     out = []
     for step in steps_sym:
+        elems = math.prod(cur) // p_total
         if step[0] == 'fft':
-            out.append(_fft_step(shape[step[1]], step[1], elems, method,
-                                 precision))
+            if real and step[1] == ra:
+                out.append(_rfft_step(cur[ra], ra, elems, method, precision))
+                cur[ra] = _pencil.real_padded_extent(shape, layout,
+                                                     mesh_shape)
+            else:
+                out.append(_fft_step(cur[step[1]], step[1], elems, method,
+                                     precision))
         else:
             out.append(_swap_step(step[1], mesh_shape, elems, strategy,
-                                  precision))
+                                  precision, tbl))
+    if real and not padded_spectrum and final_lay[ra] is not None:
+        # facade boundary: all-gather of the truncated axis into memory
+        # so the public output can carry the odd n//2 + 1 extent
+        p = strat.static_group_size(final_lay[ra], mesh_shape)
+        elems = math.prod(cur) // p_total
+        ax = '*'.join(strat.axis_tuple(final_lay[ra]))
+        out.append(StepCost(
+            'gather', f'{ax} p={p} x{elems} (np-layout boundary)',
+            wm.swap_cycles_a2a(p, elems, precision)))
     return PlanCost(tuple(out), strategy, method, precision, overlap_chunks)
 
 
@@ -146,27 +304,55 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
                       precision: wm.Precision = 'fp32',
                       method: str = 'auto', strategy: str = 'all_to_all',
                       natural_order: bool = True,
-                      overlap_chunks: int = 1) -> PlanCost:
+                      overlap_chunks: int = 1, real: bool = False,
+                      measured='auto') -> PlanCost:
     """Cost the distributed four-step 1-D schedule: swap, n1-DFT,
     twiddle, swap, n2-DFT (+ the natural-order content transpose).
     ``overlap_chunks`` is the plan's pipelining depth — it only takes
     effect at execution time when a batch axis is present, so the
-    pipelined total here is the batched-operand estimate."""
+    pipelined total here is the batched-operand estimate.
+
+    ``real=True`` prices the rows-halved real four-step: the first swap
+    moves ONE real array (half the planar complex wire), the column DFT
+    is r2c (n1 -> padded n1//2 + 1 rows) and everything after runs on
+    the half plane; the trailing 'reorder' is the facade's Hermitian
+    half-plane -> ``np.fft.rfft``-order assembly."""
     ax = mesh_axes if isinstance(mesh_axes, tuple) else (mesh_axes,)
     mesh_axis = ax if len(ax) > 1 else ax[0]
+    tbl = _resolve_measured(measured)
     p = strat.static_group_size(mesh_axis, mesh_shape)
     elems = n1 * n2 // p
+    if real:
+        nh1p = -(-(n1 // 2 + 1) // p) * p
+        half = nh1p * n2 // p
+        steps = [
+            # ONE real f32 array on the wire: half the planar complex
+            # cycles analytically, one elems-sized transfer measured
+            _swap_step(mesh_axis, mesh_shape, elems / 2.0, strategy,
+                       precision, tbl, measured_arrays=1,
+                       measured_elems=float(elems)),
+            _rfft_step(n1, 0, elems, method, precision),
+            StepCost('twiddle', f'W[j1,k2] x{half}',
+                     TWIDDLE_FLOPS_PER_ELEM * half),
+            _swap_step(mesh_axis, mesh_shape, half, strategy, precision,
+                       tbl),
+            _fft_step(n2, 1, half, method, precision),
+            StepCost('reorder', f'half-plane assembly x{half}',
+                     wm.LOCAL_REORDER_CPE * half),
+        ]
+        return PlanCost(tuple(steps), strategy, method, precision,
+                        overlap_chunks)
     steps = [
-        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision),
+        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl),
         _fft_step(n1, 0, elems, method, precision),
         StepCost('twiddle', f'W[j1,k2] x{elems}',
                  TWIDDLE_FLOPS_PER_ELEM * elems),
-        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision),
+        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl),
         _fft_step(n2, 1, elems, method, precision),
     ]
     if natural_order:
         steps.append(_swap_step(mesh_axis, mesh_shape, elems, strategy,
-                                precision))
+                                precision, tbl))
         steps.append(StepCost('reorder', f'local T x{elems}',
                               wm.LOCAL_REORDER_CPE * elems))
     return PlanCost(tuple(steps), strategy, method, precision,
@@ -178,25 +364,43 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
 # ---------------------------------------------------------------------------
 
 def feasible_overlap(shape: Sequence[int], layout: Layout,
-                     mesh_shape: Mapping[str, int]) -> Tuple[int, ...]:
-    """Chunk counts for which *every* (fft, swap) pair of the forward
-    schedule has a free local axis to pipeline over — the same
-    candidate rule the executor applies per pair."""
+                     mesh_shape: Mapping[str, int], *,
+                     real: bool = False) -> Tuple[int, ...]:
+    """Chunk counts for which *every* (fft, swap) pair the executor
+    would pipeline has a free local axis to chunk over — the same
+    candidate rule the executor applies per pair. The r2c superstep of
+    a real plan is never pipelined (it changes the axis extent), and
+    pairs after it see the padded half-spectrum local shape."""
     from repro.fft import pencil as _pencil
     from repro.core import plan as planlib
-    steps, _ = _pencil.forward_schedule(tuple(layout))
+    ra = len(shape) - 1 if real else None
+    steps, _ = _pencil.forward_schedule(tuple(layout), ra)
     lay = tuple(layout)
+    cur = list(shape)
     pair_axes = []
-    for i, step in enumerate(steps):
-        if step[0] == 'swap':
-            _, mesh_axis, mem_pos = step
+    i = 0
+    while i < len(steps):
+        step = steps[i]
+        nxt = steps[i + 1] if i + 1 < len(steps) else None
+        if step[0] == 'fft' and real and step[1] == ra:
+            cur[ra] = _pencil.real_padded_extent(shape, layout, mesh_shape)
+            if nxt is not None and nxt[0] == 'swap':
+                lay = planlib.swap(lay, nxt[1], nxt[2])
+                i += 2
+                continue
+        elif step[0] == 'fft' and nxt is not None and nxt[0] == 'swap':
+            _, mesh_axis, mem_pos = nxt
             sp = planlib.owner_pos(lay, mesh_axis)
-            fft_mem = steps[i - 1][1] if i and steps[i - 1][0] == 'fft' else None
-            local = _local_shape(shape, lay, mesh_shape)
+            local = _local_shape(cur, lay, mesh_shape)
             pair_axes.append(tuple(
                 local[p] for p in range(len(lay))
-                if p not in (mem_pos, sp, fft_mem)))
+                if p not in (mem_pos, sp, step[1])))
             lay = planlib.swap(lay, mesh_axis, mem_pos)
+            i += 2
+            continue
+        elif step[0] == 'swap':
+            lay = planlib.swap(lay, step[1], step[2])
+        i += 1
     ok = []
     for c in _OVERLAP_CANDIDATES:
         if all(any(s % c == 0 and s >= c for s in sizes)
@@ -224,25 +428,33 @@ class Selection:
 def select(shape: Sequence[int], layout: Layout,
            mesh_shape: Mapping[str, int], *,
            precision: wm.Precision = 'fp32', method: str = 'auto',
-           strategies: Optional[Sequence[str]] = None) -> Selection:
+           strategies: Optional[Sequence[str]] = None,
+           real: bool = False, measured='auto') -> Selection:
     """Pick (strategy, overlap_chunks, method) minimizing predicted
     cycles for the pencil schedule of ``shape``/``layout``.
 
     Method: resolved per transform axis by :func:`select_method`; the
     plan gets a concrete name only when all axes agree (otherwise the
     registry's per-length 'auto' rule stays in charge at trace time).
+    ``real`` prices the half-spectrum schedule; ``measured`` (default
+    'auto') lets a measured swap-us table override the analytic swap
+    model where it has data.
     """
     if method == 'auto':
-        picks = {select_method(n, precision) for n in shape}
+        # real plans spend the last axis's flops on a length-n/2 pencil
+        lens = (tuple(shape[:-1]) + (max(shape[-1] // 2, 1),)
+                if real else tuple(shape))
+        picks = {select_method(n, precision) for n in lens}
         method = picks.pop() if len(picks) == 1 else 'auto'
-    chunk_opts = feasible_overlap(shape, layout, mesh_shape)
+    chunk_opts = feasible_overlap(shape, layout, mesh_shape, real=real)
     costs: Dict[str, PlanCost] = {}
     for name in (strategies or strat.names()):
         best = None
         for c in chunk_opts:
             pc = pencil_plan_cost(shape, layout, mesh_shape,
                                   precision=precision, method=method,
-                                  strategy=name, overlap_chunks=c)
+                                  strategy=name, overlap_chunks=c,
+                                  real=real, measured=measured)
             if best is None or pc.cycles < best.cycles:
                 best = pc
         costs[name] = best

@@ -264,6 +264,86 @@ def fft_four_step_block(x: jnp.ndarray, axis: int, *, inverse: bool = False,
 
 
 # ---------------------------------------------------------------------------
+# Real-input pencils: pack-two-reals-as-one-complex rfft / irfft
+# ---------------------------------------------------------------------------
+#
+# The classic halving trick: a length-n real FFT costs one length-n/2
+# *complex* FFT plus an O(n) Hermitian post-combine. Pack c[t] = a[2t] +
+# i*a[2t+1], C = FFT_{n/2}(c); with Cm[k] = C[(n/2-k) mod n/2] the even/
+# odd half-spectra are E = (C + conj(Cm))/2, O = (C - conj(Cm))/(2i) and
+# the half spectrum is A[k] = E[k] + w_n^k O[k] (k < n/2), A[n/2] =
+# E[0] - O[0]. These are the generic ``real_fn`` fallbacks the method
+# registry wraps around any complex pencil implementation.
+
+def rfft_pencil(x: jnp.ndarray, *, cfft, dtype=None) -> Planar:
+    """Half-spectrum rfft of a real array along the last axis.
+
+    ``cfft(re, im) -> (re, im)`` is any length-n/2 *forward* complex FFT
+    (one of the registry pencils). Output planar, last axis n//2 + 1 —
+    exactly ``np.fft.rfft``'s layout. Imaginary parts of bins 0 and n/2
+    are exactly zero by construction (not just numerically)."""
+    n = x.shape[-1]
+    if n % 2:
+        raise ValueError(f"rfft pencil needs an even length, got {n}")
+    h = n // 2
+    if dtype is not None:
+        x = x.astype(dtype)
+    cr, ci = cfft(x[..., 0::2], x[..., 1::2])
+    # Cm[k] = C[(h - k) mod h] — a local index flip, no data movement
+    cmr = jnp.roll(jnp.flip(cr, -1), 1, -1)
+    cmi = jnp.roll(jnp.flip(ci, -1), 1, -1)
+    er, ei = (cr + cmr) * 0.5, (ci - cmi) * 0.5
+    our, oui = (ci + cmi) * 0.5, (cmr - cr) * 0.5
+    wr, wi = (jnp.asarray(a, cr.dtype) for a in tw.rfft_split_twiddle_np(n))
+    ar = er + (our * wr - oui * wi)
+    ai = ei + (our * wi + oui * wr)
+    # A[n/2] = E[0] - O[0]; E[0], O[0] are exactly real (Cm[0] == C[0])
+    edge_r = er[..., :1] - our[..., :1]
+    return (jnp.concatenate([ar, edge_r], axis=-1),
+            jnp.concatenate([ai, jnp.zeros_like(edge_r)], axis=-1))
+
+
+def irfft_pencil(re: jnp.ndarray, im: jnp.ndarray, *, cifft) -> jnp.ndarray:
+    """Exact inverse of :func:`rfft_pencil`: planar half spectrum (last
+    axis n//2 + 1) -> real array (last axis n). ``cifft`` is any
+    length-n/2 *inverse* complex FFT (with its 1/(n/2) scaling), so the
+    1/n normalization of ``np.fft.irfft`` comes out exactly."""
+    nh = re.shape[-1]
+    h = nh - 1
+    n = 2 * h
+    if h < 1:
+        raise ValueError(f"irfft pencil needs >= 2 spectrum bins, got {nh}")
+    ar, ai = re[..., :h], im[..., :h]
+    # Am[k] = A[h - k], k in [0, h)
+    amr = jnp.flip(re[..., 1:], -1)
+    ami = jnp.flip(im[..., 1:], -1)
+    er, ei = (ar + amr) * 0.5, (ai - ami) * 0.5
+    # w^k O[k] = (A[k] - conj(Am[k])) / 2, then rotate by w^{-k}
+    tr, ti = (ar - amr) * 0.5, (ai + ami) * 0.5
+    wr, wi = (jnp.asarray(a, ar.dtype) for a in tw.rfft_split_twiddle_np(n))
+    our = tr * wr + ti * wi
+    oui = ti * wr - tr * wi
+    cr, ci = cifft(er - oui, ei + our)
+    return jnp.stack([cr, ci], axis=-1).reshape(re.shape[:-1] + (n,))
+
+
+def rfft_via(pencil_fn):
+    """Generic ``real_fn`` for the method registry: wrap a registered
+    complex pencil (``(re, im, *, inverse, compute_dtype) -> (re, im)``)
+    with the pack/combine halving trick. Forward maps a real array to
+    the planar half spectrum; inverse maps it back."""
+    def real_fn(x, im=None, *, inverse=False, compute_dtype=None):
+        if inverse:
+            return irfft_pencil(
+                x, im, cifft=lambda r, i: pencil_fn(
+                    r, i, inverse=True, compute_dtype=compute_dtype))
+        return rfft_pencil(
+            x, cfft=lambda r, i: pencil_fn(
+                r, i, inverse=False, compute_dtype=compute_dtype))
+    return real_fn
+
+
+# ---------------------------------------------------------------------------
 # Direct DFT (oracle-grade for tiny sizes, also used for non-pow2 factors)
 # ---------------------------------------------------------------------------
 

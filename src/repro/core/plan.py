@@ -85,6 +85,11 @@ class PencilPlan:
     compute_dtype  matmul operand dtype for the four-step (bf16 study)
     comm        redistribution strategy from the repro.comm registry
                 ('all_to_all'|'ppermute'|'hierarchical')
+    real        real-input (rfft) plan: the LAST axis is transformed
+                real-to-complex in the first superstep, and every later
+                superstep/swap sees its conjugate-symmetric half
+                spectrum (n -> n//2 + 1 bins, padded for even
+                sharding) — half the wire bytes and pencil flops.
     """
     shape: Tuple[int, ...]
     mesh: Mesh
@@ -93,6 +98,13 @@ class PencilPlan:
     use_kernel: bool = False
     compute_dtype: Optional[object] = None
     comm: str = 'all_to_all'
+    real: bool = False
+
+    @property
+    def real_axis(self) -> Optional[int]:
+        """Array axis the r2c/c2r transform runs along (always the last
+        axis, matching ``np.fft.rfftn``), or None for complex plans."""
+        return len(self.shape) - 1 if self.real else None
 
     def axis_size(self, mesh_axis: MeshAxis) -> int:
         if mesh_axis is None:
@@ -113,6 +125,14 @@ class PencilPlan:
             p = self.axis_size(o)
             if s % p:
                 raise ValueError(f"axis size {s} not divisible by mesh extent {p} ({o})")
+        if self.real:
+            if self.layout[-1] is not None:
+                raise ValueError(
+                    f"real plans transform the last axis first, so it must "
+                    f"start in memory (None), got layout {self.layout}")
+            if self.shape[-1] % 2:
+                raise ValueError(
+                    f"real plans need an even last axis, got {self.shape}")
 
     def sharding(self, layout: Optional[Layout] = None) -> NamedSharding:
         return NamedSharding(self.mesh, spec_of(self.layout if layout is None else layout))

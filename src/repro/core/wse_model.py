@@ -245,6 +245,22 @@ def pencil_cycles_method(n: int, precision: Precision,
     return pencil_cycles(n, precision)
 
 
+#: real flops per *input* element of the rfft Hermitian post-combine
+#: (split E/O halves + one twiddle rotation: ~10 flops per output bin,
+#: one bin per two inputs) and of its inverse pre-combine.
+RFFT_COMBINE_CPE = 5.0
+
+
+def rfft_pencil_cycles_method(n: int, precision: Precision,
+                              method: str = 'stockham') -> float:
+    """Per-PE cycles for one length-n REAL pencil under a named local
+    algorithm: the pack-two-reals trick runs one length-n/2 complex
+    pencil plus an O(n) combine pass — the halved-flops half of the
+    rfft story (the halved-wire half is the schedule's)."""
+    return (pencil_cycles_method(max(n // 2, 1), precision, method)
+            + RFFT_COMBINE_CPE * n)
+
+
 def pencil_flops_per_cycle(n: int, precision: Precision) -> float:
     return fft_flops_1d(n) / pencil_cycles(n, precision)
 

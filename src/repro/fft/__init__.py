@@ -10,6 +10,10 @@ Plan/execute model (FFTW-style)::
 
     re, im = p.forward((re, im))         # planar pairs work identically
 
+    rp = fft.rplan((n, n, n), mesh)      # real-input (rfft/irfft) plan:
+    spec = rp.forward(x_real)            # half spectrum (.., n//2 + 1),
+    x3 = rp.inverse(spec)                # ~half the wire bytes and flops
+
 Everything else in the repo (``core.distributed``, ``core.fft1d``,
 ``kernels.ops``) is either internal machinery or a deprecated shim over
 this package. Local pencil algorithms live in the single registry
@@ -20,8 +24,9 @@ predicted per-superstep cycles).
 """
 from repro import comm as _comm
 from repro.fft import methods
-from repro.fft.api import FFT, plan
+from repro.fft.api import FFT, plan, rplan
 from repro.fft.methods import apply as apply_method
+from repro.fft.methods import apply_real as apply_real_method
 
 
 def available_methods():
@@ -34,5 +39,6 @@ def available_comm_strategies():
     return _comm.names() + ('auto',)
 
 
-__all__ = ['FFT', 'plan', 'methods', 'apply_method', 'available_methods',
+__all__ = ['FFT', 'plan', 'rplan', 'methods', 'apply_method',
+           'apply_real_method', 'available_methods',
            'available_comm_strategies']

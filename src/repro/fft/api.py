@@ -47,7 +47,8 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
          layout: Optional[Layout] = None,
          comm: str = 'auto', overlap_chunks: Optional[int] = None,
          restore_layout: bool = False,
-         batch_spec: Optional[str] = None) -> 'FFT':
+         batch_spec: Optional[str] = None,
+         real: bool = False, padded_spectrum: bool = False) -> 'FFT':
     """Plan a distributed FFT of a ``len(shape)``-dimensional array.
 
     Args:
@@ -82,6 +83,27 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         sharded over (each transform instance stays inside one slice of
         that axis). Replicated batch dims need no declaration — any
         leading dims on the operand are batched automatically.
+      real: plan an rfft/irfft pair (``np.fft.rfftn`` semantics):
+        ``forward`` consumes a REAL array of ``shape`` and returns the
+        conjugate-symmetric half spectrum — last axis truncated to
+        ``shape[-1]//2 + 1`` — and ``inverse`` round-trips it back to
+        the real array. The first superstep transforms real pencils
+        (one length-n/2 complex pencil + an O(n) Hermitian combine per
+        pencil), so every later superstep and every transpose moves
+        roughly HALF the bytes and flops of the matching complex plan;
+        ``comm='auto'`` prices that halved schedule. See also
+        :func:`rplan`.
+      padded_spectrum: real ranks 2/3 only. The truncated half axis
+        (odd extent n//2 + 1) cannot shard evenly, so the default
+        ``np.fft.rfftn``-layout output gathers it into memory — one
+        boundary collective the cost report prices as a 'gather' step.
+        With ``padded_spectrum=True`` the plan instead exposes its
+        NATIVE spectrum: last axis zero-padded to the even on-wire
+        extent, fully distributed in the rotated layout, no boundary
+        collective at all — the pure half-wire pipeline. Spectral
+        elementwise updates work unchanged (pad bins are dropped by the
+        inverse before the c2r step) — use this for in-situ
+        forward/update/inverse loops and large meshes.
 
     Returns an :class:`FFT` plan with ``forward``/``inverse``/
     ``in_sharding``/``out_sharding``/``cost_report``.
@@ -90,6 +112,11 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
     rank = len(shape)
     if rank not in (1, 2, 3):
         raise ValueError(f"repro.fft.plan supports ranks 1-3, got shape {shape}")
+    if real and shape[-1] % 2:
+        raise ValueError(f"real plans need an even last axis, got {shape}")
+    if padded_spectrum and (not real or rank == 1):
+        raise ValueError("padded_spectrum applies to real plans of "
+                         "rank 2/3 only")
     methods.validate(method)
     commlib.validate(comm)
     if batch_spec is not None and batch_spec not in mesh.axis_names:
@@ -113,11 +140,12 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
                 f"rank-1 FFT of n={n} factors as {n1}x{n2}; the {psize} "
                 f"devices of mesh axes {axes} must divide both factors")
         strategy, oc, meth = _resolve_comm_1d(
-            (n1, n2), axes, dict(mesh.shape), comm, overlap_chunks, method)
+            (n1, n2), axes, dict(mesh.shape), comm, overlap_chunks, method,
+            real)
         return FFT(shape=shape, mesh=mesh, method=meth,
                    compute_dtype=compute_dtype, use_kernel=use_kernel,
                    comm=strategy, overlap_chunks=oc,
-                   restore_layout=restore_layout,
+                   restore_layout=restore_layout, real=real,
                    batch_spec=batch_spec, axes1d=axes, factors=(n1, n2))
 
     if layout is None:
@@ -142,32 +170,44 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
                         f"rank-3 FFT needs two mesh axes, mesh has {cand}")
             layout = (row, col, None)
     strategy, oc, meth = _resolve_comm(
-        shape, layout, dict(mesh.shape), comm, overlap_chunks, method)
+        shape, layout, dict(mesh.shape), comm, overlap_chunks, method, real)
     pplan = PencilPlan(shape=shape, mesh=mesh, layout=layout, method=meth,
                        use_kernel=use_kernel, compute_dtype=compute_dtype,
-                       comm=strategy)
+                       comm=strategy, real=real)
     pplan.validate()
     return FFT(shape=shape, mesh=mesh, method=meth,
                compute_dtype=compute_dtype, use_kernel=use_kernel,
                comm=strategy, overlap_chunks=oc,
-               restore_layout=restore_layout,
+               restore_layout=restore_layout, real=real,
+               padded_spectrum=padded_spectrum,
                batch_spec=batch_spec, pplan=pplan)
 
 
-def _resolve_comm(shape, layout, mesh_shape, comm, overlap_chunks, method):
+def rplan(shape: Sequence[int], mesh: Mesh, **kw) -> 'FFT':
+    """Sugar for :func:`plan` with ``real=True``: an rfft/irfft plan
+    whose forward consumes a real array and produces the half spectrum
+    (last axis ``n//2 + 1``), at ~half the wire bytes and pencil flops
+    of the complex plan."""
+    return plan(shape, mesh, real=True, **kw)
+
+
+def _resolve_comm(shape, layout, mesh_shape, comm, overlap_chunks, method,
+                  real=False):
     """Cost-model resolution of (strategy, overlap_chunks, method) for
     the pencil ranks. Explicit user choices always win; the selector
     runs only under comm='auto' (an explicit strategy keeps the
     documented overlap_chunks default of 1)."""
     if comm != 'auto':
         return comm, 1 if overlap_chunks is None else overlap_chunks, method
-    sel = commlib.cost.select(shape, layout, mesh_shape, method=method)
+    sel = commlib.cost.select(shape, layout, mesh_shape, method=method,
+                              real=real)
     oc = overlap_chunks if overlap_chunks is not None else sel.overlap_chunks
     meth = sel.method if method == 'auto' else method
     return sel.strategy, oc, meth
 
 
-def _resolve_comm_1d(factors, axes, mesh_shape, comm, overlap_chunks, method):
+def _resolve_comm_1d(factors, axes, mesh_shape, comm, overlap_chunks, method,
+                     real=False):
     """Rank-1 resolution: strategy by the four-step schedule's cost;
     overlap stays 1 unless the caller asks (it needs a batch axis only
     present at execution time); method per the two factor lengths."""
@@ -177,11 +217,13 @@ def _resolve_comm_1d(factors, axes, mesh_shape, comm, overlap_chunks, method):
         n1, n2 = factors
         costs = {
             name: commlib.cost.large1d_plan_cost(
-                n1, n2, mesh_axes, mesh_shape, method=method, strategy=name)
+                n1, n2, mesh_axes, mesh_shape, method=method, strategy=name,
+                real=real)
             for name in commlib.names()}
         comm = min(costs, key=lambda k: costs[k].cycles)
         if method == 'auto':
-            picks = {commlib.cost.select_method(n) for n in factors}
+            lens = (max(factors[0] // 2, 1), factors[1]) if real else factors
+            picks = {commlib.cost.select_method(n) for n in lens}
             method = picks.pop() if len(picks) == 1 else 'auto'
     return comm, oc, method
 
@@ -195,10 +237,17 @@ class FFT:
     return the same form. ``inverse(forward(x))`` is an exact round trip:
     the inverse consumes the forward's output sharding and restores the
     input sharding with no extra redistribution.
+
+    Real (rfft) plans change the boundary types only: ``forward`` takes
+    a REAL array of the planned shape and returns the complex half
+    spectrum (:attr:`spectrum_shape` — last axis ``n//2 + 1``, exactly
+    ``np.fft.rfftn``'s layout); ``inverse`` takes the half spectrum
+    (complex or planar) and returns the real array.
     """
 
     def __init__(self, *, shape, mesh, method, compute_dtype, use_kernel,
                  comm, overlap_chunks, restore_layout, batch_spec,
+                 real: bool = False, padded_spectrum: bool = False,
                  pplan: Optional[PencilPlan] = None,
                  axes1d: Optional[Tuple[str, ...]] = None,
                  factors: Optional[Tuple[int, int]] = None):
@@ -212,11 +261,32 @@ class FFT:
         self.overlap_chunks = overlap_chunks
         self.restore_layout = restore_layout
         self.batch_spec = batch_spec
+        self.real = real
+        self.padded_spectrum = padded_spectrum
         self._pplan = pplan
         self._axes1d = axes1d
         self._factors = factors
         self._raw_cache = {}    # (direction, batched) -> planar global fn
         self._exec_cache = {}   # (direction, batch_shape, dtype, form) -> jitted
+
+    @property
+    def _real_pad(self) -> int:
+        """On-wire (padded) extent of the truncated half axis."""
+        return pencil.real_padded_extent(
+            self.shape, self._pplan.layout, dict(self.mesh.shape),
+            restore_layout=self.restore_layout)
+
+    @property
+    def spectrum_shape(self) -> Tuple[int, ...]:
+        """Global shape of the forward output: ``shape`` for complex
+        plans; for real plans the half spectrum — last axis n//2 + 1
+        (``np.fft.rfftn``'s layout), or its padded on-wire extent under
+        ``padded_spectrum``."""
+        if not self.real:
+            return self.shape
+        if self.padded_spectrum:
+            return self.shape[:-1] + (self._real_pad,)
+        return self.shape[:-1] + (self.shape[-1] // 2 + 1,)
 
     # -- layouts / shardings ------------------------------------------------
 
@@ -228,9 +298,19 @@ class FFT:
 
     @property
     def out_layout(self) -> Layout:
+        if self.real and not self.padded_spectrum:
+            # np.rfftn layout: the odd-extent half axis cannot shard
+            # evenly, so it is gathered into memory at the boundary
+            if self.rank == 1:
+                return (None,)
+            lay = (self.in_layout if self.restore_layout else
+                   pencil.forward_schedule(self._pplan.layout,
+                                           self._pplan.real_axis)[1])
+            return lay[:-1] + (None,)
         if self.rank == 1 or self.restore_layout:
             return self.in_layout
-        return pencil.forward_schedule(self._pplan.layout)[1]
+        return pencil.forward_schedule(self._pplan.layout,
+                                       self._pplan.real_axis)[1]
 
     def _sharding(self, layout: Layout) -> NamedSharding:
         lead = (self.batch_spec,) if self.batch_spec is not None else ()
@@ -255,32 +335,44 @@ class FFT:
     # -- execution ----------------------------------------------------------
 
     def forward(self, x):
-        """FFT of ``x`` (complex array or planar (re, im) pair)."""
+        """FFT of ``x`` (complex array or planar (re, im) pair; a REAL
+        array for real plans, which return the half spectrum)."""
         return self._apply('fwd', x)
 
     def inverse(self, x):
-        """IFFT of ``x``; exact round trip with :meth:`forward`."""
+        """IFFT of ``x``; exact round trip with :meth:`forward`. Real
+        plans take the half spectrum and return the real array."""
         return self._apply('inv', x)
 
     def _apply(self, direction, x):
         planar = isinstance(x, (tuple, list))
+        if planar and self.real and direction == 'fwd':
+            raise ValueError(
+                "real plan forward takes ONE real array, not a planar pair")
         if planar:
+            # always coerce: operands may arrive as numpy arrays OR plain
+            # (nested) Python lists — `.shape` exists on neither
             re, im = x
-            re = jnp.asarray(re) if isinstance(re, np.ndarray) else re
-            im = jnp.asarray(im) if isinstance(im, np.ndarray) else im
+            re, im = jnp.asarray(re), jnp.asarray(im)
             if im.shape != re.shape or im.dtype != re.dtype:
                 raise ValueError(
                     f"planar operand mismatch: re is {re.dtype}{re.shape}, "
                     f"im is {im.dtype}{im.shape}")
             shape, dtype = re.shape, re.dtype
         else:
-            x = jnp.asarray(x) if isinstance(x, np.ndarray) else x
+            x = jnp.asarray(x)
             shape, dtype = x.shape, x.dtype
+        core = (self.spectrum_shape if self.real and direction == 'inv'
+                else self.shape)
         if (len(shape) < self.rank
-                or tuple(shape[len(shape) - self.rank:]) != self.shape):
+                or tuple(shape[len(shape) - self.rank:]) != core):
             raise ValueError(
                 f"operand shape {tuple(shape)} does not end with the "
-                f"planned transform shape {self.shape}")
+                f"planned transform shape {core}")
+        if (self.real and direction == 'fwd'
+                and jnp.issubdtype(dtype, jnp.complexfloating)):
+            raise ValueError(
+                f"real plan forward takes a REAL array, got {dtype}")
         batch_shape = tuple(shape[:len(shape) - self.rank])
         if self.batch_spec is not None and len(batch_shape) != 1:
             raise ValueError(
@@ -302,6 +394,17 @@ class FFT:
         batch = batched and self.batch_spec is None
         if self.rank == 1:
             n1, n2 = self._factors
+            if self.real:
+                # the real four-step mirrors itself on the same (n1, n2)
+                # view — no factor flip, the facade owns the ordering
+                fn = large1d.make_rfft1d_large(
+                    n1, n2, self.mesh, self._axes1d, inverse=inverse,
+                    method=self.method, use_kernel=self.use_kernel,
+                    compute_dtype=self.compute_dtype, batch=batch,
+                    batch_spec=self.batch_spec, comm=self.comm,
+                    overlap_chunks=self.overlap_chunks)
+                self._raw_cache[key] = fn
+                return fn
             f1, f2 = ((n2, n1) if inverse else (n1, n2))
             fn = large1d.make_fft1d_large(
                 f1, f2, self.mesh, self._axes1d, inverse=inverse,
@@ -322,6 +425,9 @@ class FFT:
         raw = self._raw(direction, batched=len(batch_shape) > 0)
         nb = len(batch_shape)
         flatb = (int(np.prod(batch_shape)),) if nb else ()
+        if self.real:
+            return self._build_real(direction, raw, batch_shape, flatb,
+                                    planar)
         if self.rank == 1:
             n1, n2 = self._factors
             # the four-step works on the (n1, n2) row-major view; its
@@ -352,12 +458,128 @@ class FFT:
 
         return jax.jit(run_complex)
 
+    def _build_real(self, direction, raw, batch_shape, flatb, planar):
+        """Executable wrappers for real plans: the raw pipeline speaks
+        the padded half spectrum; the boundary pad/slice lives here. The
+        slice is alignment-preserving — the pad sits entirely in the
+        trailing shards of the truncated axis — so it costs no
+        redistribution."""
+        nb = len(batch_shape)
+
+        def shard(layout):
+            # pin the jit output's (uneven) sharding: XLA's propagation
+            # gives up across the non-divisible boundary slice and would
+            # replicate — i.e. all-gather — the whole spectrum otherwise
+            lead = ((self.batch_spec,) if self.batch_spec is not None
+                    else (None,) * nb)
+            return NamedSharding(self.mesh, P(*(lead + tuple(layout))))
+
+        if self.rank == 1:
+            return self._build_real_1d(direction, raw, batch_shape, flatb,
+                                       planar, shard)
+        collapse = nb > 1
+        nh_pad = self._real_pad
+        nh_out = self.spectrum_shape[-1]    # nh, or nh_pad when padded
+        if direction == 'fwd':
+            out_shape = batch_shape + self.spectrum_shape
+
+            def run_fwd(x):
+                if collapse:
+                    x = x.reshape(flatb + self.shape)
+                yr, yi = raw(x)
+                if nh_out != nh_pad:
+                    yr, yi = yr[..., :nh_out], yi[..., :nh_out]
+                if collapse:
+                    yr, yi = yr.reshape(out_shape), yi.reshape(out_shape)
+                return jax.lax.complex(yr, yi)
+
+            return jax.jit(run_fwd, out_shardings=shard(self.out_layout))
+
+        out_shape = batch_shape + self.shape
+
+        def run_inv_planar(re, im):
+            if collapse:
+                re = re.reshape(flatb + self.spectrum_shape)
+                im = im.reshape(flatb + self.spectrum_shape)
+            if nh_out != nh_pad:
+                pw = [(0, 0)] * re.ndim
+                pw[-1] = (0, nh_pad - nh_out)
+                re, im = jnp.pad(re, pw), jnp.pad(im, pw)
+            x = raw(re, im)
+            return x.reshape(out_shape) if collapse else x
+
+        out_sh = shard(self.in_layout)
+        if planar:
+            return jax.jit(run_inv_planar, out_shardings=out_sh)
+        return jax.jit(lambda y: run_inv_planar(y.real, y.imag),
+                       out_shardings=out_sh)
+
+    def _build_real_1d(self, direction, raw, batch_shape, flatb, planar,
+                       shard):
+        """Rank-1 real wrappers: the raw half-plane four-step computes
+        rows j1 <= n1//2 of D[j1, j2] (y[j1 + n1*j2]); this assembles
+        ``np.fft.rfft`` order from it — n - k = (n1-j1) + n1*(n2-1-j2),
+        so bins with j1 > n1//2 are the Hermitian mirror
+        conj(D[n1-j1, n2-1-j2]) — and its exact transpose feeds the
+        inverse."""
+        n1, n2 = self._factors
+        n = n1 * n2
+        nh = n // 2 + 1
+        nh1 = n1 // 2 + 1
+        psize = 1
+        for a in self._axes1d:
+            psize *= self.mesh.shape[a]
+        nh1p = -(-nh1 // psize) * psize
+
+        if direction == 'fwd':
+            out_shape = batch_shape + (nh,)
+
+            def run_fwd(x):
+                x = x.reshape(flatb + (n1, n2))
+                dr, di = raw(x)
+                dr, di = dr[..., :nh1, :], di[..., :nh1, :]
+                # rows n1//2+1 .. n1-1 of the full plane, Hermitian-mirrored
+                br = jnp.flip(jnp.flip(dr[..., 1:n1 // 2, :], -2), -1)
+                bi = -jnp.flip(jnp.flip(di[..., 1:n1 // 2, :], -2), -1)
+                fr = jnp.concatenate([dr, br], -2)
+                fi = jnp.concatenate([di, bi], -2)
+                yr = jnp.swapaxes(fr, -1, -2).reshape(flatb + (n,))[..., :nh]
+                yi = jnp.swapaxes(fi, -1, -2).reshape(flatb + (n,))[..., :nh]
+                return jax.lax.complex(yr.reshape(out_shape),
+                                       yi.reshape(out_shape))
+
+            return jax.jit(run_fwd, out_shardings=shard(self.out_layout))
+
+        out_shape = batch_shape + (n,)
+
+        def run_inv_planar(re, im):
+            re = re.reshape(flatb + (nh,))
+            im = im.reshape(flatb + (nh,))
+            # Hermitian-extend to the full spectrum, view as D rows
+            fr = jnp.concatenate([re, jnp.flip(re[..., 1:n // 2], -1)], -1)
+            fi = jnp.concatenate([im, -jnp.flip(im[..., 1:n // 2], -1)], -1)
+            dr = jnp.swapaxes(fr.reshape(flatb + (n2, n1)), -1, -2)
+            di = jnp.swapaxes(fi.reshape(flatb + (n2, n1)), -1, -2)
+            dr, di = dr[..., :nh1, :], di[..., :nh1, :]
+            pw = [(0, 0)] * dr.ndim
+            pw[-2] = (0, nh1p - nh1)
+            x = raw(jnp.pad(dr, pw), jnp.pad(di, pw))
+            return x.reshape(out_shape)
+
+        out_sh = shard(self.in_layout)
+        if planar:
+            return jax.jit(run_inv_planar, out_shardings=out_sh)
+        return jax.jit(lambda y: run_inv_planar(y.real, y.imag),
+                       out_shardings=out_sh)
+
     # -- cost model ---------------------------------------------------------
 
-    def plan_cost(self, precision: str = 'fp32'):
+    def plan_cost(self, precision: str = 'fp32', *, measured='auto'):
         """The paper's cycle model (Eqs. 1-12, extended) applied to this
         plan's schedule under its resolved strategy/method/overlap:
-        returns a :class:`repro.comm.cost.PlanCost`."""
+        returns a :class:`repro.comm.cost.PlanCost`. ``measured=None``
+        forces the pure analytic model (ignoring any measured swap-us
+        table)."""
         mesh_shape = dict(self.mesh.shape)
         if self.rank == 1:
             n1, n2 = self._factors
@@ -365,11 +587,14 @@ class FFT:
             return commlib.cost.large1d_plan_cost(
                 n1, n2, tuple(ax) if len(ax) > 1 else ax[0], mesh_shape,
                 precision=precision, method=self.method, strategy=self.comm,
-                overlap_chunks=self.overlap_chunks)
+                overlap_chunks=self.overlap_chunks, real=self.real,
+                measured=measured)
         return commlib.cost.pencil_plan_cost(
             self.shape, self._pplan.layout, mesh_shape, precision=precision,
             method=self.method, strategy=self.comm,
-            overlap_chunks=self.overlap_chunks)
+            overlap_chunks=self.overlap_chunks, real=self.real,
+            padded_spectrum=self.padded_spectrum or not self.real,
+            measured=measured)
 
     def cost_report(self, precision: str = 'fp32') -> str:
         """Predicted cycles per superstep/transpose, formatted next to
@@ -382,6 +607,7 @@ class FFT:
 
     def __repr__(self):
         return (f"FFT(shape={self.shape}, rank={self.rank}, "
+                f"real={self.real}, "
                 f"method={self.method!r}, comm={self.comm!r}, "
                 f"mesh={dict(self.mesh.shape)}, "
                 f"batch_spec={self.batch_spec!r})")

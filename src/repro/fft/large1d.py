@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import comm as commlib
@@ -106,4 +107,103 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
 
     spec = P(*(((batch_spec,) if off else ()) + (mesh_axis, None)))
     return shard_map(local, mesh=plan_mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec))
+
+
+def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
+                      inverse: bool = False, method: str = 'auto',
+                      use_kernel: bool = False, compute_dtype=None,
+                      batch: bool = False, batch_spec=None,
+                      comm: str = 'all_to_all', overlap_chunks: int = 1):
+    """Rank-1 REAL four-step: the rows-halved half-plane form.
+
+    Forward consumes the real row-major view A[k1, k2] (rows sharded
+    over the flattened mesh) and produces the planar half plane
+    D[j1, j2] for j1 <= n1//2 (rows padded to ``nh1p`` for even
+    sharding, same spec): the column DFT is r2c — one length-n1/2
+    complex pencil per column plus the Hermitian combine — and the
+    remaining rows carry every rfft output bin (``j1 > n1//2`` rows are
+    conjugate-redundant). Wire bytes halve twice over the complex path:
+    the first swap moves ONE real array instead of a planar pair, and
+    the second swap moves the halved row count. Inverse is the exact
+    mirror (row IDFT, conjugate twiddle, column c2r, real swap back).
+    The half plane <-> ``np.fft.rfft``-order assembly lives in the
+    facade (:mod:`repro.fft.api`), which owns the (n,) views.
+    """
+    methods.validate(method)
+    commlib.validate(comm)
+    n = n1 * n2
+    nh1 = n1 // 2 + 1
+    ax = mesh_axes if isinstance(mesh_axes, tuple) else (mesh_axes,)
+    psize = 1
+    for a in ax:
+        psize *= plan_mesh.shape[a]
+    if n1 % psize or n2 % psize:
+        raise ValueError(f"{psize} devices must divide both factors ({n1},{n2})")
+    nh1p = -(-nh1 // psize) * psize
+    off = 1 if (batch or batch_spec is not None) else 0
+    mesh_axis = ax if len(ax) > 1 else ax[0]
+    strategy = commlib.resolve(comm)
+
+    def _twiddle(conj: bool):
+        # W[j1, k2_global] on this device's k2 chunk; the pad rows get
+        # whatever phase falls out — they carry zeros
+        idx = commlib.group_index(mesh_axis)
+        m2 = n2 // psize
+        k2 = idx * m2 + jnp.arange(m2)
+        j1 = jnp.arange(nh1p)
+        ang = (-2.0 * np.pi / n) * (j1[:, None] * k2[None, :])
+        wr, wi = jnp.cos(ang), jnp.sin(ang)
+        return (wr, -wi) if conj else (wr, wi)
+
+    def body_fwd(x):
+        # in: (n1/p, n2) real rows-sharded; swap moves ONE real array
+        x = strategy.swap_axes(x, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+        # r2c column DFT over k1 -> (nh1, n2/p), padded rows
+        ar, ai = methods.apply_real(x, axis=off + 0, method=method,
+                                    compute_dtype=compute_dtype)
+        if nh1p != nh1:
+            pw = [(0, 0)] * ar.ndim
+            pw[off + 0] = (0, nh1p - nh1)
+            ar, ai = jnp.pad(ar, pw), jnp.pad(ai, pw)
+        wr, wi = _twiddle(conj=False)
+        ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
+        # swap back -> (nh1p/p, n2); row DFT over k2
+        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
+        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
+        return methods.apply(ar, ai, axis=off + 1, method=method,
+                             compute_dtype=compute_dtype,
+                             use_kernel=use_kernel)
+
+    def body_inv(ar, ai):
+        # in: (nh1p/p, n2) planar rows-sharded; row IDFT over j2
+        ar, ai = methods.apply(ar, ai, axis=off + 1, inverse=True,
+                               method=method, compute_dtype=compute_dtype,
+                               use_kernel=use_kernel)
+        # swap -> (nh1p, n2/p); conjugate twiddle
+        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+        wr, wi = _twiddle(conj=True)
+        ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
+        # drop pad rows, c2r column IDFT -> (n1, n2/p) real
+        ar = lax.slice_in_dim(ar, 0, nh1, axis=off + 0)
+        ai = lax.slice_in_dim(ai, 0, nh1, axis=off + 0)
+        x = methods.apply_real(ar, ai, axis=off + 0, inverse=True,
+                               method=method, compute_dtype=compute_dtype)
+        # swap the real array back to rows-sharded
+        return strategy.swap_axes(x, mesh_axis, shard_pos=off + 1,
+                                  mem_pos=off + 0)
+
+    body = body_inv if inverse else body_fwd
+
+    def local(*arrays):
+        if off and overlap_chunks > 1 and arrays[0].shape[0] % overlap_chunks == 0:
+            return ov.pipelined(overlap_chunks, 0, body, *arrays)
+        return body(*arrays)
+
+    spec = P(*(((batch_spec,) if off else ()) + (mesh_axis, None)))
+    if inverse:
+        return shard_map(local, mesh=plan_mesh, in_specs=(spec, spec),
+                         out_specs=spec)
+    return shard_map(local, mesh=plan_mesh, in_specs=(spec,),
                      out_specs=(spec, spec))

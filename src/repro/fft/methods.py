@@ -7,7 +7,7 @@ machinery (`repro.fft.pencil`), the large-1D four-step
 `kernels.ops.pencil_fft`). There is exactly one method->implementation
 table and one ``'auto'`` resolution rule in the repo — this module.
 
-A method owns up to three callables:
+A method owns up to four callables:
 
 * ``pencil_fn``  — pure-jnp transform along the LAST axis
                    ``(re, im, *, inverse, compute_dtype) -> (re, im)``
@@ -16,6 +16,14 @@ A method owns up to three callables:
                    contraction); same signature plus ``axis``
 * ``kernel_fn``  — optional Pallas kernel form along the last axis
                    ``(re, im, *, inverse, interpret) -> (re, im)``
+* ``real_fn``    — real-input transform along the LAST axis:
+                   ``real_fn(x, *, compute_dtype)`` maps a real array to
+                   the planar half spectrum (n -> n//2 + 1 bins) and
+                   ``real_fn(re, im, inverse=True, ...)`` back. Every
+                   built-in gets one via the generic pack-two-reals
+                   halving trick (:func:`repro.core.fft1d.rfft_via`),
+                   so an rfft superstep costs one length-n/2 complex
+                   pencil plus an O(n) combine.
 
 ``'block'`` (block-complex four-step: complex carried as a leading
 size-2 axis, two real dots per pencil) is a first-class method here —
@@ -51,6 +59,7 @@ class Method:
     pencil_fn: Callable
     axis_fn: Optional[Callable] = None
     kernel_fn: Optional[Callable] = None
+    real_fn: Optional[Callable] = None
     pow2_only: bool = True
     description: str = ''
 
@@ -138,6 +147,50 @@ def apply(re: jnp.ndarray, im: jnp.ndarray, *, axis: int = -1,
     return yr, yi
 
 
+def apply_real(x: jnp.ndarray, im: Optional[jnp.ndarray] = None, *,
+               axis: int = -1, inverse: bool = False, method: str = 'auto',
+               compute_dtype=None) -> object:
+    """Run a method's real-input transform along ``axis``.
+
+    Forward (``im is None``): real array -> planar half spectrum, the
+    ``axis`` extent going n -> n//2 + 1 (``np.fft.rfft`` layout).
+    Inverse: planar half spectrum ``(x, im)`` -> real array, n//2 + 1
+    -> n. The ``'auto'`` rule resolves by the length of the underlying
+    *complex* sub-pencil (n//2) — that is where the flops go.
+    """
+    axis = axis % x.ndim
+    if inverse:
+        if im is None:
+            raise ValueError("inverse real transform takes a planar "
+                             "(re, im) half spectrum")
+        n = 2 * (x.shape[axis] - 1)
+    else:
+        if im is not None:
+            raise ValueError("forward real transform takes ONE real array")
+        n = x.shape[axis]
+    if n % 2:
+        raise ValueError(f"real transforms need an even length, got {n}")
+    m = resolve(method, max(n // 2, 1))
+    if m.pow2_only and not tw.is_pow2(max(n // 2, 1)):
+        raise ValueError(
+            f"method {m.name!r} requires a power-of-two half length, "
+            f"got n={n} (use method='direct' or 'auto')")
+    if m.real_fn is None:
+        raise ValueError(f"method {m.name!r} has no real-input form")
+    last = axis == x.ndim - 1
+    if not last:
+        x = jnp.moveaxis(x, axis, -1)
+        if im is not None:
+            im = jnp.moveaxis(im, axis, -1)
+    if inverse:
+        y = m.real_fn(x, im, inverse=True, compute_dtype=compute_dtype)
+        return y if last else jnp.moveaxis(y, -1, axis)
+    yr, yi = m.real_fn(x, compute_dtype=compute_dtype)
+    if not last:
+        yr, yi = jnp.moveaxis(yr, -1, axis), jnp.moveaxis(yi, -1, axis)
+    return yr, yi
+
+
 def apply_block(x: jnp.ndarray, *, axis: int, inverse: bool = False,
                 compute_dtype=None, use_kernel: bool = False,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -203,6 +256,7 @@ register(Method(
     name='stockham',
     pencil_fn=_f1.fft_stockham,
     kernel_fn=_stockham_kernel,
+    real_fn=_f1.rfft_via(_f1.fft_stockham),
     description='radix-2 Stockham autosort butterflies (paper-faithful)'))
 
 register(Method(
@@ -210,6 +264,7 @@ register(Method(
     pencil_fn=_f1.fft_four_step,
     axis_fn=_f1.fft_four_step_axis,
     kernel_fn=_four_step_kernel,
+    real_fn=_f1.rfft_via(_f1.fft_four_step),
     description='Bailey four-step as dense matmuls (MXU form)'))
 
 register(Method(
@@ -217,10 +272,12 @@ register(Method(
     pencil_fn=_block_pencil,
     axis_fn=_block_axis,
     kernel_fn=_block_kernel,
+    real_fn=_f1.rfft_via(_block_pencil),
     description='block-complex four-step: two real dots, fused twiddle'))
 
 register(Method(
     name='direct',
     pencil_fn=_direct,
+    real_fn=_f1.rfft_via(_direct),
     pow2_only=False,
     description='dense O(n^2) DFT matrix (oracle / non-pow2 sizes)'))

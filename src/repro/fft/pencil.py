@@ -22,7 +22,9 @@ through ``repro.fft.plan``.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Tuple
+import dataclasses
+import math
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +44,12 @@ Planar = Tuple[jnp.ndarray, jnp.ndarray]
 # Schedule derivation (pure layout algebra — no data)
 # ---------------------------------------------------------------------------
 
-def forward_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
+def forward_schedule(layout: Layout,
+                     first_mem: Optional[int] = None) -> Tuple[Tuple, Layout]:
     """Returns (steps, final_layout). Each step is ('fft', mem_pos) or
-    ('swap', mesh_axis, mem_pos)."""
+    ('swap', mesh_axis, mem_pos). ``first_mem`` forces that memory axis
+    into the first superstep — real plans need the r2c axis transformed
+    before any exchange so everything on the wire is half-spectrum."""
     steps: List[Tuple] = []
     lay = layout
     transformed = set()
@@ -53,7 +58,14 @@ def forward_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
         mems = [p for p in planlib.memory_axes(lay) if p not in transformed]
         if not mems:
             raise ValueError(f"no untransformed memory axis in {lay}")
-        mem = mems[0]
+        if first_mem is not None and first_mem not in transformed:
+            if first_mem not in mems:
+                raise ValueError(
+                    f"axis {first_mem} must start in memory to be the "
+                    f"first superstep of {layout}")
+            mem = first_mem
+        else:
+            mem = mems[0]
         steps.append(('fft', mem))
         transformed.add(mem)
         # swap with the first untransformed mesh-owned axis, position order
@@ -65,11 +77,12 @@ def forward_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
     return tuple(steps), lay
 
 
-def inverse_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
+def inverse_schedule(layout: Layout,
+                     first_mem: Optional[int] = None) -> Tuple[Tuple, Layout]:
     """Mirror of forward_schedule starting from the forward's *final*
     layout: reverses each swap (split/concat positions exchanged) and
     IFFTs in reverse superstep order, ending at the original layout."""
-    fwd, final = forward_schedule(layout)
+    fwd, final = forward_schedule(layout, first_mem)
     pre_layouts = []
     lay = layout
     for step in fwd:
@@ -87,6 +100,55 @@ def inverse_schedule(layout: Layout) -> Tuple[Tuple, Layout]:
             # memory position of the inverse swap
             steps.append(('swap', mesh_axis, planlib.owner_pos(pre, mesh_axis)))
     return tuple(steps), layout
+
+
+# ---------------------------------------------------------------------------
+# Half-spectrum extent bookkeeping (real plans)
+# ---------------------------------------------------------------------------
+
+def real_half_extent(n: int) -> int:
+    """Logical half-spectrum length of a length-n real transform."""
+    return n // 2 + 1
+
+
+def real_padded_extent(shape, layout: Layout, mesh_shape, *,
+                       restore_layout: bool = False) -> int:
+    """On-wire extent of the truncated (half-spectrum) last axis.
+
+    n//2 + 1 is odd, so it cannot shard evenly; the schedule therefore
+    carries it zero-padded to the smallest multiple of every mesh-group
+    size that ever owns it (walked off the actual swap sequence,
+    including the restore_layout swaps). The pad rides every later
+    superstep/swap and the facade slices it off — the slice is
+    alignment-preserving because the pad lives entirely in the trailing
+    shards. Works off a plain ``{axis: extent}`` mapping so cost-only
+    (AbstractMesh) plans price the same extent the executor moves.
+    """
+    ra = len(shape) - 1
+    nh = real_half_extent(shape[-1])
+    steps, final = forward_schedule(tuple(layout), first_mem=ra)
+    lay = tuple(layout)
+    lcm = 1
+    for step in steps:
+        if step[0] == 'swap':
+            lay = planlib.swap(lay, step[1], step[2])
+            if lay[ra] is not None:
+                lcm = math.lcm(lcm, comm.strategies.static_group_size(
+                    lay[ra], mesh_shape))
+    if restore_layout:
+        for ax, mp in planlib.plan_swaps(final, tuple(layout)):
+            lay = planlib.swap(lay, ax, mp)
+            if lay[ra] is not None:
+                lcm = math.lcm(lcm, comm.strategies.static_group_size(
+                    lay[ra], mesh_shape))
+    return -(-nh // lcm) * lcm
+
+
+def packed_plan(plan: PencilPlan, nh_pad: int) -> PencilPlan:
+    """The complex-plan view of a real plan's post-r2c supersteps: same
+    mesh/layout/method, last axis at its padded half-spectrum extent."""
+    return dataclasses.replace(plan, shape=plan.shape[:-1] + (nh_pad,),
+                               real=False)
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +221,10 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
     """Build a jit-able distributed FFT.
 
     Returns (fn, in_layout, out_layout); fn maps planar global arrays
-    (re, im) -> (re, im). For ``inverse=True`` the function *consumes*
+    (re, im) -> (re, im). Real plans differ only at the r2c boundary:
+    forward consumes ONE real array and returns the planar padded half
+    spectrum (last axis ``real_padded_extent``); inverse consumes that
+    and returns the real array. For ``inverse=True`` the function *consumes*
     the forward's output layout and returns the original input layout —
     ifft(fft(x)) is an exact round trip with no extra redistribution, the
     paper's forward+inverse loop (§5: "ran forward and inverse Fourier
@@ -170,9 +235,11 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
     plan.validate()
     methods.validate(plan.method)
     comm.validate(plan.comm)
+    first = plan.real_axis
     if inverse:
-        steps, _ = inverse_schedule(plan.layout)
-        in_layout, out_layout = forward_schedule(plan.layout)[1], plan.layout
+        steps, _ = inverse_schedule(plan.layout, first)
+        in_layout, out_layout = (forward_schedule(plan.layout, first)[1],
+                                 plan.layout)
         if restore_layout:
             # consume the plan layout: pre-rotate into the forward's final
             # layout, then run the mirrored schedule back
@@ -180,7 +247,7 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                           in planlib.plan_swaps(plan.layout, in_layout)) + steps
             in_layout = plan.layout
     else:
-        steps, out_layout = forward_schedule(plan.layout)
+        steps, out_layout = forward_schedule(plan.layout, first)
         in_layout = plan.layout
         if restore_layout:
             steps = steps + tuple(('swap', ax, mp) for ax, mp
@@ -190,6 +257,51 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
     batch_ndim = 1 if (batch or batch_spec is not None) else 0
     in_spec = P(*(((batch_spec,) if batch_ndim else ()) + tuple(in_layout)))
     out_spec = P(*(((batch_spec,) if batch_ndim else ()) + tuple(out_layout)))
+
+    if plan.real:
+        # the r2c superstep is first (forward) / last (inverse) by the
+        # first_mem scheduling rule; everything between runs on the
+        # padded half spectrum as an ordinary complex sub-plan
+        ra = first
+        nh = real_half_extent(plan.shape[-1])
+        nh_pad = real_padded_extent(plan.shape, plan.layout,
+                                    dict(plan.mesh.shape),
+                                    restore_layout=restore_layout)
+        packed = packed_plan(plan, nh_pad)
+
+        def local_real_fwd(x):
+            assert steps[0] == ('fft', ra), steps
+            re, im = methods.apply_real(x, axis=batch_ndim + ra,
+                                        method=plan.method,
+                                        compute_dtype=plan.compute_dtype)
+            if nh_pad != nh:
+                pw = [(0, 0)] * re.ndim
+                pw[batch_ndim + ra] = (0, nh_pad - nh)
+                re, im = jnp.pad(re, pw), jnp.pad(im, pw)
+            return _execute(re, im, in_layout, steps[1:], inverse=False,
+                            plan=packed, batch_ndim=batch_ndim,
+                            overlap_chunks=overlap_chunks)
+
+        def local_real_inv(re, im):
+            assert steps[-1] == ('fft', ra), steps
+            re, im = _execute(re, im, in_layout, steps[:-1], inverse=True,
+                              plan=packed, batch_ndim=batch_ndim,
+                              overlap_chunks=overlap_chunks)
+            ax = batch_ndim + ra
+            re = jax.lax.slice_in_dim(re, 0, nh, axis=ax)
+            im = jax.lax.slice_in_dim(im, 0, nh, axis=ax)
+            return methods.apply_real(re, im, axis=ax, inverse=True,
+                                      method=plan.method,
+                                      compute_dtype=plan.compute_dtype)
+
+        if inverse:
+            fn = shard_map(local_real_inv, mesh=plan.mesh,
+                           in_specs=(in_spec, in_spec), out_specs=out_spec)
+        else:
+            fn = shard_map(local_real_fwd, mesh=plan.mesh,
+                           in_specs=(in_spec,),
+                           out_specs=(out_spec, out_spec))
+        return fn, in_layout, out_layout
 
     def local(re, im):
         if plan.method == 'block':

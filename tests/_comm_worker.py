@@ -180,6 +180,38 @@ def check_ulysses_overlap(mesh):
               "match flash reference")
 
 
+def check_strategy_grads(mesh):
+    """AD through the redistribution strategies: a swap is a pure
+    permutation, so its linearization is the inverse permutation —
+    grad and vjp through 'ppermute' (dynamic_slice/ppermute rounds) and
+    'hierarchical' (two-phase + reshape/transpose) must match the
+    all_to_all path bit-for-bit. Gate for training-path adoption of
+    non-default strategies (ROADMAP)."""
+    shape = (16, 16, 16)
+    x = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    ct = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    for mesh_axis in ('x', 'y', ('x', 'y')):
+        grads, cts = {}, {}
+        for name in comm.names():
+            f = shard_map(
+                lambda a, n=name: comm.swap_axes(
+                    a, mesh_axis, shard_pos=0, mem_pos=1, strategy=n),
+                mesh=mesh, in_specs=P(mesh_axis, None, None),
+                out_specs=P(None, mesh_axis, None))
+            loss = jax.jit(lambda a, f=f: jnp.sum(jnp.sin(f(a)) * w))
+            grads[name] = np.asarray(jax.grad(loss)(x))
+            _, vjp = jax.vjp(jax.jit(f), x)
+            cts[name] = np.asarray(vjp(ct)[0])
+        ref = grads['all_to_all']
+        ref_ct = cts['all_to_all']
+        for name in comm.names():
+            assert np.array_equal(grads[name], ref), (mesh_axis, name)
+            assert np.array_equal(cts[name], ref_ct), (mesh_axis, name)
+        print(f"PASS grad/vjp through strategies axis={mesh_axis} "
+              "matches all_to_all")
+
+
 def check_moe_overlap(mesh):
     """Explicit-EP MoE: strategies and the capacity-chunked pipeline
     agree (ample capacity so the chunk-padded capacity drops nothing)."""
@@ -218,6 +250,7 @@ def main():
     check_facade_matrix(mesh)
     check_overlap_equivalence(mesh)
     check_auto_plan(mesh)
+    check_strategy_grads(mesh)
     check_ulysses_overlap(mesh)
     check_moe_overlap(mesh)
     print("COMM_WORKER_OK")
