@@ -1,15 +1,23 @@
 """Microbenchmark of the repro.comm redistribution strategies.
 
-Sweeps mesh shapes x axis groups x message sizes on the fake-device
-mesh (16 host devices), timing one ownership swap per registered
-strategy and printing it next to the wse_model prediction. Emits
-``BENCH_redistribute.json`` at the repo root so the perf trajectory
-starts accumulating data across PRs.
+Sweeps mesh shapes x axis groups x message sizes x wire dtypes on the
+fake-device mesh (16 host devices), timing one ownership swap per
+registered strategy and printing it next to the wse_model prediction.
+Emits ``BENCH_redistribute.json`` at the repo root so the perf
+trajectory accumulates data across PRs: each row carries a ``dtype``
+tag ('c64' = an f32 component array of a complex64 planar pair,
+'c128' = f64) and ``comm.cost.measured_table`` keys on it.
 
-Run:  PYTHONPATH=src python benchmarks/bench_redistribute.py
+With ``--refresh`` the new grid points are MERGED into the existing
+file — rows with the same (mesh, group, strategy, dtype, local_elems)
+key are replaced, everything else (older sweeps, other hosts' points)
+is kept — instead of overwriting the whole table.
+
+Run:  PYTHONPATH=src python benchmarks/bench_redistribute.py [--refresh]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -19,6 +27,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax                                  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)   # the c128 grid needs real f64
+
 import jax.numpy as jnp                     # noqa: E402
 import numpy as np                          # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
@@ -33,9 +44,11 @@ MESHES = [((4, 4), ("x", "y")), ((2, 8), ("x", "y"))]
 GROUPS = ["x", "y", ("x", "y")]
 #: local (mem_dim, row) sizes — mem_dim must divide by the group size
 SIZES = [(16, 64), (64, 256), (256, 1024)]
+#: wire dtype grid: the f32 / f64 component array of a planar pair
+DTYPES = [('c64', jnp.float32), ('c128', jnp.float64)]
 
 
-def bench_swap(mesh, group, strategy, mem_dim, rows):
+def bench_swap(mesh, group, strategy, mem_dim, rows, jdtype):
     def f(a):
         return comm.swap_axes(a, group, shard_pos=0, mem_pos=1,
                               strategy=strategy)
@@ -44,13 +57,24 @@ def bench_swap(mesh, group, strategy, mem_dim, rows):
                            out_specs=P(None, group)))
     x = jnp.asarray(np.random.default_rng(0).standard_normal(
         (rows * comm.strategies.static_group_size(group, dict(mesh.shape)),
-         mem_dim)), jnp.float32)
+         mem_dim)), jdtype)
     return time_jax(fn, x)
 
 
-def main() -> None:
+def _row_key(r):
+    return (r.get('mesh'), r.get('group'), r.get('strategy'),
+            r.get('dtype'), r.get('local_elems'))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--refresh', action='store_true',
+                    help='merge new grid points into the existing JSON '
+                         '(replace same-key rows, keep the rest) instead '
+                         'of overwriting it')
+    args = ap.parse_args(argv)
     print("# bench_redistribute: one ownership swap per strategy")
-    print("mesh,group,strategy,p,local_elems,us,model_cycles")
+    print("mesh,group,strategy,p,local_elems,dtype,us,model_cycles")
     results = []
     for mesh_dims, names in MESHES:
         mesh = jax.make_mesh(mesh_dims, names)
@@ -60,19 +84,35 @@ def main() -> None:
             for mem_dim, rows in SIZES:
                 if mem_dim % p:
                     continue
-                elems = mem_dim * rows          # per-device f32 elements
-                for strategy in comm.names():
-                    us = bench_swap(mesh, group, strategy, mem_dim, rows)
-                    model = comm.get(strategy).cost(
-                        group, mesh_shape, elems / 2.0, 'fp32').cycles
-                    gname = group if isinstance(group, str) else '*'.join(group)
-                    tag = (f"redistribute/{mesh_dims[0]}x{mesh_dims[1]}/"
-                           f"{gname}/{strategy}/e{elems}")
-                    emit(tag, us, f"model_cycles={model:.0f}")
-                    results.append(dict(
-                        mesh=f"{mesh_dims[0]}x{mesh_dims[1]}", group=gname,
-                        strategy=strategy, p=p, local_elems=elems,
-                        us=us, model_cycles=model))
+                elems = mem_dim * rows       # per-device component elems
+                for dtype, jdtype in DTYPES:
+                    # byte-equivalent f32 count for the model column
+                    f32_eq = elems * (2 if dtype == 'c128' else 1)
+                    for strategy in comm.names():
+                        us = bench_swap(mesh, group, strategy, mem_dim,
+                                        rows, jdtype)
+                        model = comm.get(strategy).cost(
+                            group, mesh_shape, f32_eq / 2.0, 'fp32').cycles
+                        gname = (group if isinstance(group, str)
+                                 else '*'.join(group))
+                        tag = (f"redistribute/{mesh_dims[0]}x{mesh_dims[1]}/"
+                               f"{gname}/{strategy}/{dtype}/e{elems}")
+                        emit(tag, us, f"model_cycles={model:.0f}")
+                        results.append(dict(
+                            mesh=f"{mesh_dims[0]}x{mesh_dims[1]}",
+                            group=gname, strategy=strategy, p=p,
+                            local_elems=elems, dtype=dtype,
+                            us=us, model_cycles=model))
+    if args.refresh and os.path.exists(OUT):
+        try:
+            with open(OUT) as f:
+                old = json.load(f).get('results', [])
+        except (OSError, ValueError):
+            old = []
+        fresh = {_row_key(r) for r in results}
+        kept = [r for r in old if _row_key(r) not in fresh]
+        results = kept + results
+        print(f"# --refresh: kept {len(kept)} existing rows")
     with open(OUT, "w") as f:
         json.dump(dict(benchmark="redistribute", backend=jax.default_backend(),
                        results=results), f, indent=1)

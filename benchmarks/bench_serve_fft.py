@@ -1,0 +1,155 @@
+"""Serving throughput: sequential per-request loop vs the FFTEngine.
+
+A stream of independent transform requests is the serving workload the
+ROADMAP's north star cares about; the paper's steady-state pipelining
+(§V) only pays off across requests if something coalesces them. This
+benchmark times, per comm strategy and for complex AND real requests:
+
+* ``sequential`` — one ``plan.forward`` per request, blocking each
+  (the honest no-engine serving loop; ``donate=False`` so the caller's
+  buffer survives, as a user's would),
+* ``engine``     — the same requests through :class:`FFTEngine`:
+  measured-autotuned (FFTW_MEASURE-style) coalesce width and
+  ``overlap_chunks`` over the request axis, double-buffered dispatch,
+  donated staged batches.
+
+Outputs are asserted BIT-IDENTICAL between the two paths before any
+number is reported; the two loops are timed INTERLEAVED and reported
+as medians, because wall time on a shared host machine drifts by more
+than the effect under test. Emits ``BENCH_serve_fft.json`` at the repo
+root.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serve_fft.py [--n 32] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                   # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+import numpy as np                           # noqa: E402
+
+import repro.fft as fft                      # noqa: E402
+from repro import comm                       # noqa: E402
+from repro.serve import FFTEngine            # noqa: E402
+from benchmarks.common import emit           # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve_fft.json")
+
+
+def make_requests(shape, kind, n_requests):
+    rng = np.random.default_rng(3)
+    reqs = []
+    for _ in range(n_requests):
+        x = rng.standard_normal(shape).astype(np.float32)
+        if kind == 'complex':
+            x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
+        reqs.append(x)
+    return reqs
+
+
+def run_sequential(plan, reqs):
+    """One blocking plan call per request — each request's transposes
+    serialize against the next request's pencils."""
+    outs = []
+    t0 = time.perf_counter()
+    for x in reqs:
+        y = plan.forward(jax.device_put(jnp.asarray(x), plan.in_sharding))
+        jax.block_until_ready(y)
+        outs.append(y)
+    return outs, (time.perf_counter() - t0) / len(reqs) * 1e6
+
+
+def run_engine(eng, reqs):
+    # submit() inside the timed region: it pays the per-request
+    # host->device copy the sequential loop's device_put also pays
+    t0 = time.perf_counter()
+    tickets = [eng.submit(x) for x in reqs]
+    eng.flush()
+    outs = [t.result() for t in tickets]
+    jax.block_until_ready(outs)
+    return outs, (time.perf_counter() - t0) / len(reqs) * 1e6
+
+
+def bench_one(mesh, shape, strategy, kind, n_requests, repeats):
+    reqs = make_requests(shape, kind, n_requests)
+    if kind == 'complex':
+        plan = fft.plan(shape, mesh, comm=strategy, donate=False)
+    else:
+        plan = fft.rplan(shape, mesh, comm=strategy)
+    eng = FFTEngine(shape, mesh, comm=strategy)
+    eng.autotune(reqs, repeats=max(repeats - 1, 1))
+    # warm both paths (compile outside the timed region)
+    run_sequential(plan, reqs[:1])
+    run_engine(eng, reqs)
+    seq_outs, _ = run_sequential(plan, reqs)
+    eng_outs, _ = run_engine(eng, reqs)
+    for i, (a, b) in enumerate(zip(seq_outs, eng_outs)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError(
+                f"engine output {i} differs from per-request execution "
+                f"({kind}, {strategy})")
+    seq_ts, eng_ts = [], []
+    for _ in range(repeats):                       # interleaved timing
+        seq_ts.append(run_sequential(plan, reqs)[1])
+        eng_ts.append(run_engine(eng, reqs)[1])
+    # host wall time drifts in multi-second phases, so: interleave the
+    # two loops, take each loop's min (the uncontended floor, timeit
+    # style) for the headline ratio, and keep the median of adjacent
+    # (seq, engine) pair ratios as the load-inclusive cross-check
+    seq_us, eng_us = min(seq_ts), min(eng_ts)
+    ratios = sorted(s / e for s, e in zip(seq_ts, eng_ts))
+    w, c = eng.schedule(kind == 'real')
+    return dict(kind=kind, strategy=strategy, n_requests=n_requests,
+                seq_us_per_req=seq_us, engine_us_per_req=eng_us,
+                speedup=seq_us / eng_us,
+                speedup_median_pairs=ratios[len(ratios) // 2],
+                coalesce_width=w, overlap_chunks=c, bit_identical=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--n', type=int, default=32)
+    ap.add_argument('--requests', type=int, default=16)
+    ap.add_argument('--repeats', type=int, default=9)
+    ap.add_argument('--smoke', action='store_true',
+                    help='tiny size / single strategy (CI)')
+    args = ap.parse_args(argv)
+    n = 16 if args.smoke else args.n
+    n_requests = 8 if args.smoke else args.requests
+    repeats = 2 if args.smoke else args.repeats
+    strategies = ('all_to_all',) if args.smoke else comm.names()
+
+    mesh = jax.make_mesh((4, 4), ("x", "y"))
+    shape = (n, n, n)
+    print(f"# bench_serve_fft: {n_requests} requests of {n}^3 on 4x4 "
+          f"({jax.default_backend()})")
+    print("kind,strategy,us,derived")
+    results = []
+    for strategy in strategies:
+        for kind in ('complex', 'real'):
+            r = bench_one(mesh, shape, strategy, kind, n_requests, repeats)
+            results.append(dict(shape=list(shape), mesh="4x4", **r))
+            emit(f"serve_fft/{n}/{strategy}/{kind}/engine",
+                 r['engine_us_per_req'],
+                 f"seq_us={r['seq_us_per_req']:.1f} "
+                 f"speedup={r['speedup']:.2f}x "
+                 f"w={r['coalesce_width']} c={r['overlap_chunks']}")
+    with open(OUT, "w") as f:
+        json.dump(dict(benchmark="serve_fft", backend=jax.default_backend(),
+                       results=results), f, indent=1)
+    print(f"wrote {os.path.normpath(OUT)} ({len(results)} rows)")
+    worst = min(r['speedup'] for r in results)
+    print(f"# worst engine speedup vs sequential loop: {worst:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

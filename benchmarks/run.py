@@ -49,6 +49,16 @@ def main() -> None:
         sys.stdout.write("bench_rfft,nan,FAILED\n")
         sys.stderr.write(r.stderr[-2000:])
 
+    _section("FFT serving: sequential loop vs batched engine (4x4 mesh)")
+    r = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "bench_serve_fft.py"), "--n", "32"],
+        capture_output=True, text=True, env=env)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stdout.write("bench_serve_fft,nan,FAILED\n")
+        sys.stderr.write(r.stderr[-2000:])
+
     # Roofline tables are produced by the dry-run pipeline (launch/dryrun
     # + benchmarks/roofline_fft); aggregate whatever artifacts exist.
     base = os.path.join(os.path.dirname(__file__), "..")

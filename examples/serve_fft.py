@@ -1,0 +1,81 @@
+"""Serve a mixed stream of FFT requests through the batched engine.
+
+Mirrors examples/serve_batched.py for the FFT path: a client submits
+independent transform requests — complex fields AND real fields, which
+route to the rfft plan at ~half the wire — and the engine coalesces
+them into batched, overlap-pipelined executions. The outputs are
+bit-identical to running each request alone; only the schedule on the
+wire changes.
+
+    PYTHONPATH=src python examples/serve_fft.py --n 32 --requests 12
+"""
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+
+import repro.fft as fft         # noqa: E402
+from repro.serve import FFTEngine  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--n', type=int, default=32)
+    ap.add_argument('--requests', type=int, default=12)
+    ap.add_argument('--autotune', action='store_true',
+                    help='measure candidate schedules before serving')
+    args = ap.parse_args()
+    n = args.n
+    shape = (n, n, n)
+    mesh = jax.make_mesh((4, 4), ('x', 'y'))
+
+    eng = FFTEngine(shape, mesh)
+    rng = np.random.default_rng(0)
+
+    # a mixed request stream: ~half real fields (rfft plan, half the
+    # wire per request), ~half complex
+    reqs = []
+    for i in range(args.requests):
+        x = rng.standard_normal(shape).astype(np.float32)
+        if i % 2:
+            x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
+        reqs.append(x)
+    if args.autotune:
+        eng.autotune([r for r in reqs if np.iscomplexobj(r)])
+        eng.autotune([r for r in reqs if not np.iscomplexobj(r)])
+
+    tickets = [eng.submit(x) for x in reqs]      # queue everything
+    eng.flush()                                  # warm/compile pass
+    tickets = [eng.submit(x) for x in reqs]
+    t0 = time.perf_counter()
+    eng.flush()
+    outs = [t.result() for t in tickets]
+    jax.block_until_ready(outs)
+    dt = (time.perf_counter() - t0) / len(reqs) * 1e6
+
+    # verify against per-request plans (bit-identical by contract)
+    pc = fft.plan(shape, mesh, donate=False)
+    pr = fft.rplan(shape, mesh)
+    for x, y in zip(reqs, outs):
+        p = pc if np.iscomplexobj(x) else pr
+        ref = p.forward(jax.device_put(jnp.asarray(x), p.in_sharding))
+        assert np.array_equal(np.asarray(y), np.asarray(ref))
+
+    wc, cc = eng.schedule(False)
+    wr, cr = eng.schedule(True)
+    print(f'[serve_fft] {args.requests} mixed requests of {n}^3 on 4x4: '
+          f'{dt:.0f} us/request')
+    print(f'  complex: coalesce={wc} overlap_chunks={cc}   '
+          f'real: coalesce={wr} overlap_chunks={cr}')
+    print(f'  outputs bit-identical to per-request plans; real requests '
+          f'served via rplan (spectrum {pr.spectrum_shape})')
+    print('serve_fft OK')
+
+
+if __name__ == '__main__':
+    main()

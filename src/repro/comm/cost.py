@@ -63,6 +63,13 @@ def select_method(n: int, precision: wm.Precision = 'fp32') -> str:
 #: environment override for the measured table ('' disables it).
 MEASURED_ENV = 'REPRO_MEASURED_COSTS'
 
+#: wire-dtype grid of the measured table per costing precision: fp32
+#: planar pairs move f32 component arrays ('c64' grid; fp16 packs the
+#: pair into the same 32-bit wavelets, so it reads the same grid), and
+#: a future fp64 precision reads the 'c128' grid the benchmark already
+#: measures (reachable today via ``MeasuredTable.swap_us(dtype=...)``).
+PRECISION_WIRE_DTYPE = {'fp16': 'c64', 'fp32': 'c64', 'fp64': 'c128'}
+
 
 def _default_measured_path() -> str:
     return os.path.join(os.path.dirname(__file__), '..', '..', '..',
@@ -70,13 +77,18 @@ def _default_measured_path() -> str:
 
 
 class MeasuredTable:
-    """Measured swap timings: (mesh, group, strategy) -> sorted
-    (per-device f32 elems, us) samples."""
+    """Measured swap timings: (mesh, group, strategy, dtype) -> sorted
+    (per-device elems, us) samples. ``dtype`` is the wire dtype tag of
+    the measured grid point ('c64' / 'c128'); rows without one (older
+    benchmark files, which timed f32 arrays) key on None and serve as
+    the fallback for 'c64' queries only."""
 
     def __init__(self, rows):
-        table: Dict[Tuple[str, str, str], list] = {}
+        table: Dict[Tuple[str, str, str, Optional[str]], list] = {}
         for r in rows:
-            key = (str(r['mesh']), str(r['group']), str(r['strategy']))
+            dt = r.get('dtype')
+            key = (str(r['mesh']), str(r['group']), str(r['strategy']),
+                   None if dt is None else str(dt))
             table.setdefault(key, []).append(
                 (float(r['local_elems']), float(r['us'])))
         self._table = {k: sorted(v) for k, v in table.items()}
@@ -85,13 +97,20 @@ class MeasuredTable:
         return sum(len(v) for v in self._table.values())
 
     def swap_us(self, strategy: str, mesh_shape: Mapping[str, int],
-                mesh_axis, elems: float) -> Optional[float]:
-        """Interpolated us for ONE array of ``elems`` f32 elements per
-        device, or None when this (mesh, group, strategy) was never
-        measured. A planar complex swap is two such arrays."""
+                mesh_axis, elems: float, *,
+                dtype: str = 'c64') -> Optional[float]:
+        """Interpolated us for ONE array of ``elems`` per-device
+        elements (component arrays of a ``dtype`` planar pair), or None
+        when this (mesh, group, strategy) was never measured. A planar
+        complex swap is two such arrays. Prefers grid points measured
+        at exactly ``dtype``; dtype-less (legacy) rows — which timed
+        f32 arrays — only answer for 'c64' (handing them to a c128
+        query would halve the priced wire time)."""
         mesh_key = 'x'.join(str(v) for v in mesh_shape.values())
         group = '*'.join(strat.axis_tuple(mesh_axis))
-        pts = self._table.get((mesh_key, group, strategy))
+        pts = self._table.get((mesh_key, group, strategy, dtype))
+        if pts is None and dtype == 'c64':
+            pts = self._table.get((mesh_key, group, strategy, None))
         if not pts:
             return None
         # only trust measurements near the measured size range —
@@ -172,20 +191,36 @@ class PlanCost:
         return sum(s.cycles for s in self.steps
                    if s.kind in ('swap', 'gather'))
 
+    def overlapped_steps(self) -> Tuple[int, ...]:
+        """Indices of steps inside a compute/comm overlap pair: every
+        adjacent (fft|rfft, swap) pair the executor pipelines. The r2c
+        superstep participates via the split-combine formulation
+        (chunks of a free axis r2c + pad + swap independently)."""
+        out, i, steps = [], 0, self.steps
+        while i < len(steps):
+            nxt = steps[i + 1] if i + 1 < len(steps) else None
+            if (steps[i].kind in ('fft', 'rfft') and nxt is not None
+                    and nxt.kind == 'swap'):
+                out += [i, i + 1]
+                i += 2
+                continue
+            i += 1
+        return tuple(out)
+
     @property
     def cycles(self) -> float:
         """Total with the overlap pipeline applied to every adjacent
-        (fft, swap) pair: each pair costs (Tf+Ts)/c + (c-1)/c *
+        (fft|rfft, swap) pair: each pair costs (Tf+Ts)/c + (c-1)/c *
         max(Tf, Ts) + c * overhead instead of Tf + Ts."""
         c = self.overlap_chunks
         if c <= 1:
             return self.serial_cycles
         total, i, steps = 0.0, 0, self.steps
+        paired = set(self.overlapped_steps())
         while i < len(steps):
             s = steps[i]
-            nxt = steps[i + 1] if i + 1 < len(steps) else None
-            if s.kind == 'fft' and nxt is not None and nxt.kind == 'swap':
-                tf, ts = s.cycles, nxt.cycles
+            if i in paired:
+                tf, ts = s.cycles, steps[i + 1].cycles
                 total += ((tf + ts) / c + (c - 1) / c * max(tf, ts)
                           + c * OVERLAP_CHUNK_OVERHEAD)
                 i += 2
@@ -196,6 +231,45 @@ class PlanCost:
 
     def runtime_us(self) -> float:
         return wm.runtime_us(self.cycles)
+
+    # -- serving throughput model (batched request coalescing) --------------
+
+    def pipeline_cycles(self, batch: int,
+                        overlap_chunks: Optional[int] = None) -> float:
+        """Predicted cycles for ``batch`` coalesced requests executed as
+        ONE batched call pipelined over ``overlap_chunks`` chunks of the
+        request axis (default: one chunk per request).
+
+        The whole batched schedule splits into compute cycles C and
+        wire cycles W per request; with c chunks, chunk i+1's compute
+        overlaps chunk i's redistribution, so the batch costs
+        ``b*(C+W)/c + (c-1)/c * b*max(C, W) + c * overhead`` — the
+        steady state approaches ``max(C, W)`` per request (wires busy
+        during compute), the latency term is the first chunk's fill."""
+        b = max(int(batch), 1)
+        c = b if overlap_chunks is None else max(int(overlap_chunks), 1)
+        c = min(c, b)
+        w = self.wire_cycles
+        comp = self.serial_cycles - w
+        if c <= 1:
+            return b * self.serial_cycles
+        return (b * (comp + w) / c + (c - 1) / c * b * max(comp, w)
+                + c * OVERLAP_CHUNK_OVERHEAD)
+
+    def pipeline_us(self, batch: int,
+                    overlap_chunks: Optional[int] = None) -> float:
+        """Steady-state wall-us PER REQUEST when ``batch`` requests are
+        coalesced into one pipelined execution — the serve engine's
+        throughput objective (vs :meth:`pipeline_latency_us`, the
+        whole-batch latency a single request may wait for)."""
+        return wm.runtime_us(self.pipeline_cycles(batch, overlap_chunks)
+                             / max(int(batch), 1))
+
+    def pipeline_latency_us(self, batch: int,
+                            overlap_chunks: Optional[int] = None) -> float:
+        """Wall-us for the whole coalesced batch — what the *first*
+        request queued into it waits before its result is ready."""
+        return wm.runtime_us(self.pipeline_cycles(batch, overlap_chunks))
 
 
 def _local_shape(shape: Sequence[int], layout: Layout,
@@ -216,17 +290,22 @@ def _swap_step(mesh_axis, mesh_shape, elems: float, strategy: str,
                precision: wm.Precision,
                measured: Optional[MeasuredTable] = None, *,
                measured_arrays: int = 2,
-               measured_elems: Optional[float] = None) -> StepCost:
+               measured_elems: Optional[float] = None,
+               measured_dtype: Optional[str] = None) -> StepCost:
     """One swap of ``elems`` local complex elements. The measured path
     prices what actually moves: by default a planar pair — two f32
     arrays of ``elems`` elements each; a single-real-array swap (the
     rank-1 real four-step's first exchange) passes ``measured_arrays=1``
-    with its own f32 ``measured_elems``."""
+    with its own f32 ``measured_elems``. ``measured_dtype`` picks the
+    dtype grid of the measured table (default: the grid matching
+    ``precision`` per :data:`PRECISION_WIRE_DTYPE`)."""
     ax = '*'.join(strat.axis_tuple(mesh_axis))
     if measured is not None:
+        if measured_dtype is None:
+            measured_dtype = PRECISION_WIRE_DTYPE.get(precision, 'c64')
         us = measured.swap_us(strategy, mesh_shape, mesh_axis,
                               elems if measured_elems is None
-                              else measured_elems)
+                              else measured_elems, dtype=measured_dtype)
         if us is not None:
             cyc = measured_arrays * us * (wm.CLOCK_HZ / 1e6)
             p = strat.static_group_size(mesh_axis, mesh_shape)
@@ -369,8 +448,10 @@ def feasible_overlap(shape: Sequence[int], layout: Layout,
     """Chunk counts for which *every* (fft, swap) pair the executor
     would pipeline has a free local axis to chunk over — the same
     candidate rule the executor applies per pair. The r2c superstep of
-    a real plan is never pipelined (it changes the axis extent), and
-    pairs after it see the padded half-spectrum local shape."""
+    a real plan joins via the split-combine formulation: chunks of a
+    free axis of the REAL input run r2c + pad + swap independently, so
+    its pair excludes the real axis and the swap's shard axis; pairs
+    after it see the padded half-spectrum local shape."""
     from repro.fft import pencil as _pencil
     from repro.core import plan as planlib
     ra = len(shape) - 1 if real else None
@@ -383,11 +464,19 @@ def feasible_overlap(shape: Sequence[int], layout: Layout,
         step = steps[i]
         nxt = steps[i + 1] if i + 1 < len(steps) else None
         if step[0] == 'fft' and real and step[1] == ra:
-            cur[ra] = _pencil.real_padded_extent(shape, layout, mesh_shape)
             if nxt is not None and nxt[0] == 'swap':
+                _, mesh_axis, mem_pos = nxt
+                sp = planlib.owner_pos(lay, mesh_axis)
+                local = _local_shape(cur, lay, mesh_shape)
+                pair_axes.append(tuple(
+                    local[p] for p in range(len(lay))
+                    if p not in (mem_pos, sp, ra)))
+                cur[ra] = _pencil.real_padded_extent(shape, layout,
+                                                     mesh_shape)
                 lay = planlib.swap(lay, nxt[1], nxt[2])
                 i += 2
                 continue
+            cur[ra] = _pencil.real_padded_extent(shape, layout, mesh_shape)
         elif step[0] == 'fft' and nxt is not None and nxt[0] == 'swap':
             _, mesh_axis, mem_pos = nxt
             sp = planlib.owner_pos(lay, mesh_axis)
@@ -478,14 +567,19 @@ def format_report(pc: PlanCost, shape: Sequence[int],
         f"precision={pc.precision} overlap_chunks={pc.overlap_chunks}",
         f"{'step':>4}  {'kind':<8} {'detail':<34} {'cycles':>14}",
     ]
+    paired = set(pc.overlapped_steps())
     for i, s in enumerate(pc.steps):
-        lines.append(f"{i:>4}  {s.kind:<8} {s.detail:<34} {s.cycles:>14.0f}")
+        mark = '  ~ovl' if (pc.overlap_chunks > 1 and i in paired) else ''
+        lines.append(f"{i:>4}  {s.kind:<8} {s.detail:<34} "
+                     f"{s.cycles:>14.0f}{mark}")
     lines.append(f"{'':>4}  {'total':<8} {'(serial)':<34} "
                  f"{pc.serial_cycles:>14.0f}")
     if pc.overlap_chunks > 1:
         lines.append(f"{'':>4}  {'total':<8} "
                      f"{f'(pipelined x{pc.overlap_chunks})':<34} "
                      f"{pc.cycles:>14.0f}")
+        lines.append("      ~ovl: inside a compute/comm overlap pair "
+                     "(r2c joins via split-combine)")
     lines.append(f"      predicted runtime: {pc.runtime_us():.1f} us "
                  f"@ {wm.CLOCK_HZ / 1e6:.0f} MHz")
     n = shape[0]

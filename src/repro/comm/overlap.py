@@ -13,12 +13,23 @@ composes with every registered strategy and every caller: the pencil
 supersteps, the large-1D four-step, MoE expert dispatch and Ulysses
 sequence-parallel attention.
 
-Everything here runs *inside* ``shard_map`` on per-device local blocks.
+Two granularities live here:
+
+* :func:`pipelined` / :func:`overlapped_fft_swap` run *inside*
+  ``shard_map`` on per-device local blocks — they chunk ONE call's
+  work so chunk i+1's compute overlaps chunk i's collective.
+* :func:`pipelined_stream` runs at the host level, *outside* jit — it
+  keeps a bounded window of whole dispatched calls in flight (the
+  serve engine's cross-request double buffer), so request group g+1's
+  pencil FFTs are already dispatched while group g's redistribution
+  drains.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence, Tuple
+from collections import deque
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -57,6 +68,49 @@ def pipelined(n_chunks: int, axis: int, fn: Callable, *arrays: jnp.ndarray):
         return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
                      for k in range(len(outs[0])))
     return jnp.concatenate(outs, axis=axis)
+
+
+def pipelined_stream(fn: Callable, stream: Iterable, *,
+                     depth: int = 2,
+                     on_result: Optional[Callable] = None) -> List:
+    """Map ``fn`` over a stream of requests with at most ``depth``
+    dispatched-but-unforced results in flight (double-buffering at the
+    default depth of 2).
+
+    jax dispatch is asynchronous: calling ``fn(item_{i+1})`` right
+    after ``fn(item_i)`` returns puts both executables in the device
+    queue, and XLA's latency-hiding scheduler overlaps request i+1's
+    local compute with request i's collectives. An *unbounded* queue,
+    though, stages every request's operand at once; blocking on the
+    oldest in-flight result before dispatching a new one caps live
+    operands at ``depth`` (with donated inputs: ``depth`` buffers
+    total, not 2x). Returns the results in stream order.
+
+    ``on_result`` is called with each result right after it is FORCED
+    (block_until_ready succeeded), in stream order — so when a later
+    item fails at execution time, callers see exactly the prefix that
+    completed, never an unforced (possibly poisoned) value.
+    """
+    if depth < 1:
+        raise ValueError(f"pipelined_stream needs depth >= 1, got {depth}")
+
+    def force(r):
+        r = jax.block_until_ready(r)
+        if on_result is not None:
+            on_result(r)
+        return r
+
+    out: List = []
+    inflight: deque = deque()
+    for item in stream:
+        # drain BEFORE dispatching so at most ``depth`` groups' operands
+        # are ever staged at once (depth=1 serializes)
+        while len(inflight) >= depth:
+            out.append(force(inflight.popleft()))
+        inflight.append(fn(item))
+    while inflight:
+        out.append(force(inflight.popleft()))
+    return out
 
 
 def overlapped_fft_swap(re: jnp.ndarray, im: jnp.ndarray, *,

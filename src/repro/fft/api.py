@@ -48,7 +48,8 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
          comm: str = 'auto', overlap_chunks: Optional[int] = None,
          restore_layout: bool = False,
          batch_spec: Optional[str] = None,
-         real: bool = False, padded_spectrum: bool = False) -> 'FFT':
+         real: bool = False, padded_spectrum: bool = False,
+         donate: bool = True) -> 'FFT':
     """Plan a distributed FFT of a ``len(shape)``-dimensional array.
 
     Args:
@@ -104,6 +105,16 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         elementwise updates work unchanged (pad bins are dropped by the
         inverse before the c2r step) — use this for in-situ
         forward/update/inverse loops and large meshes.
+      donate: donate the input operand buffer to every cached
+        executable (``jax.jit`` ``donate_argnums``) so XLA reuses it
+        for the output — the input and output of a complex plan have
+        identical byte layout per device even though the sharding
+        rotates, so each in-flight transform holds ONE operand-sized
+        buffer instead of two. The donated array is CONSUMED: touching
+        it after ``forward``/``inverse`` raises; pass ``donate=False``
+        (the escape hatch) to keep FFTW-style reusable input buffers.
+        Real plans never donate — the r2c/c2r boundary changes the
+        buffer size, so XLA could not alias the pair anyway.
 
     Returns an :class:`FFT` plan with ``forward``/``inverse``/
     ``in_sharding``/``out_sharding``/``cost_report``.
@@ -146,7 +157,8 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
                    compute_dtype=compute_dtype, use_kernel=use_kernel,
                    comm=strategy, overlap_chunks=oc,
                    restore_layout=restore_layout, real=real,
-                   batch_spec=batch_spec, axes1d=axes, factors=(n1, n2))
+                   batch_spec=batch_spec, donate=donate,
+                   axes1d=axes, factors=(n1, n2))
 
     if layout is None:
         if rank == 2:
@@ -180,7 +192,7 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
                comm=strategy, overlap_chunks=oc,
                restore_layout=restore_layout, real=real,
                padded_spectrum=padded_spectrum,
-               batch_spec=batch_spec, pplan=pplan)
+               batch_spec=batch_spec, donate=donate, pplan=pplan)
 
 
 def rplan(shape: Sequence[int], mesh: Mesh, **kw) -> 'FFT':
@@ -243,11 +255,19 @@ class FFT:
     spectrum (:attr:`spectrum_shape` — last axis ``n//2 + 1``, exactly
     ``np.fft.rfftn``'s layout); ``inverse`` takes the half spectrum
     (complex or planar) and returns the real array.
+
+    By default (``donate=True``) complex plans CONSUME their operand:
+    the executable donates the input buffer to XLA, which reuses it for
+    the output (:attr:`donates_input`). Reusing a jax array after
+    passing it in raises; plan with ``donate=False`` for FFTW-style
+    reusable buffers. numpy operands are unaffected (they are copied to
+    device per call anyway).
     """
 
     def __init__(self, *, shape, mesh, method, compute_dtype, use_kernel,
                  comm, overlap_chunks, restore_layout, batch_spec,
                  real: bool = False, padded_spectrum: bool = False,
+                 donate: bool = True,
                  pplan: Optional[PencilPlan] = None,
                  axes1d: Optional[Tuple[str, ...]] = None,
                  factors: Optional[Tuple[int, int]] = None):
@@ -263,11 +283,42 @@ class FFT:
         self.batch_spec = batch_spec
         self.real = real
         self.padded_spectrum = padded_spectrum
+        self.donate = donate
         self._pplan = pplan
         self._axes1d = axes1d
         self._factors = factors
         self._raw_cache = {}    # (direction, batched) -> planar global fn
         self._exec_cache = {}   # (direction, batch_shape, dtype, form) -> jitted
+
+    @property
+    def donates_input(self) -> bool:
+        """True when this plan's executables consume their input buffer
+        (``donate`` requested AND the aliasing is structurally possible
+        — complex plans only; the r2c/c2r boundary of a real plan
+        changes the buffer size, so donation would be a silent no-op)."""
+        return self.donate and not self.real
+
+    def with_options(self, **overrides) -> 'FFT':
+        """Re-plan this FFT with some options changed (e.g.
+        ``overlap_chunks``, ``donate``, ``comm``) — everything not
+        overridden carries over already *resolved*, so no 'auto' choice
+        is re-made. The new plan has its own executable caches."""
+        kw = dict(method=self.method, compute_dtype=self.compute_dtype,
+                  use_kernel=self.use_kernel, comm=self.comm,
+                  overlap_chunks=self.overlap_chunks,
+                  restore_layout=self.restore_layout,
+                  batch_spec=self.batch_spec, real=self.real,
+                  padded_spectrum=self.padded_spectrum, donate=self.donate)
+        if self.rank == 1:
+            kw['mesh_axes'] = self._axes1d
+        else:
+            kw['layout'] = self._pplan.layout
+        kw.update(overrides)
+        if not kw['real']:
+            # padded_spectrum is a real-plan-only knob; a real -> complex
+            # re-plan must not carry it into plan() validation
+            kw['padded_spectrum'] = False
+        return plan(self.shape, self.mesh, **kw)
 
     @property
     def _real_pad(self) -> int:
@@ -449,14 +500,18 @@ class FFT:
                 yi = yi.reshape(out_shape)
             return yr, yi
 
+        # donated inputs: same global shape/dtype in and out, so XLA
+        # aliases the buffers even across the layout rotation — one
+        # live operand per in-flight transform
+        dn = self.donates_input
         if planar:
-            return jax.jit(run_planar)
+            return jax.jit(run_planar, donate_argnums=(0, 1) if dn else ())
 
         def run_complex(x):
             yr, yi = run_planar(x.real, x.imag)
             return jax.lax.complex(yr, yi)
 
-        return jax.jit(run_complex)
+        return jax.jit(run_complex, donate_argnums=(0,) if dn else ())
 
     def _build_real(self, direction, raw, batch_shape, flatb, planar):
         """Executable wrappers for real plans: the raw pipeline speaks

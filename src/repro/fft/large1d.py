@@ -100,9 +100,13 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
 
     def local(ar, ai):
         # the whole four-step is batch-independent: pipelining it over
-        # batch chunks overlaps chunk i's swaps with chunk i+1's DFTs
-        if off and overlap_chunks > 1 and ar.shape[0] % overlap_chunks == 0:
-            return ov.pipelined(overlap_chunks, 0, body, ar, ai)
+        # batch chunks overlaps chunk i's swaps with chunk i+1's DFTs;
+        # the shared chunk-axis rule falls back to the unpipelined body
+        # when the batch doesn't divide (e.g. odd request counts)
+        ck = (ov.pick_chunk_axis(ar.shape[:1], (), overlap_chunks)
+              if off else None)
+        if ck is not None:
+            return ov.pipelined(overlap_chunks, ck, body, ar, ai)
         return body(ar, ai)
 
     spec = P(*(((batch_spec,) if off else ()) + (mesh_axis, None)))
@@ -197,8 +201,10 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
     body = body_inv if inverse else body_fwd
 
     def local(*arrays):
-        if off and overlap_chunks > 1 and arrays[0].shape[0] % overlap_chunks == 0:
-            return ov.pipelined(overlap_chunks, 0, body, *arrays)
+        ck = (ov.pick_chunk_axis(arrays[0].shape[:1], (), overlap_chunks)
+              if off else None)
+        if ck is not None:
+            return ov.pipelined(overlap_chunks, ck, body, *arrays)
         return body(*arrays)
 
     spec = P(*(((batch_spec,) if off else ()) + (mesh_axis, None)))

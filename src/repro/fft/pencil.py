@@ -180,10 +180,13 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
             mem = step[1]
             _, mesh_axis, mem_pos = nxt
             sp = planlib.owner_pos(lay, mesh_axis)
-            # chunk axis: a local axis that is neither the fft axis nor the
-            # swap axes; fall back to no overlap if none exists.
-            ck = ov.pick_chunk_axis(plan.local_shape(lay),
-                                    (mem, mem_pos, sp), overlap_chunks)
+            # chunk axis: any local axis — leading batch axes included,
+            # which is what pipelines a coalesced request batch — that
+            # is neither the fft axis nor the swap axes; fall back to
+            # no overlap if none exists.
+            ck = ov.pick_chunk_axis(re.shape,
+                                    (off + mem, off + mem_pos, off + sp),
+                                    overlap_chunks)
             if ck is not None:
                 re, im = ov.overlapped_fft_swap(
                     re, im,
@@ -192,7 +195,7 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
                     swap_fn=lambda a, ma=mesh_axis, s=sp, mp=mem_pos:
                         strategy.swap_axes(a, ma, shard_pos=off + s,
                                            mem_pos=off + mp),
-                    chunk_axis=off + ck, n_chunks=overlap_chunks)
+                    chunk_axis=ck, n_chunks=overlap_chunks)
                 lay = planlib.swap(lay, mesh_axis, mem_pos)
                 i += 2
                 continue
@@ -268,31 +271,105 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                                     dict(plan.mesh.shape),
                                     restore_layout=restore_layout)
         packed = packed_plan(plan, nh_pad)
+        off = batch_ndim
+        strategy = comm.resolve(plan.comm)
 
-        def local_real_fwd(x):
-            assert steps[0] == ('fft', ra), steps
-            re, im = methods.apply_real(x, axis=batch_ndim + ra,
+        def r2c(x):
+            re, im = methods.apply_real(x, axis=off + ra,
                                         method=plan.method,
                                         compute_dtype=plan.compute_dtype)
             if nh_pad != nh:
                 pw = [(0, 0)] * re.ndim
-                pw[batch_ndim + ra] = (0, nh_pad - nh)
+                pw[off + ra] = (0, nh_pad - nh)
                 re, im = jnp.pad(re, pw), jnp.pad(im, pw)
-            return _execute(re, im, in_layout, steps[1:], inverse=False,
+            # pin the fusion boundary between the Hermitian combine and
+            # the following collective: without it XLA contracts the
+            # combine's mul/add chains differently per batch shape, and
+            # batched (serving) executions stop being bit-identical to
+            # per-request ones (measured at 32^3; the complex pipeline
+            # has no such epilogue and is stable without help)
+            return jax.lax.optimization_barrier((re, im))
+
+        def c2r(re, im):
+            re, im = jax.lax.optimization_barrier((re, im))
+            re = jax.lax.slice_in_dim(re, 0, nh, axis=off + ra)
+            im = jax.lax.slice_in_dim(im, 0, nh, axis=off + ra)
+            return methods.apply_real(re, im, axis=off + ra, inverse=True,
+                                      method=plan.method,
+                                      compute_dtype=plan.compute_dtype)
+
+        def local_real_fwd(x):
+            assert steps[0] == ('fft', ra), steps
+            rest = steps[1:]
+            # split-combine overlap of the r2c superstep: the extent
+            # change (n -> nh_pad) happens per chunk of a free axis of
+            # the REAL input, so r2c + pad + swap pipeline like any
+            # other (fft, swap) pair; chunk i+1's half-spectrum build
+            # overlaps chunk i's exchange. Fall back to the whole-array
+            # path when no free axis divides.
+            if overlap_chunks > 1 and rest and rest[0][0] == 'swap':
+                _, mesh_axis, mem_pos = rest[0]
+                sp = planlib.owner_pos(in_layout, mesh_axis)
+                ck = ov.pick_chunk_axis(x.shape,
+                                        (off + ra, off + mem_pos, off + sp),
+                                        overlap_chunks)
+                if ck is not None:
+                    def stage(xc):
+                        cr, ci = r2c(xc)
+                        return (strategy.swap_axes(
+                                    cr, mesh_axis, shard_pos=off + sp,
+                                    mem_pos=off + mem_pos),
+                                strategy.swap_axes(
+                                    ci, mesh_axis, shard_pos=off + sp,
+                                    mem_pos=off + mem_pos))
+                    re, im = ov.pipelined(overlap_chunks, ck, stage, x)
+                    lay = planlib.swap(in_layout, mesh_axis, mem_pos)
+                    return _execute(re, im, lay, rest[1:], inverse=False,
+                                    plan=packed, batch_ndim=batch_ndim,
+                                    overlap_chunks=overlap_chunks)
+            re, im = r2c(x)
+            return _execute(re, im, in_layout, rest, inverse=False,
                             plan=packed, batch_ndim=batch_ndim,
                             overlap_chunks=overlap_chunks)
 
         def local_real_inv(re, im):
             assert steps[-1] == ('fft', ra), steps
-            re, im = _execute(re, im, in_layout, steps[:-1], inverse=True,
+            head, tail = steps[:-1], None
+            # mirror split-combine: the final (swap, c2r) pair chunks a
+            # free axis, so chunk i+1's exchange overlaps chunk i's c2r
+            if (overlap_chunks > 1 and len(head) >= 1
+                    and head[-1][0] == 'swap'):
+                lay = in_layout
+                for st in head[:-1]:
+                    if st[0] == 'swap':
+                        lay = planlib.swap(lay, st[1], st[2])
+                _, mesh_axis, mem_pos = head[-1]
+                sp = planlib.owner_pos(lay, mesh_axis)
+                # feasibility on the local shape the pair will SEE —
+                # after the head steps, not the entry shape
+                pre = tuple(re.shape[:off]) + tuple(packed.local_shape(lay))
+                ck = ov.pick_chunk_axis(pre,
+                                        (off + ra, off + mem_pos, off + sp),
+                                        overlap_chunks)
+                if ck is not None:
+                    tail = (mesh_axis, mem_pos, sp, ck)
+                    head = head[:-1]
+            re, im = _execute(re, im, in_layout, head, inverse=True,
                               plan=packed, batch_ndim=batch_ndim,
                               overlap_chunks=overlap_chunks)
-            ax = batch_ndim + ra
-            re = jax.lax.slice_in_dim(re, 0, nh, axis=ax)
-            im = jax.lax.slice_in_dim(im, 0, nh, axis=ax)
-            return methods.apply_real(re, im, axis=ax, inverse=True,
-                                      method=plan.method,
-                                      compute_dtype=plan.compute_dtype)
+            if tail is not None:
+                mesh_axis, mem_pos, sp, ck = tail
+
+                def stage_inv(cr, ci):
+                    cr = strategy.swap_axes(cr, mesh_axis,
+                                            shard_pos=off + sp,
+                                            mem_pos=off + mem_pos)
+                    ci = strategy.swap_axes(ci, mesh_axis,
+                                            shard_pos=off + sp,
+                                            mem_pos=off + mem_pos)
+                    return c2r(cr, ci)
+                return ov.pipelined(overlap_chunks, ck, stage_inv, re, im)
+            return c2r(re, im)
 
         if inverse:
             fn = shard_map(local_real_inv, mesh=plan.mesh,

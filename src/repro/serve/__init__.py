@@ -1,1 +1,5 @@
 from repro.serve.engine import make_prefill_step, make_decode_step, ServeEngine
+from repro.serve.fft_engine import FFTEngine, FFTTicket
+
+__all__ = ['FFTEngine', 'FFTTicket', 'ServeEngine', 'make_decode_step',
+           'make_prefill_step']

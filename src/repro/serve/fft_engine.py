@@ -1,0 +1,478 @@
+"""Batched FFT serving: cross-request compute/communication overlap.
+
+A stream of independent transform requests executed one jit call at a
+time leaves the wires idle during each request's pencil FFTs and the
+ALUs idle during its transposes — the steady-state pipelining that
+gives the paper its headline number never materializes across request
+boundaries. :class:`FFTEngine` closes that gap in three layers:
+
+* **coalescing** — queued requests of the same kind (complex/real,
+  forward/inverse, dtype, front-end form) are stacked along a new
+  leading batch axis and executed as ONE batched plan call; the
+  coalesce width comes from the cost model's throughput objective
+  (:meth:`repro.comm.cost.PlanCost.pipeline_us`).
+* **in-call pipelining** — the batched executable runs with
+  ``overlap_chunks`` over the request axis, so request i+1's pencil
+  FFTs overlap request i's redistribution inside every superstep pair
+  (:mod:`repro.comm.overlap`); real requests join via the r2c
+  split-combine pair in :mod:`repro.fft.pencil`.
+* **cross-call double buffering** — groups are dispatched through
+  :func:`repro.comm.overlap.pipelined_stream`, which keeps the next
+  group in flight while the previous drains. A whole group is ONE
+  dispatch: the stack / batched transform / unstack are fused into a
+  single group executable (per-request slicing outside jit costs a
+  full multi-device dispatch per request — as much as a swap).
+
+Results are bit-identical to per-request ``plan.forward``/``inverse``
+execution — coalescing changes the schedule on the wire, never the
+values. Donation follows the plan contract: with ``donate=True`` every
+request's input buffer aliases its own output inside the group
+executable (complex kinds), so submitted jax arrays are CONSUMED and
+each in-flight request holds one operand-sized buffer instead of two;
+numpy submissions are copied to device and the caller's data is
+untouched. Pass ``donate=False`` to keep submitted jax arrays alive.
+
+    eng = FFTEngine((n, n, n), mesh)
+    tickets = [eng.submit(x) for x in requests]      # complex or real
+    eng.flush()                                      # batched + pipelined
+    ys = [t.result() for t in tickets]
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import overlap as ov
+from repro.fft import api as fft_api
+
+
+class FFTTicket:
+    """Handle for one submitted transform; ``result()`` flushes the
+    engine if the request has not been executed yet."""
+
+    __slots__ = ('_engine', '_value', '_done')
+
+    def __init__(self, engine: 'FFTEngine'):
+        self._engine = engine
+        self._value = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            self._engine.flush()
+        if not self._done:
+            raise RuntimeError(
+                "request was never executed — an earlier flush() must "
+                "have failed; it was re-queued, flush() again (donated "
+                "operands from the failed group cannot be retried)")
+        return self._value
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self._done = True
+
+
+class FFTEngine:
+    """Batched FFT serving engine with cross-request overlap.
+
+    Args:
+      plan_like: the transform to serve — a global ``shape`` tuple, or
+        an existing :class:`repro.fft.FFT` plan whose resolved settings
+        (method, strategy, layout, ...) the engine adopts.
+      mesh: device mesh (required when ``plan_like`` is a shape).
+      max_coalesce: upper bound on requests coalesced into one batched
+        execution; the actual width is cost-picked per kind.
+      overlap_chunks: force the in-call pipelining depth over the
+        request axis (default: cost-picked, at most the batch width).
+      latency_budget_us: optional cap on the *model-predicted* whole-
+        batch latency (:meth:`PlanCost.pipeline_latency_us`) — trims
+        the coalesce width so no request waits for an oversized batch.
+      donate: donate request buffers to the group executables (complex
+        plans; real plans cannot alias across the r2c boundary).
+        Submitted jax arrays are consumed; numpy submissions are safe.
+      depth: dispatched-but-unforced groups kept in flight
+        (:func:`repro.comm.overlap.pipelined_stream`; 2 = the classic
+        double buffer).
+      **plan_kwargs: forwarded to ``fft.plan`` when the engine builds a
+        plan itself (method, comm, compute_dtype, padded_spectrum, ...).
+        ``batch_spec`` is not allowed — the engine owns the batch axis.
+    """
+
+    def __init__(self, plan_like, mesh=None, *, max_coalesce: int = 16,
+                 overlap_chunks: Optional[int] = None,
+                 latency_budget_us: Optional[float] = None,
+                 donate: Optional[bool] = None, depth: int = 2,
+                 **plan_kwargs):
+        if 'batch_spec' in plan_kwargs:
+            raise ValueError("the engine owns the leading batch axis; "
+                             "batch_spec plans cannot be served")
+        if max_coalesce < 1:
+            raise ValueError(f"max_coalesce must be >= 1, got {max_coalesce}")
+        self.max_coalesce = int(max_coalesce)
+        self.forced_chunks = overlap_chunks
+        self.latency_budget_us = latency_budget_us
+        self.depth = depth
+        self._plan_kwargs = dict(plan_kwargs)
+        self._plans: Dict[bool, fft_api.FFT] = {}     # real? -> FFT
+        self._schedules: Dict[bool, Tuple[int, int]] = {}
+        self._queue: List[Tuple[FFTTicket, tuple, object]] = []
+        self._group_cache: Dict[tuple, object] = {}   # group executables
+        if isinstance(plan_like, fft_api.FFT):
+            seed = plan_like
+            if seed.batch_spec is not None:
+                raise ValueError("the engine owns the leading batch axis; "
+                                 "batch_spec plans cannot be served")
+            self.shape = seed.shape
+            self.mesh = seed.mesh
+            self.donate = seed.donate if donate is None else donate
+            self._seed_plan(seed)
+        else:
+            if mesh is None:
+                raise ValueError("FFTEngine(shape, mesh): mesh is required "
+                                 "when plan_like is a shape")
+            self.shape = tuple(int(s) for s in plan_like)
+            self.mesh = mesh
+            self.donate = True if donate is None else donate
+
+    # -- plans + schedules --------------------------------------------------
+
+    def _seed_plan(self, seed: fft_api.FFT) -> None:
+        w, c = self._pick_schedule(seed)
+        if c != seed.overlap_chunks or self.donate != seed.donate:
+            seed = seed.with_options(overlap_chunks=c, donate=self.donate)
+        self._plans[seed.real] = seed
+        self._schedules[seed.real] = (w, c)
+
+    def _plan(self, real: bool) -> fft_api.FFT:
+        p = self._plans.get(real)
+        if p is not None:
+            return p
+        other = self._plans.get(not real)
+        if other is not None:
+            # adopt the sibling's resolved settings (overlap depth
+            # included — _seed_plan only re-plans when the cost pick
+            # disagrees); padded_spectrum is a real-plan-only knob
+            padded = (self._plan_kwargs.get('padded_spectrum',
+                                            other.padded_spectrum)
+                      if real else False)
+            p = other.with_options(real=real, padded_spectrum=padded)
+        else:
+            kw = dict(self._plan_kwargs)
+            if not real:
+                kw.pop('padded_spectrum', None)
+            p = fft_api.plan(self.shape, self.mesh, real=real,
+                             donate=self.donate, **kw)
+        self._seed_plan(p)
+        return self._plans[real]
+
+    def _pick_schedule(self, p: fft_api.FFT) -> Tuple[int, int]:
+        """Cost-picked (coalesce width, overlap chunks): minimize the
+        steady-state us/request of the batched pipeline, subject to the
+        latency budget; ties go to the smaller batch (lower latency)."""
+        pc = p.plan_cost()
+        widths = [1]
+        while widths[-1] * 2 <= self.max_coalesce:
+            widths.append(widths[-1] * 2)
+        best, best_us = (1, 1), pc.pipeline_us(1)
+        for w in widths:
+            if self.forced_chunks is not None:
+                chunk_opts = [max(1, min(self.forced_chunks, w))]
+            else:
+                chunk_opts = [c for c in (1, 2, 4, 8, 16)
+                              if c <= w and w % c == 0]
+            for c in chunk_opts:
+                if (self.latency_budget_us is not None
+                        and pc.pipeline_latency_us(w, c)
+                        > self.latency_budget_us):
+                    continue
+                us = pc.pipeline_us(w, c)
+                if us < best_us - 1e-9:
+                    best, best_us = (w, c), us
+        return best
+
+    def schedule(self, real: bool = False) -> Tuple[int, int]:
+        """The (coalesce width, overlap chunks) serving this kind."""
+        self._plan(real)
+        return self._schedules[real]
+
+    def autotune(self, sample: Sequence, *, direction: str = 'fwd',
+                 real: Optional[bool] = None, repeats: int = 3,
+                 widths: Optional[Sequence[int]] = None,
+                 chunks: Optional[Sequence[int]] = None) -> Tuple[int, int]:
+        """FFTW_MEASURE-style schedule pick: time candidate (coalesce
+        width, overlap_chunks) schedules on REAL sample operands and
+        adopt the fastest for this request kind.
+
+        The cost model's pick (:meth:`_pick_schedule`) prices the WSE;
+        on other backends the per-chunk dispatch overhead it assumes
+        can be off by orders of magnitude, so — like the measured swap
+        table of :mod:`repro.comm.cost` — a measurement beats the
+        model where one is possible. Compiles one executable per
+        distinct (width, chunks) candidate; use on a warm serving
+        setup, not per request. Returns the adopted (width, chunks)."""
+        import time as _time
+        if not sample:
+            raise ValueError("autotune needs at least one sample operand")
+        if real is None:
+            # same kind inference as submit()
+            first = sample[0]
+            if isinstance(first, (tuple, list)):
+                real = (False if direction == 'fwd'
+                        else self._infer_inverse_kind(
+                            tuple(np.asarray(first[0]).shape)))
+            elif direction == 'fwd':
+                real = not jnp.issubdtype(jnp.asarray(first).dtype,
+                                          jnp.complexfloating)
+            else:
+                real = self._infer_inverse_kind(
+                    tuple(jnp.asarray(first).shape))
+        base = self._plan(bool(real))
+        if widths is None:
+            widths = [1]
+            while (widths[-1] * 2 <= self.max_coalesce
+                   and widths[-1] < len(sample)):
+                widths.append(widths[-1] * 2)
+        if chunks is None:
+            chunks = (1, 2, 4, 8)
+        # tune on donate=False siblings: the timed runs re-feed the
+        # same sample operands, which donating executables would consume
+        plans = {}
+        for c in {c for w in widths for c in chunks
+                  if c <= w and w % c == 0}:
+            plans[c] = base.with_options(overlap_chunks=c, donate=False)
+        ops = [x if isinstance(x, (tuple, list)) else jnp.asarray(x)
+               for x in sample]
+        planar = isinstance(ops[0], (tuple, list))
+
+        def make_run(w, c):
+            groups = [ops[i:i + w] for i in range(0, len(ops), w)]
+            p = plans[c]
+
+            def run():
+                t0 = _time.perf_counter()
+                outs = ov.pipelined_stream(
+                    lambda g: self._run_group(p, direction, planar, g),
+                    groups, depth=self.depth)
+                jax.block_until_ready(outs)
+                return (_time.perf_counter() - t0) / len(ops) * 1e6
+            return run
+
+        runs = {(w, c): make_run(w, c) for w in widths for c in chunks
+                if c <= w and w % c == 0}
+        for run in runs.values():              # compile + warm everything
+            run()
+        # interleaved rounds with min aggregation: host wall time drifts
+        # in multi-second phases, so consecutive per-candidate timing
+        # hands the win to whoever sampled a quiet phase; round-robin
+        # spreads every phase over every candidate, and the min is the
+        # closest thing to the uncontended floor
+        timings = {k: [] for k in runs}
+        for _ in range(max(repeats, 1)):
+            for k, run in runs.items():
+                timings[k].append(run())
+        best = min(runs, key=lambda k: min(timings[k]))
+        w, c = best
+        self._plans[bool(real)] = (base if c == base.overlap_chunks
+                                   else base.with_options(overlap_chunks=c))
+        self._schedules[bool(real)] = (w, c)
+        # drop the tuning siblings' executables
+        self._group_cache = {k: v for k, v in self._group_cache.items()
+                             if k[0] in self._plans.values()}
+        return best
+
+    def plan_for(self, real: bool = False) -> fft_api.FFT:
+        """The engine's plan for this kind (its executable cache is
+        shared across every batch width the engine runs)."""
+        return self._plan(real)
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, x, *, direction: str = 'fwd',
+               real: Optional[bool] = None) -> FFTTicket:
+        """Queue one transform request (exactly the planned shape — the
+        engine owns batching). ``real=None`` infers the plan kind:
+        floating-dtype forwards go to the rfft plan, complex forwards
+        to the complex plan, inverses by matching the trailing shape."""
+        if direction not in ('fwd', 'inv'):
+            raise ValueError(f"direction must be 'fwd'|'inv', "
+                             f"got {direction!r}")
+        # host (numpy) operands stay on the host until their group
+        # dispatches — converting at submit time would stage every
+        # queued request's device buffer at once and defeat the
+        # pipelined_stream depth bound; jax arrays pass through (they
+        # are the donation candidates)
+        planar = isinstance(x, (tuple, list))
+        if planar:
+            re, im = x
+            re = re if isinstance(re, jax.Array) else np.asarray(re)
+            im = im if isinstance(im, jax.Array) else np.asarray(im)
+            x = (re, im)
+            shape, dtype = re.shape, re.dtype
+            if real is None:
+                # planar forwards are complex-plan-only; planar
+                # inverses may be a real plan's half spectrum
+                real = (False if direction == 'fwd'
+                        else self._infer_inverse_kind(tuple(shape)))
+            if real and direction == 'fwd':
+                raise ValueError("real plan forward takes ONE real array, "
+                                 "not a planar pair")
+        else:
+            if not isinstance(x, jax.Array):
+                x = np.asarray(x)
+            shape, dtype = x.shape, x.dtype
+            if real is None:
+                if direction == 'fwd':
+                    real = not jnp.issubdtype(dtype, jnp.complexfloating)
+                else:
+                    real = self._infer_inverse_kind(tuple(shape))
+        # key on the dtype jax will actually run (x64 canonicalization)
+        dtype = jax.dtypes.canonicalize_dtype(dtype)
+        plan = self._plan(bool(real))
+        core = (plan.spectrum_shape if plan.real and direction == 'inv'
+                else plan.shape)
+        if tuple(shape) != tuple(core):
+            raise ValueError(
+                f"request shape {tuple(shape)} != the served transform "
+                f"shape {tuple(core)} (submit single requests; the engine "
+                f"owns batching)")
+        t = FFTTicket(self)
+        key = (bool(real), direction, jnp.dtype(dtype).name, planar)
+        self._queue.append((t, key, x))
+        return t
+
+    def _infer_inverse_kind(self, shape: tuple) -> bool:
+        if shape == tuple(self.shape):
+            return False
+        rp = self._plan(True)
+        if shape == tuple(rp.spectrum_shape):
+            return True
+        raise ValueError(
+            f"inverse operand shape {shape} matches neither the complex "
+            f"plan ({tuple(self.shape)}) nor the real plan's spectrum "
+            f"({tuple(rp.spectrum_shape)}); pass real= explicitly")
+
+    # -- execution ----------------------------------------------------------
+
+    def _group_executable(self, plan: fft_api.FFT, direction: str,
+                          planar: bool, w: int, dtype):
+        """One jitted executable for a whole coalesced group: stack the
+        w requests along a new leading axis, run the batched plan call
+        (the in-call overlap pipeline lives inside it), and unstack —
+        all in ONE dispatch. Per-request slicing outside jit would cost
+        one full multi-device dispatch per request and eat the
+        coalescing win (measured: a slice costs as much as a swap).
+
+        Each request input aliases its own output (same shape/dtype),
+        so donation is per-request even though execution is batched."""
+        key = (plan, direction, planar, w, jnp.dtype(dtype).name)
+        fn = self._group_cache.get(key)
+        if fn is not None:
+            return fn
+        fwd = direction == 'fwd'
+        apply_fn = plan.forward if fwd else plan.inverse
+
+        # no in/out_shardings pins: jit specializes per operand sharding
+        # (exactly like direct plan calls), and — unlike pinned variants
+        # — XLA can then alias each donated request buffer to its own
+        # output across the layout rotation
+        if planar:
+            def group(*flat):
+                rb = jnp.stack(flat[:w])
+                ib = jnp.stack(flat[w:])
+                out = apply_fn((rb, ib))
+                if isinstance(out, tuple):     # planar out
+                    return (tuple(out[0][i] for i in range(w))
+                            + tuple(out[1][i] for i in range(w)))
+                return tuple(out[i] for i in range(w))   # real inv -> real
+            nargs = 2 * w
+        else:
+            def group(*xs):
+                yb = apply_fn(jnp.stack(xs))
+                return tuple(yb[i] for i in range(w))
+            nargs = w
+        donate = (tuple(range(nargs)) if plan.donates_input else ())
+        fn = jax.jit(group, donate_argnums=donate)
+        self._group_cache[key] = fn
+        return fn
+
+    def _run_group(self, plan: fft_api.FFT, direction: str, planar: bool,
+                   ops: Sequence):
+        """Execute one coalesced group; returns the per-request outputs
+        as a tuple (planar results as a (re..., im...) flat tuple)."""
+        w = len(ops)
+        if planar:
+            flat = tuple(o[0] for o in ops) + tuple(o[1] for o in ops)
+            dtype = flat[0].dtype
+        else:
+            flat = tuple(ops)
+            dtype = flat[0].dtype
+        return self._group_executable(plan, direction, planar, w,
+                                      dtype)(*flat)
+
+    def flush(self) -> List:
+        """Execute everything queued: coalesce per kind, dispatch the
+        groups double-buffered, resolve tickets. Returns the results in
+        submission order."""
+        queue, self._queue = self._queue, []
+        buckets: Dict[tuple, List[Tuple[FFTTicket, object]]] = {}
+        for t, key, x in queue:
+            buckets.setdefault(key, []).append((t, x))
+        try:
+            for key, entries in buckets.items():
+                real, direction, _, planar = key
+                plan = self._plan(real)
+                w, _ = self._schedules[real]
+                groups = [entries[i:i + w]
+                          for i in range(0, len(entries), w)]
+                done = iter(groups)
+
+                def on_result(yb, done=done):
+                    # resolve when the group's result is FORCED, in
+                    # stream order: a later group's runtime failure
+                    # leaves exactly the completed prefix resolved —
+                    # never a ticket holding a poisoned async value,
+                    # never a computed result thrown away
+                    group = next(done)
+                    gw = len(group)
+                    for i, (t, _) in enumerate(group):
+                        # a flat (re..., im...) tuple when the result
+                        # is planar; one array per request otherwise
+                        t._resolve((yb[i], yb[gw + i])
+                                   if len(yb) == 2 * gw else yb[i])
+
+                ov.pipelined_stream(
+                    lambda g: self._run_group(plan, direction, planar,
+                                              [x for _, x in g]),
+                    groups, depth=self.depth, on_result=on_result)
+        finally:
+            # a failed group must not silently drop requests: put every
+            # unresolved entry back so the error surfaces on result()
+            # or a retrying flush(), never as a silent None
+            lost = [e for e in queue if not e[0]._done]
+            if lost:
+                self._queue = lost + self._queue
+        return [t._value for t, _, _ in queue]
+
+    def transform(self, xs: Sequence, *, direction: str = 'fwd',
+                  real: Optional[bool] = None) -> List:
+        """Convenience: submit every operand, flush once, return the
+        results in order."""
+        tickets = [self.submit(x, direction=direction, real=real)
+                   for x in xs]
+        self.flush()
+        return [t.result() for t in tickets]
+
+    def __repr__(self):
+        kinds = {('real' if r else 'complex'): f"w={w},c={c}"
+                 for r, (w, c) in self._schedules.items()}
+        return (f"FFTEngine(shape={self.shape}, "
+                f"mesh={dict(self.mesh.shape)}, "
+                f"max_coalesce={self.max_coalesce}, "
+                f"donate={self.donate}, schedules={kinds})")

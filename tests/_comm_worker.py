@@ -144,13 +144,58 @@ def check_auto_plan(mesh):
     assert p.overlap_chunks >= 1
     rep = p.cost_report()
     assert 'swap' in rep and 'fft' in rep
-    zc = jax.device_put(
-        jnp.asarray(RNG.standard_normal((16,) * 3), jnp.complex64),
-        p.in_sharding)
+    z = RNG.standard_normal((16,) * 3)         # keep a host copy: the
+    zc = jax.device_put(                       # donated zc is consumed
+        jnp.asarray(z, jnp.complex64), p.in_sharding)
     back = p.inverse(p.forward(zc))
-    assert np.max(np.abs(np.asarray(back) - np.asarray(zc))) < 1e-3
+    assert np.max(np.abs(np.asarray(back) - z)) < 1e-3
     print(f"PASS comm='auto' plan: strategy={p.comm} "
           f"overlap={p.overlap_chunks} method={p.method}")
+
+
+def check_overlap_fallback(mesh):
+    """pick_chunk_axis -> None paths: chunk counts no local axis
+    divides must fall back BIT-EXACTLY to the unpipelined schedule, for
+    every strategy — including the partial case where some (fft, swap)
+    pairs chunk and others fall back."""
+    shape = (16, 16, 16)
+    z = RNG.standard_normal(shape) + 1j * RNG.standard_normal(shape)
+    for strategy in comm.names():
+        base = None
+        # local shape (4, 4, 16): nothing divides by 3 or 5 -> every
+        # pair falls back; 1 is the unpipelined reference
+        for oc in (1, 3, 5):
+            p = fft.plan(shape, mesh, comm=strategy, overlap_chunks=oc)
+            zc = jax.device_put(jnp.asarray(z, jnp.complex64),
+                                p.in_sharding)
+            got = np.asarray(p.forward(zc))
+            if base is None:
+                base = got
+            assert np.array_equal(base, got), (strategy, oc)
+        print(f"PASS overlap fallback comm={strategy} bit-exact "
+              f"(no-axis-divides)")
+    # mixed: (16, 64, 16) pairs see free sizes 16 (chunks) and 4
+    # (falls back) at oc=8
+    shape2 = (16, 64, 16)
+    z2 = RNG.standard_normal(shape2) + 1j * RNG.standard_normal(shape2)
+    base = None
+    for oc in (1, 8):
+        p = fft.plan(shape2, mesh, overlap_chunks=oc)
+        zc = jax.device_put(jnp.asarray(z2, jnp.complex64), p.in_sharding)
+        got = np.asarray(p.forward(zc))
+        if base is None:
+            base = got
+        assert np.array_equal(base, got), oc
+    print("PASS overlap fallback mixed chunk/fallback pairs bit-exact")
+    # rank-1: an odd batch (3) cannot chunk -> unpipelined body
+    p1 = fft.plan((1024,), mesh, overlap_chunks=1)
+    p2 = fft.plan((1024,), mesh, overlap_chunks=2)
+    xb = (RNG.standard_normal((3, 1024))
+          + 1j * RNG.standard_normal((3, 1024)))
+    a = np.asarray(p1.forward(jnp.asarray(xb, jnp.complex64)))
+    b = np.asarray(p2.forward(jnp.asarray(xb, jnp.complex64)))
+    assert np.array_equal(a, b)
+    print("PASS overlap fallback rank-1 odd batch bit-exact")
 
 
 def check_ulysses_overlap(mesh):
@@ -250,6 +295,7 @@ def main():
     check_facade_matrix(mesh)
     check_overlap_equivalence(mesh)
     check_auto_plan(mesh)
+    check_overlap_fallback(mesh)
     check_strategy_grads(mesh)
     check_ulysses_overlap(mesh)
     check_moe_overlap(mesh)

@@ -41,7 +41,9 @@ def main():
         x = rng.standard_normal(shape) + 1j * rng.standard_normal(shape)
         want = npfft(x, rank)
         for method in ("four_step", "block"):
-            p = fft.plan(shape, mesh, method=method)
+            # donate=False: this matrix re-feeds the same operands
+            # (donation itself is covered below)
+            p = fft.plan(shape, mesh, method=method, donate=False)
 
             # complex front-end
             xc = jax.device_put(jnp.asarray(x, jnp.complex64), p.in_sharding)
@@ -67,6 +69,21 @@ def main():
             p.inverse((fr, fi))
             assert len(p._exec_cache) == n_keys == 4, p._exec_cache.keys()
         print(f"PASS rank{rank} exec cache stable across repeat calls")
+
+    # donation on the real mesh: the default consumes the operand even
+    # across the sharding rotation; donate=False keeps it reusable
+    pdon = fft.plan((16, 16, 16), mesh)
+    xd = jax.device_put(jnp.asarray(
+        rng.standard_normal((16, 16, 16)), jnp.complex64), pdon.in_sharding)
+    yd = pdon.forward(xd)
+    assert xd.is_deleted(), "donated input must be consumed"
+    try:
+        _ = xd + 1
+        raise AssertionError("reuse after donate must raise")
+    except RuntimeError:
+        pass
+    assert not yd.is_deleted()
+    print("PASS donation consumes input; donate=False covered above")
 
     # leading batch dims (replicated) ride along for every rank
     for rank, shape in shapes.items():

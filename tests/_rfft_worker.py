@@ -143,9 +143,12 @@ def check_batch_and_cache(mesh):
 
 
 def check_overlap_equivalence(mesh):
+    """Every strategy x chunk depth is bit-identical — the (fft, swap)
+    pairs AND the r2c split-combine pair (first forward superstep, last
+    inverse superstep) now both pipeline."""
     shape = (16, 16, 16)
     x = RNG.standard_normal(shape).astype(np.float32)
-    base = None
+    base, rbase = None, None
     for strategy in comm.names():
         for oc in (1, 2, 4):
             p = fft.rplan(shape, mesh, comm=strategy, overlap_chunks=oc)
@@ -154,8 +157,37 @@ def check_overlap_equivalence(mesh):
             if base is None:
                 base = got
             assert np.array_equal(base, got), (strategy, oc)
-    print("PASS rfft overlap pipeline bit-identical across "
-          "strategies x chunks")
+            back = np.asarray(p.inverse(jnp.asarray(got)))
+            if rbase is None:
+                rbase = back
+            assert np.array_equal(rbase, back), (strategy, oc, "inverse")
+    print("PASS rfft overlap pipeline (incl. r2c split-combine pair) "
+          "bit-identical across strategies x chunks")
+
+
+def check_overlap_fallback(mesh):
+    """Chunk counts nothing divides fall back bit-exactly to the
+    unpipelined path, per strategy (the r2c pair falls back by the same
+    shared rule); rank-1 odd batches fall back in the real four-step."""
+    shape = (16, 16, 16)
+    x = RNG.standard_normal(shape).astype(np.float32)
+    for strategy in comm.names():
+        base = None
+        for oc in (1, 3, 5):
+            p = fft.rplan(shape, mesh, comm=strategy, overlap_chunks=oc)
+            xs = jax.device_put(jnp.asarray(x), p.in_sharding)
+            got = np.asarray(p.forward(xs))
+            if base is None:
+                base = got
+            assert np.array_equal(base, got), (strategy, oc)
+        print(f"PASS rfft overlap fallback comm={strategy} bit-exact")
+    xb = RNG.standard_normal((3, 1024)).astype(np.float32)
+    a = np.asarray(fft.rplan((1024,), mesh,
+                             overlap_chunks=1).forward(jnp.asarray(xb)))
+    b = np.asarray(fft.rplan((1024,), mesh,
+                             overlap_chunks=2).forward(jnp.asarray(xb)))
+    assert np.array_equal(a, b)
+    print("PASS rfft overlap fallback rank-1 odd batch bit-exact")
 
 
 def check_auto_and_cost(mesh):
@@ -189,6 +221,7 @@ def main():
     check_padded_mode(mesh)
     check_batch_and_cache(mesh)
     check_overlap_equivalence(mesh)
+    check_overlap_fallback(mesh)
     check_auto_and_cost(mesh)
     check_restore_layout(mesh)
     print("RFFT_WORKER_OK")

@@ -223,6 +223,65 @@ def test_rfft_pencil_cycle_model():
 
 
 # ---------------------------------------------------------------------------
+# r2c overlap (split-combine pair)
+# ---------------------------------------------------------------------------
+
+def test_rplan_overlap_bit_equivalence(mesh):
+    """ACCEPTANCE: overlapped vs unoverlapped rplan execution is
+    bit-identical with overlap_chunks > 1 — the r2c superstep now rides
+    inside an overlap pair via the split-combine formulation."""
+    shape = (16, 16, 16)
+    x = RNG.standard_normal(shape).astype(np.float32)
+    base = fft.rplan(shape, mesh, overlap_chunks=1)
+    want = np.asarray(base.forward(jnp.asarray(x)))
+    for oc in (2, 4):
+        p = fft.rplan(shape, mesh, overlap_chunks=oc)
+        got = np.asarray(p.forward(jnp.asarray(x)))
+        assert np.array_equal(want, got), oc
+        back = np.asarray(p.inverse(jnp.asarray(got)))
+        assert np.array_equal(
+            np.asarray(base.inverse(jnp.asarray(want))), back), oc
+
+
+def test_r2c_step_is_overlappable_in_cost_model():
+    """ACCEPTANCE: cost_report no longer lists the r2c step as
+    unoverlappable — the (rfft, swap) pair is priced and marked as an
+    overlap pair like any (fft, swap) pair."""
+    pc = ccost.pencil_plan_cost((512,) * 3, ('x', 'y', None),
+                                {'x': 8, 'y': 8}, real=True,
+                                overlap_chunks=4, measured=None)
+    assert pc.steps[0].kind == 'rfft' and pc.steps[1].kind == 'swap'
+    assert 0 in pc.overlapped_steps() and 1 in pc.overlapped_steps()
+    # pipelining the pair makes the r2c total cheaper than serial
+    assert pc.cycles < pc.serial_cycles
+    rep = ccost.format_report(pc, (512,) * 3, {'x': 8, 'y': 8})
+    rfft_line = next(ln for ln in rep.splitlines() if ' rfft ' in ln)
+    assert '~ovl' in rfft_line, rfft_line
+
+
+def test_feasible_overlap_includes_r2c_pair():
+    # (24, 24, 24) on 4x4: the r2c pair chunks the free y axis (local
+    # 6) and the second pair chunks the padded half axis (16/4 = 4), so
+    # depth 2 is feasible for the WHOLE real plan — before the
+    # split-combine formulation the r2c pair disqualified everything
+    ok = ccost.feasible_overlap((24, 24, 24), ('x', 'y', None),
+                                {'x': 4, 'y': 4}, real=True)
+    assert 2 in ok
+    # (16, 16, 16) on 4x4: the r2c pair could chunk (free local 4), but
+    # the second pair's only free axis is the padded half axis at local
+    # extent 3 — the every-pair rule honestly reports serial-only (the
+    # executor then falls back per pair, bit-exactly)
+    ok3 = ccost.feasible_overlap((16, 16, 16), ('x', 'y', None),
+                                 {'x': 4, 'y': 4}, real=True)
+    assert ok3 == (1,)
+    # rank-2 real: the r2c pair has NO free axis (both array axes are
+    # the fft axis or the swap's shard axis) -> only the serial depth
+    ok2 = ccost.feasible_overlap((32, 64), (('x', 'y'), None),
+                                 {'x': 4, 'y': 4}, real=True)
+    assert ok2 == (1,)
+
+
+# ---------------------------------------------------------------------------
 # Measured-cost autotune table
 # ---------------------------------------------------------------------------
 
@@ -276,6 +335,24 @@ def test_select_prefers_measured_over_model():
     # measured steps are labelled in the report
     pc = sel.cost
     assert any('measured' in s.detail for s in pc.steps if s.kind == 'swap')
+
+
+def test_measured_table_dtype_keying():
+    """Rows carrying a dtype tag form separate grids; dtype-less
+    (legacy) rows — which timed f32 arrays — answer 'c64' queries only
+    (serving them to a c128 query would halve the priced wire time)."""
+    rows = [dict(_row('all_to_all', 100.0, 1024), dtype='c64'),
+            dict(_row('all_to_all', 300.0, 1024), dtype='c128'),
+            _row('ppermute', 50.0, 1024)]          # legacy, no dtype
+    t = _table(rows)
+    ms = {'x': 4, 'y': 4}
+    assert t.swap_us('all_to_all', ms, 'x', 1024) == 100.0           # c64
+    assert t.swap_us('all_to_all', ms, 'x', 1024, dtype='c128') == 300.0
+    # unmeasured dtype -> None (fall back to the analytic model)
+    assert t.swap_us('all_to_all', ms, 'x', 1024, dtype='c256') is None
+    # legacy rows answer c64 but NOT other dtypes
+    assert t.swap_us('ppermute', ms, 'x', 1024) == 50.0
+    assert t.swap_us('ppermute', ms, 'x', 1024, dtype='c128') is None
 
 
 def test_measured_table_loader(tmp_path, monkeypatch):
