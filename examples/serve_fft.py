@@ -1,11 +1,19 @@
-"""Serve a mixed stream of FFT requests through the batched engine.
+"""Serve a continuous mixed stream of FFT requests — no flush() calls.
 
-Mirrors examples/serve_batched.py for the FFT path: a client submits
-independent transform requests — complex fields AND real fields, which
-route to the rfft plan at ~half the wire — and the engine coalesces
-them into batched, overlap-pipelined executions. The outputs are
-bit-identical to running each request alone; only the schedule on the
-wire changes.
+Mirrors examples/serve_batched.py for the FFT path: clients submit
+independent transform requests — several SHAPES, complex fields AND
+real fields (which route to rfft plans at ~half the wire) — and one
+:class:`FFTEngine` with a background drainer coalesces them into
+batched, overlap-pipelined executions. Requests dispatch when a kind's
+queue reaches its coalesce-width watermark or when the oldest request
+has waited ``--deadline-ms``; ``submit(...).result()`` is all a client
+ever calls. The outputs are bit-identical to running each request
+alone; only the schedule on the wire changes.
+
+Plans (and their compiled group executables) are cached per shape in a
+byte-budgeted LRU, and each kind's (width, chunks) schedule comes from
+``BENCH_serve_schedule.json`` when this host has autotuned it
+(``--autotune`` refreshes that table).
 
     PYTHONPATH=src python examples/serve_fft.py --n 32 --requests 12
 """
@@ -27,53 +35,64 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument('--n', type=int, default=32)
     ap.add_argument('--requests', type=int, default=12)
+    ap.add_argument('--deadline-ms', type=float, default=5.0)
     ap.add_argument('--autotune', action='store_true',
-                    help='measure candidate schedules before serving')
+                    help='measure candidate schedules before serving and '
+                         'persist them to BENCH_serve_schedule.json')
     args = ap.parse_args()
     n = args.n
-    shape = (n, n, n)
     mesh = jax.make_mesh((4, 4), ('x', 'y'))
-
-    eng = FFTEngine(shape, mesh)
+    shapes = [(n, n, n), (n // 2, n // 2, n // 2), (n, n)]
     rng = np.random.default_rng(0)
 
-    # a mixed request stream: ~half real fields (rfft plan, half the
-    # wire per request), ~half complex
+    # a mixed request stream: three shapes interleaved, ~half real
+    # fields (rfft plans, half the wire per request), ~half complex
     reqs = []
     for i in range(args.requests):
+        shape = shapes[i % len(shapes)]
         x = rng.standard_normal(shape).astype(np.float32)
         if i % 2:
             x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
         reqs.append(x)
-    if args.autotune:
-        eng.autotune([r for r in reqs if np.iscomplexobj(r)])
-        eng.autotune([r for r in reqs if not np.iscomplexobj(r)])
 
-    tickets = [eng.submit(x) for x in reqs]      # queue everything
-    eng.flush()                                  # warm/compile pass
-    tickets = [eng.submit(x) for x in reqs]
-    t0 = time.perf_counter()
-    eng.flush()
-    outs = [t.result() for t in tickets]
-    jax.block_until_ready(outs)
-    dt = (time.perf_counter() - t0) / len(reqs) * 1e6
+    # watermark 2: full pairs dispatch immediately; odd remainders in
+    # any (shape, kind) queue ride the deadline — both triggers live
+    with FFTEngine(mesh=mesh, max_wait_ms=args.deadline_ms,
+                   watermark=2) as eng:
+        if args.autotune:
+            for shape in shapes:
+                sub = [r for r in reqs if r.shape == shape]
+                for kind in (True, False):
+                    ops = [r for r in sub if np.iscomplexobj(r) != kind]
+                    if ops:
+                        eng.autotune(ops, persist=True)
 
-    # verify against per-request plans (bit-identical by contract)
-    pc = fft.plan(shape, mesh, donate=False)
-    pr = fft.rplan(shape, mesh)
-    for x, y in zip(reqs, outs):
-        p = pc if np.iscomplexobj(x) else pr
-        ref = p.forward(jax.device_put(jnp.asarray(x), p.in_sharding))
-        assert np.array_equal(np.asarray(y), np.asarray(ref))
+        tickets = [eng.submit(x) for x in reqs]      # warm/compile pass
+        outs = [t.result(timeout=600) for t in tickets]
+        tickets = [eng.submit(x) for x in reqs]      # served continuously
+        t0 = time.perf_counter()
+        outs = [t.result(timeout=600) for t in tickets]
+        jax.block_until_ready(outs)
+        dt = (time.perf_counter() - t0) / len(reqs) * 1e6
 
-    wc, cc = eng.schedule(False)
-    wr, cr = eng.schedule(True)
-    print(f'[serve_fft] {args.requests} mixed requests of {n}^3 on 4x4: '
-          f'{dt:.0f} us/request')
-    print(f'  complex: coalesce={wc} overlap_chunks={cc}   '
-          f'real: coalesce={wr} overlap_chunks={cr}')
-    print(f'  outputs bit-identical to per-request plans; real requests '
-          f'served via rplan (spectrum {pr.spectrum_shape})')
+        # verify against per-request plans (bit-identical by contract)
+        for x, y in zip(reqs, outs):
+            shape = x.shape
+            p = (fft.plan(shape, mesh, donate=False)
+                 if np.iscomplexobj(x) else fft.rplan(shape, mesh))
+            ref = p.forward(jax.device_put(jnp.asarray(x), p.in_sharding))
+            assert np.array_equal(np.asarray(y), np.asarray(ref))
+
+        print(f'[serve_fft] {args.requests} mixed requests '
+              f'({len(shapes)} shapes) on 4x4: {dt:.0f} us/request, '
+              f'zero flush() calls')
+        for (shape, real) in eng.serving_shapes():
+            w, c = eng.schedule(real, shape)
+            print(f"  {'x'.join(map(str, shape))}"
+                  f"{' real' if real else ' complex'}: "
+                  f"coalesce={w} overlap_chunks={c}")
+    print('  outputs bit-identical to per-request plans; engine closed '
+          'cleanly')
     print('serve_fft OK')
 
 

@@ -159,6 +159,157 @@ def _resolve_measured(measured):
 
 
 # ---------------------------------------------------------------------------
+# Persisted serving schedules (FFTEngine.autotune results)
+#
+# ``FFTEngine.autotune`` times candidate (coalesce width, overlap
+# chunks) serving schedules on real operands; BENCH_serve_schedule.json
+# persists the winners so the NEXT engine construction on this host
+# seeds its schedule pick from the measurement instead of the analytic
+# throughput model. Keyed like :class:`MeasuredTable`: (mesh, shape,
+# kind, strategy) with a dtype tag per row — a measured row at the
+# queried dtype beats a dtype-less/any-dtype row, which beats the
+# model. Merge semantics mirror ``bench_redistribute.py --refresh``:
+# same-key rows are replaced, everything else is kept.
+# ---------------------------------------------------------------------------
+
+#: environment override for the serving-schedule table ('' disables it).
+SCHEDULE_ENV = 'REPRO_SERVE_SCHEDULES'
+
+
+def _default_schedule_path() -> str:
+    return os.path.join(os.path.dirname(__file__), '..', '..', '..',
+                        'BENCH_serve_schedule.json')
+
+
+class ScheduleTable:
+    """Measured serving schedules: (mesh, shape, kind, strategy) ->
+    rows of (dtype, coalesce_width, overlap_chunks, us_per_request).
+
+    ``kind`` is ``'real'`` or ``'complex'`` (the engine's plan kinds);
+    ``dtype`` is the canonical operand dtype name the schedule was
+    measured at (``None`` on rows that predate the tag)."""
+
+    @staticmethod
+    def make_key(mesh_shape: Mapping[str, int], shape: Sequence[int],
+                 kind: str, strategy: str) -> Tuple[str, str, str, str]:
+        mesh_key = 'x'.join(str(v) for v in mesh_shape.values())
+        shape_key = 'x'.join(str(int(s)) for s in shape)
+        return (mesh_key, shape_key, str(kind), str(strategy))
+
+    @staticmethod
+    def _row_key(r):
+        # backend is part of the merge identity: a CPU refresh must not
+        # overwrite a GPU host's persisted measurement (lookup() filters
+        # by backend, so the clobbered row would just vanish)
+        dt, be = r.get('dtype'), r.get('backend')
+        return (str(r['mesh']), str(r['shape']), str(r['kind']),
+                str(r['strategy']), None if dt is None else str(dt),
+                None if be is None else str(be))
+
+    def __init__(self, rows=()):
+        # keyed by _row_key: (mesh, shape, kind, strategy, dtype, backend)
+        self._rows: Dict[Tuple[str, str, str, str, Optional[str],
+                               Optional[str]], dict] = {}
+        self.merge(rows)
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def merge(self, rows) -> 'ScheduleTable':
+        """Replace same-key rows, keep everything else (the
+        ``--refresh`` contract of the measured tables)."""
+        for r in rows:
+            row = dict(r)
+            row['coalesce_width'] = int(row['coalesce_width'])
+            row['overlap_chunks'] = int(row['overlap_chunks'])
+            self._rows[self._row_key(row)] = row
+        return self
+
+    def rows(self) -> list:
+        """Rows in a stable order, ready for ``json.dump``."""
+        return [self._rows[k] for k in sorted(self._rows, key=str)]
+
+    def lookup(self, mesh_shape: Mapping[str, int], shape: Sequence[int],
+               kind: str, strategy: str, *, dtype: Optional[str] = None,
+               backend: Optional[str] = None) -> Optional[dict]:
+        """The measured row for this serving config, or None. Rows
+        measured on a DIFFERENT jax backend never answer (the
+        per-backend dispatch overhead is the whole reason the table
+        exists; untagged rows answer anywhere). Within the backend, a
+        row measured at exactly ``dtype`` wins; otherwise the fastest
+        row of any dtype for the key answers (a schedule pick transfers
+        across dtypes far better than a wall time does)."""
+        base = self.make_key(mesh_shape, shape, kind, strategy)
+        cands = [r for k, r in self._rows.items()
+                 if k[:4] == base
+                 and (backend is None or r.get('backend') in (None, backend))]
+        if not cands:
+            return None
+        if dtype is not None:
+            exact = [r for r in cands if r.get('dtype') == str(dtype)]
+            if exact:
+                cands = exact
+        return min(cands, key=lambda r: float(r.get('us_per_request',
+                                                    math.inf)))
+
+    @classmethod
+    def load(cls, path: str) -> Optional['ScheduleTable']:
+        """The table at ``path``, or None when unreadable/empty."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            tbl = cls(data.get('results', ()))
+            return tbl if len(tbl) else None
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+
+    def save(self, path: str) -> None:
+        """Atomic write (temp file + rename): a concurrent reader never
+        sees a torn table, and a failed write leaves the old one."""
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, 'w') as f:
+            json.dump(dict(benchmark='serve_schedule',
+                           results=self.rows()), f, indent=1)
+        os.replace(tmp, path)
+
+
+def schedule_table_path(path: Optional[str] = None) -> Optional[str]:
+    """Resolve the active serving-schedule table path: explicit
+    ``path``, else ``REPRO_SERVE_SCHEDULES``, else the repo-root
+    BENCH_serve_schedule.json. ``''`` — explicit or via the env var —
+    disables (returns None)."""
+    if path is None:
+        path = os.environ.get(SCHEDULE_ENV)
+        if path is None:
+            path = _default_schedule_path()
+    if path == '':
+        return None
+    return os.path.abspath(path)
+
+
+def schedule_table(path: Optional[str] = None) -> Optional[ScheduleTable]:
+    """The active serving-schedule table, or None when disabled or
+    absent. Never cached: autotune appends rows at run time, and the
+    table is tiny."""
+    path = schedule_table_path(path)
+    return None if path is None else ScheduleTable.load(path)
+
+
+def persist_schedule_rows(rows, path: Optional[str] = None) -> Optional[str]:
+    """Merge ``rows`` into the active schedule table on disk (creating
+    it if absent) and return the path written, or None when persistence
+    is disabled. This is the merge-don't-overwrite write path shared by
+    ``FFTEngine.autotune(persist=True)`` and ``bench_serve_fft.py``."""
+    path = schedule_table_path(path)
+    if path is None:
+        return None
+    tbl = ScheduleTable.load(path) or ScheduleTable()
+    tbl.merge(rows)
+    tbl.save(path)
+    return path
+
+
+# ---------------------------------------------------------------------------
 # Step-by-step plan costing
 # ---------------------------------------------------------------------------
 

@@ -18,11 +18,14 @@ Two granularities live here:
 * :func:`pipelined` / :func:`overlapped_fft_swap` run *inside*
   ``shard_map`` on per-device local blocks — they chunk ONE call's
   work so chunk i+1's compute overlaps chunk i's collective.
-* :func:`pipelined_stream` runs at the host level, *outside* jit — it
-  keeps a bounded window of whole dispatched calls in flight (the
-  serve engine's cross-request double buffer), so request group g+1's
-  pencil FFTs are already dispatched while group g's redistribution
-  drains.
+* :func:`pipelined_stream` / :class:`StreamPipeline` run at the host
+  level, *outside* jit — they keep a bounded window of whole dispatched
+  calls in flight (the serve engine's cross-request double buffer), so
+  request group g+1's pencil FFTs are already dispatched while group
+  g's redistribution drains. The class form persists the window across
+  calls: the serve engine's background drainer pushes ripe request
+  groups into ONE pipeline on every wakeup, so the double buffer spans
+  drainer passes instead of refilling from empty each time.
 """
 from __future__ import annotations
 
@@ -70,46 +73,108 @@ def pipelined(n_chunks: int, axis: int, fn: Callable, *arrays: jnp.ndarray):
     return jnp.concatenate(outs, axis=axis)
 
 
+class StreamPipeline:
+    """A bounded window of dispatched-but-unforced jax calls that
+    *persists across pushes* — the host-level double buffer of a
+    continuous server.
+
+    jax dispatch is asynchronous: pushing call i+1 right after call i
+    returns puts both executables in the device queue, and XLA's
+    latency-hiding scheduler overlaps request i+1's local compute with
+    request i's collectives. An *unbounded* queue, though, stages every
+    request's operand at once; :meth:`push` forces the oldest in-flight
+    result before dispatching a new one, capping live operands at
+    ``depth`` (with donated inputs: ``depth`` buffers total, not 2x).
+
+    Unlike :func:`pipelined_stream` — which drains to empty when its
+    input stream ends — the window here survives between calls: the
+    serve engine's background drainer pushes each wakeup's ripe request
+    groups into one long-lived pipeline, so under sustained load group
+    g+1 (possibly from the *next* drainer pass) is already dispatched
+    while group g's redistribution drains.
+
+    Each pushed thunk may carry its own ``on_result`` callback, invoked
+    right after its result is FORCED (``block_until_ready`` succeeded),
+    in push order — so when a later call fails at execution time,
+    callers observe exactly the prefix that completed, never an
+    unforced (possibly poisoned) value. A force that raises pops the
+    failed call; the caller decides whether to :meth:`drain` the
+    survivors or :meth:`abort` the window.
+    """
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"StreamPipeline needs depth >= 1, got {depth}")
+        self.depth = depth
+        self._inflight: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    def _force_oldest(self):
+        result, on_result, on_error = self._inflight.popleft()
+        try:
+            result = jax.block_until_ready(result)
+        except BaseException as exc:
+            if on_error is not None:
+                on_error(exc)
+            raise
+        if on_result is not None:
+            on_result(result)
+        return result
+
+    def push(self, thunk: Callable, on_result: Optional[Callable] = None,
+             on_error: Optional[Callable] = None):
+        """Dispatch ``thunk()`` (forcing the oldest in-flight results
+        first so at most ``depth`` are ever staged at once; depth=1
+        serializes). ``on_error(exc)`` identifies the CULPRIT when this
+        call's dispatch or forced result raises — pipeline failures
+        tear down every in-flight call, and without attribution the
+        serve engine could not retry innocent bystanders for free."""
+        while len(self._inflight) >= self.depth:
+            self._force_oldest()
+        try:
+            result = thunk()
+        except BaseException as exc:
+            if on_error is not None:
+                on_error(exc)
+            raise
+        self._inflight.append((result, on_result, on_error))
+
+    def drain(self) -> None:
+        """Force every in-flight result, oldest first."""
+        while self._inflight:
+            self._force_oldest()
+
+    def abort(self) -> int:
+        """Drop every in-flight call without forcing it (their
+        ``on_result`` callbacks never run — the serve engine re-queues
+        the matching requests from snapshots). Returns the number
+        dropped."""
+        n = len(self._inflight)
+        self._inflight.clear()
+        return n
+
+
 def pipelined_stream(fn: Callable, stream: Iterable, *,
                      depth: int = 2,
                      on_result: Optional[Callable] = None) -> List:
     """Map ``fn`` over a stream of requests with at most ``depth``
     dispatched-but-unforced results in flight (double-buffering at the
-    default depth of 2).
+    default depth of 2) — a one-shot :class:`StreamPipeline`. Returns
+    the results in stream order; ``on_result`` fires per forced result,
+    in stream order, exactly as the class documents."""
+    pipe = StreamPipeline(depth)
+    out: List = []
 
-    jax dispatch is asynchronous: calling ``fn(item_{i+1})`` right
-    after ``fn(item_i)`` returns puts both executables in the device
-    queue, and XLA's latency-hiding scheduler overlaps request i+1's
-    local compute with request i's collectives. An *unbounded* queue,
-    though, stages every request's operand at once; blocking on the
-    oldest in-flight result before dispatching a new one caps live
-    operands at ``depth`` (with donated inputs: ``depth`` buffers
-    total, not 2x). Returns the results in stream order.
-
-    ``on_result`` is called with each result right after it is FORCED
-    (block_until_ready succeeded), in stream order — so when a later
-    item fails at execution time, callers see exactly the prefix that
-    completed, never an unforced (possibly poisoned) value.
-    """
-    if depth < 1:
-        raise ValueError(f"pipelined_stream needs depth >= 1, got {depth}")
-
-    def force(r):
-        r = jax.block_until_ready(r)
+    def collect(r):
         if on_result is not None:
             on_result(r)
-        return r
+        out.append(r)
 
-    out: List = []
-    inflight: deque = deque()
     for item in stream:
-        # drain BEFORE dispatching so at most ``depth`` groups' operands
-        # are ever staged at once (depth=1 serializes)
-        while len(inflight) >= depth:
-            out.append(force(inflight.popleft()))
-        inflight.append(fn(item))
-    while inflight:
-        out.append(force(inflight.popleft()))
+        pipe.push(lambda item=item: fn(item), collect)
+    pipe.drain()
     return out
 
 

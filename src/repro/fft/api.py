@@ -627,6 +627,37 @@ class FFT:
         return jax.jit(lambda y: run_inv_planar(y.real, y.imag),
                        out_shardings=out_sh)
 
+    # -- cache sizing hooks (serve-engine plan cache accounting) ------------
+
+    def operand_nbytes(self, dtype=None, *, spectrum: bool = False) -> int:
+        """Global bytes of ONE operand of this plan: the planned array
+        (real for rfft plans), or — with ``spectrum=True`` — the
+        forward output (:attr:`spectrum_shape`, complex). The serve
+        engine's byte-budgeted plan cache sizes each compiled group
+        executable from these estimates (inputs + outputs dominate a
+        jitted FFT's footprint; the twiddle constants are shared across
+        widths)."""
+        shape = self.spectrum_shape if spectrum else self.shape
+        if dtype is None:
+            dtype = (np.complex64 if spectrum or not self.real
+                     else np.float32)
+        return int(np.prod(shape)) * np.dtype(dtype).itemsize
+
+    @property
+    def cached_executables(self) -> int:
+        """Number of jitted executables this plan currently holds, one
+        per (direction, batch_shape, dtype, form) it has served."""
+        return len(self._exec_cache)
+
+    def clear_cache(self) -> None:
+        """Drop every cached executable (and the underlying traced
+        pipelines). The plan stays usable — the next call re-traces.
+        The serve engine's LRU eviction hook calls this so an evicted
+        plan releases its compiled state even while the plan object
+        itself is still referenced elsewhere."""
+        self._exec_cache.clear()
+        self._raw_cache.clear()
+
     # -- cost model ---------------------------------------------------------
 
     def plan_cost(self, precision: str = 'fp32', *, measured='auto'):

@@ -1,5 +1,6 @@
 from repro.serve.engine import make_prefill_step, make_decode_step, ServeEngine
 from repro.serve.fft_engine import FFTEngine, FFTTicket
+from repro.serve.plan_cache import LRUPlanCache
 
-__all__ = ['FFTEngine', 'FFTTicket', 'ServeEngine', 'make_decode_step',
-           'make_prefill_step']
+__all__ = ['FFTEngine', 'FFTTicket', 'LRUPlanCache', 'ServeEngine',
+           'make_decode_step', 'make_prefill_step']

@@ -13,6 +13,7 @@ fallback inside batched executions.
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+os.environ["REPRO_SERVE_SCHEDULES"] = ""       # deterministic picks
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
@@ -109,20 +110,16 @@ def check_engine_donation(mesh):
 def check_engine_overlap_fallback(mesh):
     # a 6-wide group with overlap_chunks=4: the batch axis (6) does not
     # divide, so pairs fall back (or chunk another free axis) per the
-    # shared rule — results must stay bit-identical. Build the plan
-    # FIRST: the schedule preset must come after _seed_plan, which
-    # would otherwise overwrite it with the cost pick.
+    # shared rule — results must stay bit-identical
     eng = FFTEngine(SHAPE, mesh, max_coalesce=8, overlap_chunks=4)
+    eng.set_schedule(6, 4)
     plan = eng.plan_for(False)
-    if plan.overlap_chunks != 4:
-        plan = plan.with_options(overlap_chunks=4)
-        eng._plans[False] = plan
-    eng._schedules[False] = (6, 4)
+    assert plan.overlap_chunks == 4
     reqs = [(RNG.standard_normal(SHAPE)
              + 1j * RNG.standard_normal(SHAPE)).astype(np.complex64)
             for _ in range(6)]
     outs = eng.transform(reqs)
-    assert eng._schedules[False] == (6, 4)     # preset actually served
+    assert eng.schedule(False) == (6, 4)       # preset actually served
     refs = per_request_refs(SHAPE, mesh, reqs, plan.comm)
     for o, r in zip(outs, refs):
         assert np.array_equal(np.asarray(o), r)

@@ -78,8 +78,10 @@ def test_engine_inverse_and_ticket_flush(mesh):
 
 def test_engine_validation(mesh):
     eng = FFTEngine((8, 8), mesh)
+    # a rank-3 operand now plans a rank-3 transform (multi-shape
+    # serving); only rank > 3 — a batch of transforms — is rejected
     with pytest.raises(ValueError, match="owns batching"):
-        eng.submit(np.zeros((2, 8, 8), np.complex64))
+        eng.submit(np.zeros((2, 2, 8, 8), np.complex64))
     with pytest.raises(ValueError, match="direction"):
         eng.submit(np.zeros((8, 8), np.complex64), direction='back')
     with pytest.raises(ValueError, match="real plan forward"):
@@ -149,7 +151,8 @@ def test_flush_failure_requeues_instead_of_silent_none(mesh, monkeypatch):
     monkeypatch.setattr(eng, '_run_group', boom)
     with pytest.raises(RuntimeError, match="boom"):
         eng.flush()
-    assert not t.done and len(eng._queue) == 1
+    assert not t.done
+    assert sum(len(q) for q in eng._queues.values()) == 1
     with pytest.raises(RuntimeError, match="boom"):   # retried, re-raised
         t.result()
     monkeypatch.undo()
@@ -167,6 +170,92 @@ def test_engine_autotune(mesh):
     assert w in (1, 2) and c in (1, 2)
     got = np.asarray(eng.transform([reqs[0]])[0])
     np.testing.assert_allclose(got, np.fft.fftn(reqs[0]), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Persisted serving schedules (BENCH_serve_schedule.json)
+# ---------------------------------------------------------------------------
+
+def test_schedule_table_lookup_prefers_dtype():
+    rows = [dict(mesh='4x4', shape='8x8', kind='complex',
+                 strategy='all_to_all', dtype='complex64',
+                 coalesce_width=8, overlap_chunks=2, us_per_request=10.0),
+            dict(mesh='4x4', shape='8x8', kind='complex',
+                 strategy='all_to_all', dtype='complex128',
+                 coalesce_width=4, overlap_chunks=4, us_per_request=5.0)]
+    tbl = ccost.ScheduleTable(rows)
+    mesh_shape = {'x': 4, 'y': 4}
+    got = tbl.lookup(mesh_shape, (8, 8), 'complex', 'all_to_all',
+                     dtype='complex64')
+    assert (got['coalesce_width'], got['overlap_chunks']) == (8, 2)
+    # unmeasured dtype: the fastest row of the key answers
+    got = tbl.lookup(mesh_shape, (8, 8), 'complex', 'all_to_all',
+                     dtype='float32')
+    assert got['coalesce_width'] == 4
+    assert tbl.lookup(mesh_shape, (8, 8), 'real', 'all_to_all') is None
+    assert tbl.lookup({'x': 2}, (8, 8), 'complex', 'all_to_all') is None
+
+
+def test_schedule_table_backend_isolation():
+    """Rows from different backends merge independently and never
+    answer for each other — a CPU refresh must not clobber or shadow a
+    GPU host's persisted measurement."""
+    mk = dict(mesh='4x4', shape='8x8', kind='complex',
+              strategy='all_to_all', dtype='complex64')
+    tbl = ccost.ScheduleTable([
+        dict(mk, coalesce_width=4, overlap_chunks=2, us_per_request=1.0,
+             backend='gpu'),
+        dict(mk, coalesce_width=2, overlap_chunks=1, us_per_request=9.0,
+             backend='cpu')])
+    assert len(tbl) == 2                       # same config, both survive
+    mesh_shape = {'x': 4, 'y': 4}
+    got = tbl.lookup(mesh_shape, (8, 8), 'complex', 'all_to_all',
+                     backend='cpu')
+    assert got['coalesce_width'] == 2          # never the gpu row
+    got = tbl.lookup(mesh_shape, (8, 8), 'complex', 'all_to_all',
+                     backend='tpu')
+    assert got is None                         # unmeasured backend: model
+
+
+def test_autotune_persists_and_seeds_next_engine(mesh, tmp_path):
+    path = str(tmp_path / "BENCH_serve_schedule.json")
+    eng = FFTEngine((8, 8), mesh, max_coalesce=2, schedule_table=path)
+    reqs = [(RNG.standard_normal((8, 8))
+             + 1j * RNG.standard_normal((8, 8))).astype(np.complex64)
+            for _ in range(4)]
+    w, c = eng.autotune(reqs, repeats=1, widths=(1, 2), chunks=(1, 2),
+                        persist=True)
+    assert os.path.exists(path)
+    tbl = ccost.ScheduleTable.load(path)
+    row = tbl.lookup(dict(mesh.shape), (8, 8), 'complex',
+                     eng.plan_for(False).comm, dtype='complex64')
+    assert (row['coalesce_width'], row['overlap_chunks']) == (w, c)
+    assert row['us_per_request'] > 0
+    # a NEW engine on the same config seeds its pick from the table...
+    eng2 = FFTEngine((8, 8), mesh, max_coalesce=2, schedule_table=path)
+    assert eng2.schedule(False) == (w, c)
+    # ...still serving correctly
+    got = np.asarray(eng2.transform([reqs[0]])[0])
+    np.testing.assert_allclose(got, np.fft.fftn(reqs[0]), atol=1e-3)
+    # an engine whose knobs the row does not fit falls back to the model
+    eng3 = FFTEngine((8, 8), mesh, max_coalesce=max(w - 1, 1),
+                     schedule_table=path)
+    w3, _ = eng3.schedule(False)
+    assert w3 <= max(w - 1, 1)
+
+
+def test_schedule_table_env_override(mesh, tmp_path, monkeypatch):
+    path = str(tmp_path / "alt_schedules.json")
+    ccost.persist_schedule_rows(
+        [dict(mesh='1x1', shape='8x8', kind='complex',
+              strategy='all_to_all', dtype='complex64', coalesce_width=2,
+              overlap_chunks=1, us_per_request=1.0)], path)
+    monkeypatch.setenv(ccost.SCHEDULE_ENV, path)
+    eng = FFTEngine((8, 8), mesh, max_coalesce=4, comm='all_to_all')
+    assert eng.schedule(False) == (2, 1)       # seeded from the env table
+    monkeypatch.setenv(ccost.SCHEDULE_ENV, '')  # '' disables persistence
+    assert ccost.schedule_table_path() is None
+    assert ccost.persist_schedule_rows([]) is None
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +412,7 @@ def test_serve_fft_worker_16_devices():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_SERVE_SCHEDULES"] = ""          # deterministic picks
     proc = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "_serve_fft_worker.py")],
         capture_output=True, text=True, env=env, timeout=1800)
