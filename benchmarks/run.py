@@ -1,9 +1,13 @@
 """Benchmark driver: one section per paper table/figure, plus host-mode
 measurements of our implementation and (when present) the dry-run
 roofline tables. CSV convention: ``name,us_per_call,derived``.
+
+``--smoke`` skips the paper sections and runs only the wall-clock
+benchmark scripts at their tiny CI sizes.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -13,51 +17,63 @@ def _section(title: str) -> None:
     print(f"\n==== {title} " + "=" * max(0, 60 - len(title)))
 
 
-def main() -> None:
-    from benchmarks import paper_table1, paper_fig3, paper_fig4, paper_fig567, paper_table2
+def _script(env, name: str, *args: str) -> None:
+    r = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__), name),
+         *args],
+        capture_output=True, text=True, env=env)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stdout.write(f"{os.path.splitext(name)[0]},nan,FAILED\n")
+        sys.stderr.write(r.stderr[-2000:])
 
-    _section("Paper Table 1 (cycle counts, model vs measured)")
-    paper_table1.main()
-    _section("Paper Figure 3 (pencil throughput)")
-    paper_fig3.main()
-    _section("Paper Figure 4 (comm/compute breakdown)")
-    paper_fig4.main()
-    _section("Paper Figures 5/6/7 (weak/strong scaling, bandwidth)")
-    paper_fig567.main()
-    _section("Paper Table 2 (cross-machine comparison)")
-    paper_table2.main()
 
-    _section("Host-mode distributed wsFFT (fake-device mesh, wall clock)")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--smoke', action='store_true',
+                    help='tiny sizes, wall-clock scripts only (CI)')
+    args = ap.parse_args(argv)
     env = dict(os.environ)
     env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
-    for args in (["4", "4", "32", "auto"], ["4", "4", "64", "auto"],
-                 ["4", "4", "64", "stockham"]):
-        r = subprocess.run([sys.executable, "-m", "benchmarks._wsfft_worker", *args],
-                           capture_output=True, text=True, env=env)
-        sys.stdout.write(r.stdout)
-        if r.returncode != 0:
-            sys.stdout.write(f"wsfft_host/{'x'.join(args)},nan,FAILED\n")
-            sys.stderr.write(r.stderr[-2000:])
 
+    if not args.smoke:
+        from benchmarks import (paper_table1, paper_fig3, paper_fig4,
+                                paper_fig567, paper_table2)
+
+        _section("Paper Table 1 (cycle counts, model vs measured)")
+        paper_table1.main()
+        _section("Paper Figure 3 (pencil throughput)")
+        paper_fig3.main()
+        _section("Paper Figure 4 (comm/compute breakdown)")
+        paper_fig4.main()
+        _section("Paper Figures 5/6/7 (weak/strong scaling, bandwidth)")
+        paper_fig567.main()
+        _section("Paper Table 2 (cross-machine comparison)")
+        paper_table2.main()
+
+        _section("Host-mode distributed wsFFT (fake-device mesh, "
+                 "wall clock)")
+        for wargs in (["4", "4", "32", "auto"], ["4", "4", "64", "auto"],
+                      ["4", "4", "64", "stockham"]):
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks._wsfft_worker", *wargs],
+                capture_output=True, text=True, env=env)
+            sys.stdout.write(r.stdout)
+            if r.returncode != 0:
+                sys.stdout.write(f"wsfft_host/{'x'.join(wargs)},nan,"
+                                 f"FAILED\n")
+                sys.stderr.write(r.stderr[-2000:])
+
+    size = ['--smoke'] if args.smoke else ['--n', '32']
     _section("rfft vs complex plans (wire bytes + wall us, 4x4 mesh)")
-    r = subprocess.run(
-        [sys.executable, os.path.join(os.path.dirname(__file__),
-                                      "bench_rfft.py"), "--n", "32"],
-        capture_output=True, text=True, env=env)
-    sys.stdout.write(r.stdout)
-    if r.returncode != 0:
-        sys.stdout.write("bench_rfft,nan,FAILED\n")
-        sys.stderr.write(r.stderr[-2000:])
+    _script(env, "bench_rfft.py", *size)
 
     _section("FFT serving: sequential loop vs batched engine (4x4 mesh)")
-    r = subprocess.run(
-        [sys.executable, os.path.join(os.path.dirname(__file__),
-                                      "bench_serve_fft.py"), "--n", "32"],
-        capture_output=True, text=True, env=env)
-    sys.stdout.write(r.stdout)
-    if r.returncode != 0:
-        sys.stdout.write("bench_serve_fft,nan,FAILED\n")
-        sys.stderr.write(r.stderr[-2000:])
+    _script(env, "bench_serve_fft.py", *size)
+
+    _section("FFT service: socket overhead + adaptive drainer policy")
+    _script(env, "bench_serve_service.py",
+            *(['--smoke'] if args.smoke else []))
 
     # Roofline tables are produced by the dry-run pipeline (launch/dryrun
     # + benchmarks/roofline_fft); aggregate whatever artifacts exist.

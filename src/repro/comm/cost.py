@@ -187,7 +187,15 @@ class ScheduleTable:
 
     ``kind`` is ``'real'`` or ``'complex'`` (the engine's plan kinds);
     ``dtype`` is the canonical operand dtype name the schedule was
-    measured at (``None`` on rows that predate the tag)."""
+    measured at (``None`` on rows that predate the tag).
+
+    Rows may additionally carry a ``load`` tag — an integer load level
+    from the adaptive drainer policy (:mod:`repro.serve.policy`), where
+    level k means ~2**k expected arrivals per drainer window. Load-
+    tagged rows describe *drainer* settings observed under that traffic
+    level, not a plan's intrinsic best schedule, so they only answer a
+    ``lookup(load=...)`` that asks for them — the engine's load-less
+    schedule pick never sees them."""
 
     @staticmethod
     def make_key(mesh_shape: Mapping[str, int], shape: Sequence[int],
@@ -201,15 +209,16 @@ class ScheduleTable:
         # backend is part of the merge identity: a CPU refresh must not
         # overwrite a GPU host's persisted measurement (lookup() filters
         # by backend, so the clobbered row would just vanish)
-        dt, be = r.get('dtype'), r.get('backend')
+        dt, be, ld = r.get('dtype'), r.get('backend'), r.get('load')
         return (str(r['mesh']), str(r['shape']), str(r['kind']),
                 str(r['strategy']), None if dt is None else str(dt),
-                None if be is None else str(be))
+                None if be is None else str(be),
+                None if ld is None else int(ld))
 
     def __init__(self, rows=()):
-        # keyed by _row_key: (mesh, shape, kind, strategy, dtype, backend)
-        self._rows: Dict[Tuple[str, str, str, str, Optional[str],
-                               Optional[str]], dict] = {}
+        # keyed by _row_key:
+        # (mesh, shape, kind, strategy, dtype, backend, load)
+        self._rows: Dict[tuple, dict] = {}
         self.merge(rows)
 
     def __len__(self) -> int:
@@ -231,18 +240,36 @@ class ScheduleTable:
 
     def lookup(self, mesh_shape: Mapping[str, int], shape: Sequence[int],
                kind: str, strategy: str, *, dtype: Optional[str] = None,
-               backend: Optional[str] = None) -> Optional[dict]:
+               backend: Optional[str] = None,
+               load: Optional[int] = None) -> Optional[dict]:
         """The measured row for this serving config, or None. Rows
         measured on a DIFFERENT jax backend never answer (the
         per-backend dispatch overhead is the whole reason the table
         exists; untagged rows answer anywhere). Within the backend, a
         row measured at exactly ``dtype`` wins; otherwise the fastest
         row of any dtype for the key answers (a schedule pick transfers
-        across dtypes far better than a wall time does)."""
+        across dtypes far better than a wall time does).
+
+        ``load=None`` (the default) answers only from load-less rows —
+        the engine's intrinsic schedule pick must never adopt a
+        drainer-policy row tuned for some traffic level. With ``load``
+        given, the load-tagged rows nearest that level answer (exact
+        level first); when no tagged row exists the load-less rows
+        answer as a fallback, so a policy restarting on a fresh table
+        still warms from whatever was measured."""
         base = self.make_key(mesh_shape, shape, kind, strategy)
         cands = [r for k, r in self._rows.items()
                  if k[:4] == base
                  and (backend is None or r.get('backend') in (None, backend))]
+        tagged = [r for r in cands if r.get('load') is not None]
+        if load is None:
+            cands = [r for r in cands if r.get('load') is None]
+        elif tagged:
+            dist = min(abs(int(r['load']) - int(load)) for r in tagged)
+            cands = [r for r in tagged
+                     if abs(int(r['load']) - int(load)) == dist]
+        else:
+            cands = [r for r in cands if r.get('load') is None]
         if not cands:
             return None
         if dtype is not None:

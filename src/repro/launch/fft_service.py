@@ -1,0 +1,253 @@
+"""Launcher for the multi-tenant FFT service (repro.serve.service).
+
+Three entry points:
+
+* ``serve`` — bind an :class:`repro.serve.FFTService` to a unix socket
+  (or TCP ``host:port``) and serve until interrupted (or
+  ``--duration`` elapses). Tenants are declared as
+  ``name[:rate_per_s[:burst[:max_inflight[:slo]]]]``.
+* ``client`` — connect as one tenant, stream a mixed workload of
+  complex and real transforms, verify every result numerically, and
+  print the server's metrics document.
+* ``--smoke`` (also the ``smoke`` subcommand) — one process, one
+  1x1-mesh service, two concurrent tenant clients over a unix socket;
+  asserts results, per-tenant accounting, and a clean drain on
+  shutdown. This is the CI gate.
+
+    PYTHONPATH=src python -m repro.launch.fft_service --smoke
+    PYTHONPATH=src python -m repro.launch.fft_service serve \\
+        --address /tmp/fft.sock --mesh 4x4 --devices 16 \\
+        --tenants alice:100:16:8:standard,batch:inf:64:16:batch
+    PYTHONPATH=src python -m repro.launch.fft_service client \\
+        --address /tmp/fft.sock --tenant alice --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import threading
+import time
+
+
+def _mesh(spec: str):
+    import jax
+    rows, cols = (int(t) for t in spec.split('x'))
+    return jax.make_mesh((rows, cols), ('x', 'y'))
+
+
+def _address(spec: str):
+    if ':' in spec and not spec.startswith('/'):
+        host, port = spec.rsplit(':', 1)
+        return (host, int(port))
+    return spec
+
+
+def _tenant_specs(spec: str):
+    """``name[:rate[:burst[:max_inflight[:slo]]]]`` entries, comma-
+    separated."""
+    import math
+    from repro.serve import TenantConfig
+    out = []
+    for item in filter(None, (s.strip() for s in spec.split(','))):
+        parts = item.split(':')
+        kw = {'name': parts[0]}
+        if len(parts) > 1:
+            kw['rate_per_s'] = (math.inf if parts[1] in ('inf', '')
+                                else float(parts[1]))
+        if len(parts) > 2 and parts[2]:
+            kw['burst'] = int(parts[2])
+        if len(parts) > 3 and parts[3]:
+            kw['max_inflight'] = int(parts[3])
+        if len(parts) > 4 and parts[4]:
+            kw['slo'] = parts[4]
+        out.append(TenantConfig(**kw))
+    return out
+
+
+def _mixed_requests(rng, shapes, count):
+    """Alternating complex/real operands over the shape rotation."""
+    import numpy as np
+    reqs = []
+    for i in range(count):
+        shape = shapes[i % len(shapes)]
+        x = rng.standard_normal(shape).astype(np.float32)
+        if i % 2:
+            x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
+        reqs.append(x)
+    return reqs
+
+
+def _verify(x, y) -> float:
+    """Max abs error of a served transform vs the numpy reference."""
+    import numpy as np
+    ref = (np.fft.fftn(x) if np.iscomplexobj(x)
+           else np.fft.rfftn(x))
+    err = float(np.abs(np.asarray(y) - ref).max())
+    scale = max(1.0, float(np.abs(ref).max()))
+    if err > 1e-3 * scale:
+        raise AssertionError(f"served transform diverged: max abs err "
+                             f"{err:g} (scale {scale:g})")
+    return err
+
+
+def cmd_serve(args) -> None:
+    from repro.serve import FFTService
+    mesh = _mesh(args.mesh)
+    svc = FFTService(
+        mesh, tenants=_tenant_specs(args.tenants),
+        max_inflight=args.max_inflight,
+        policy=None if args.no_adaptive else 'adaptive',
+        allow_unknown_tenants=args.allow_unknown or None,
+        max_coalesce=args.max_coalesce,
+        schedule_table=args.schedules if args.schedules else 'auto',
+    ).start(_address(args.address))
+    print(f'[fft_service] serving on {svc.address!r} '
+          f'(mesh {args.mesh}, tenants '
+          f'{sorted(t.name for t in _tenant_specs(args.tenants)) or "open"})',
+          flush=True)
+    try:
+        if args.duration:
+            time.sleep(args.duration)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        svc.close(drain=True)
+        print('[fft_service] drained and closed', flush=True)
+
+
+def cmd_client(args) -> None:
+    import numpy as np
+    from repro.serve import FFTClient
+    shapes = [tuple(int(t) for t in s.split('x'))
+              for s in args.shapes.split(',')]
+    reqs = _mixed_requests(np.random.default_rng(args.seed), shapes,
+                           args.requests)
+    with FFTClient(_address(args.address), tenant=args.tenant) as c:
+        t0 = time.perf_counter()
+        outs = c.transform(reqs, real=None, slo=args.slo or None)
+        dt = time.perf_counter() - t0
+        for x, y in zip(reqs, outs):
+            _verify(x, y)
+        c.drain(timeout=60)
+        m = c.metrics()
+        print(f'[fft_service] tenant {args.tenant}: {len(reqs)} requests '
+              f'in {dt:.2f}s ({dt / len(reqs) * 1e3:.1f} ms/req), '
+              f'all verified')
+        print(json.dumps(m['tenants'].get(args.tenant, {}), indent=2))
+
+
+def cmd_smoke(args) -> None:
+    """Server + two tenant clients in one process over a unix socket;
+    asserts results, accounting, backpressure typing, clean drain."""
+    import numpy as np
+    from repro.serve import (FFTClient, FFTService, RetryAfter,
+                             TenantConfig)
+    mesh = _mesh('1x1')
+    path = os.path.join(tempfile.mkdtemp(prefix='fft_service_'),
+                        'fft.sock')
+    svc = FFTService(
+        mesh, schedule_table=None,
+        tenants=[TenantConfig('alice', max_inflight=8),
+                 TenantConfig('bob', max_inflight=8, slo='interactive')],
+        allow_unknown_tenants=False,
+    ).start(path)
+
+    shapes = [(16, 16), (8, 8, 8)]
+    errs, failures = [], []
+
+    def run_client(tenant: str, seed: int, slo: str) -> None:
+        try:
+            reqs = _mixed_requests(np.random.default_rng(seed), shapes, 6)
+            with FFTClient(path, tenant=tenant) as c:
+                outs = c.transform(reqs, slo=slo)
+                for x, y in zip(reqs, outs):
+                    errs.append(_verify(x, y))
+                c.drain(timeout=60)
+        except BaseException as exc:         # surfaced after join
+            failures.append((tenant, exc))
+
+    threads = [threading.Thread(target=run_client, args=a)
+               for a in [('alice', 0, 'standard'),
+                         ('bob', 1, 'interactive')]]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), 'smoke client wedged'
+    assert not failures, f'client failures: {failures!r}'
+    assert len(errs) == 12, f'expected 12 verified results, got {len(errs)}'
+
+    with FFTClient(path, tenant='alice') as probe:
+        m = probe.metrics()
+    for tenant in ('alice', 'bob'):
+        tm = m['tenants'][tenant]
+        assert tm['completed'] == 6, (tenant, tm)
+        assert tm['failed'] == 0 and tm['inflight'] == 0, (tenant, tm)
+    assert m['service']['inflight'] == 0, m['service']
+
+    # typed backpressure is importable and carries the retry hint
+    ra = RetryAfter('rate', 12.5, 'alice')
+    assert ra.retry_after_ms == 12.5 and ra.reason == 'rate'
+
+    svc.close(drain=True)
+    assert svc._inflight_total == 0
+    assert svc.engine.closed
+    # the socket path is gone: nothing half-open survives the drain
+    assert not os.path.exists(path)
+    print('[fft_service] smoke: 2 tenants x 6 mixed requests verified, '
+          'metrics consistent, clean drain')
+    print('fft_service smoke OK')
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if '--smoke' in argv:
+        argv = ['smoke']
+    ap = argparse.ArgumentParser(prog='fft_service')
+    sub = ap.add_subparsers(dest='cmd', required=True)
+
+    s = sub.add_parser('serve', help='run the service')
+    s.add_argument('--address', required=True,
+                   help='unix socket path or host:port')
+    s.add_argument('--mesh', default='1x1')
+    s.add_argument('--devices', type=int, default=0)
+    s.add_argument('--tenants', default='',
+                   help='name[:rate[:burst[:max_inflight[:slo]]]],...')
+    s.add_argument('--max-inflight', type=int, default=64)
+    s.add_argument('--max-coalesce', type=int, default=16)
+    s.add_argument('--no-adaptive', action='store_true')
+    s.add_argument('--allow-unknown', action='store_true')
+    s.add_argument('--schedules', default='',
+                   help='schedule table path (default: packaged table)')
+    s.add_argument('--duration', type=float, default=0,
+                   help='serve this many seconds, then drain (0: forever)')
+    s.set_defaults(fn=cmd_serve)
+
+    c = sub.add_parser('client', help='stream a verified workload')
+    c.add_argument('--address', required=True)
+    c.add_argument('--tenant', default='default')
+    c.add_argument('--shapes', default='16x16,8x8x8')
+    c.add_argument('--requests', type=int, default=8)
+    c.add_argument('--seed', type=int, default=0)
+    c.add_argument('--slo', default='')
+    c.set_defaults(fn=cmd_client)
+
+    k = sub.add_parser('smoke', help='single-process CI smoke')
+    k.set_defaults(fn=cmd_smoke)
+
+    args = ap.parse_args(argv)
+    if getattr(args, 'devices', 0):
+        os.environ['XLA_FLAGS'] = (
+            f'--xla_force_host_platform_device_count={args.devices} '
+            + os.environ.get('XLA_FLAGS', ''))
+    args.fn(args)
+
+
+if __name__ == '__main__':
+    main()

@@ -110,3 +110,15 @@ class ServeEngine:
             out.append(tok)
             pos += 1
         return jnp.concatenate(out, axis=1)
+
+    def close(self) -> None:
+        """Release engine resources. ServeEngine holds no background
+        threads or caches today, so this is a no-op — it exists so
+        launchers and services treat every engine uniformly
+        (FFTEngine.close() is load-bearing; see repro.serve.service)."""
+
+    def __enter__(self) -> 'ServeEngine':
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()

@@ -78,12 +78,21 @@ from repro.fft import api as fft_api
 from repro.serve.plan_cache import LRUPlanCache
 
 
+class ResultTimeout(TimeoutError):
+    """``FFTTicket.result(timeout=...)`` expired before the engine
+    served the request. This is NOT a failure path: the request is
+    still queued (or in flight) and the ticket is untouched and
+    reusable — call ``result()`` again, with a longer timeout or none,
+    once the engine gets to it."""
+
+
 class FFTTicket:
     """Handle for one submitted transform. ``result()`` blocks until
     the background drainer resolves the request (when the engine runs
     one), or triggers a ``flush()`` on a foreground engine."""
 
-    __slots__ = ('_engine', '_value', '_error', '_event', '_done')
+    __slots__ = ('_engine', '_value', '_error', '_event', '_done',
+                 '_callbacks', '_cb_lock')
 
     def __init__(self, engine: 'FFTEngine'):
         self._engine = engine
@@ -91,22 +100,35 @@ class FFTTicket:
         self._error = None
         self._done = False
         self._event = threading.Event()
+        self._callbacks: List = []
+        self._cb_lock = threading.Lock()
 
     @property
     def done(self) -> bool:
         """True once the request executed successfully."""
         return self._done
 
+    @property
+    def failed(self) -> bool:
+        """True once the request failed permanently (its error raises
+        on :meth:`result`)."""
+        return self._error is not None
+
     def result(self, timeout: Optional[float] = None):
         """The transform output. On a background engine this waits (up
         to ``timeout`` seconds) for the drainer; on a foreground engine
         it flushes. A request whose group failed raises the failure
-        here — never a silent None."""
+        here — never a silent None. A wait that expires raises
+        :class:`ResultTimeout` (a ``TimeoutError`` subclass) and leaves
+        the ticket reusable: the request stays queued and a later
+        ``result()`` returns its value normally."""
         if not self._done and self._error is None:
             if self._engine._background:
                 if not self._event.wait(timeout):
-                    raise TimeoutError(
-                        f"request not served within {timeout}s (engine "
+                    raise ResultTimeout(
+                        f"request not served within {timeout}s — the "
+                        f"request is still queued and this ticket stays "
+                        f"valid; call result() again (engine "
                         f"{self._engine!r})")
             else:
                 self._engine.flush()
@@ -120,14 +142,42 @@ class FFTTicket:
                 "with intact inputs)")
         return self._value
 
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(ticket)`` as soon as the ticket settles (resolves
+        OR fails) — immediately if it already has. Callbacks run on the
+        settling thread (the drainer, usually): keep them short and
+        never block on device work there; hand anything slow to your
+        own thread. Exceptions are swallowed into a warning so a flaky
+        observer cannot kill the drainer."""
+        with self._cb_lock:
+            if not (self._done or self._error is not None):
+                self._callbacks.append(fn)
+                return
+        self._run_callback(fn)
+
+    def _run_callback(self, fn) -> None:
+        try:
+            fn(self)
+        except Exception as exc:
+            import warnings
+            warnings.warn(f"FFTTicket done-callback failed: {exc!r}",
+                          RuntimeWarning, stacklevel=2)
+
+    def _settle(self) -> None:
+        self._event.set()
+        with self._cb_lock:
+            cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            self._run_callback(fn)
+
     def _resolve(self, value) -> None:
         self._value = value
         self._done = True
-        self._event.set()
+        self._settle()
 
     def _fail(self, error: BaseException) -> None:
         self._error = error
-        self._event.set()
+        self._settle()
 
 
 class _PlanState:
@@ -189,6 +239,10 @@ class _Request:
         self.snapshot = None
 
 
+#: sentinel for "leave this knob unchanged" (None is a real value —
+#: it disables the trigger).
+_UNSET = object()
+
 #: upper bound on one idle drainer wait — the weakref loop re-checks
 #: engine liveness at least this often, so a leaked (never-closed)
 #: engine is reclaimed within a tick of becoming unreferenced.
@@ -225,18 +279,27 @@ def _drainer_main(engine_ref: 'weakref.ref') -> None:
             return
         # idle wait WITHOUT a strong engine reference: re-check the
         # predicate under the lock (a submit's notify between the pass
-        # and this wait must not be missed), then sleep at most a tick
-        with cond:
+        # and this wait must not be missed), then sleep at most a tick.
+        # This section must not let an exception kill the thread
+        # silently either — submit() would then enqueue into a queue
+        # nobody drains; report the crash so waiters fail fast.
+        try:
+            with cond:
+                eng = engine_ref()
+                if eng is None:
+                    return
+                ripe, timeout = eng._ripe_locked(time.monotonic())
+                busy = bool(ripe) or len(pipe) or eng._closed
+                del eng
+                if not busy:
+                    cond.wait(_DRAINER_IDLE_TICK if timeout is None
+                              else min(max(timeout, 0.001),
+                                       _DRAINER_IDLE_TICK))
+        except BaseException as exc:
             eng = engine_ref()
-            if eng is None:
-                return
-            ripe, timeout = eng._ripe_locked(time.monotonic())
-            busy = bool(ripe) or len(pipe) or eng._closed
-            del eng
-            if not busy:
-                cond.wait(_DRAINER_IDLE_TICK if timeout is None
-                          else min(max(timeout, 0.001),
-                                   _DRAINER_IDLE_TICK))
+            if eng is not None:
+                eng._drainer_crashed(exc)
+            return
 
 
 class FFTEngine:
@@ -362,6 +425,9 @@ class FFTEngine:
 
         # -- request queues + drainer -----------------------------------
         self._cond = threading.Condition()
+        self._stats_lock = threading.Lock()
+        self.dispatched_groups = 0
+        self.width_hist: Dict[int, int] = {}
         self._queues: Dict[tuple, 'list[_Request]'] = {}
         self._seq = 0
         self._closed = False
@@ -549,6 +615,44 @@ class FFTEngine:
         with self._plan_lock:
             return self._states.keys()
 
+    def set_drainer(self, *, max_wait_ms=_UNSET, watermark=_UNSET) -> None:
+        """Retarget the drainer triggers at run time — the adaptive-
+        policy seam (:mod:`repro.serve.policy`): a service observing
+        arrival rates trades coalesce width (``watermark``) against
+        queueing delay (``max_wait_ms``) while the engine keeps
+        serving. Either knob may be None (trigger disabled). Affects
+        requests submitted after the call; deadlines already queued
+        stand. Does not start or stop the drainer thread — only an
+        engine constructed with the drainer enabled adapts."""
+        with self._cond:
+            if max_wait_ms is not _UNSET:
+                if max_wait_ms is not None and max_wait_ms < 0:
+                    raise ValueError(
+                        f"max_wait_ms must be >= 0, got {max_wait_ms}")
+                self.max_wait_ms = max_wait_ms
+            if watermark is not _UNSET:
+                if watermark is not None and watermark < 1:
+                    raise ValueError(
+                        f"watermark must be >= 1, got {watermark}")
+                self.watermark = watermark
+            # wake the drainer: a shrunken watermark may make a queue
+            # ripe right now
+            self._cond.notify_all()
+
+    def dispatch_stats(self) -> Dict[str, object]:
+        """Serving-side dispatch counters: how many coalesced groups
+        ran and a histogram of their widths (the metrics surface of
+        :class:`repro.serve.service.FFTService`)."""
+        with self._stats_lock:
+            return {'groups': self.dispatched_groups,
+                    'width_hist': dict(sorted(self.width_hist.items()))}
+
+    def queue_depths(self) -> Dict[tuple, int]:
+        """Currently queued (not yet dispatched) requests per
+        (shape, real, direction, dtype, planar) key."""
+        with self._cond:
+            return {key: len(q) for key, q in self._queues.items() if q}
+
     # -- request intake -----------------------------------------------------
 
     def _resolve_request(self, x, direction: str, real: Optional[bool]):
@@ -651,35 +755,51 @@ class FFTEngine:
                 f"forward first or submit the matching forward shape")
         return op_shape[:-1] + (2 * (op_shape[-1] - 1),)
 
-    def submit(self, x, *, direction: str = 'fwd',
-               real: Optional[bool] = None) -> FFTTicket:
-        """Queue one transform request (exactly its transform shape —
-        the engine owns batching). ``real=None`` infers the plan kind
-        as documented on :meth:`_resolve_request`. Thread-safe; raises
-        after :meth:`close`."""
+    def _check_serving(self) -> None:
+        """Raise when this engine cannot make progress on a new
+        request. A dead drainer thread — crashed, or killed without the
+        crash hook running — must surface HERE, immediately: enqueueing
+        into a queue nobody drains turns ``result()`` into a hang."""
         if self._closed:
             raise RuntimeError("submit() after close(): the engine has "
                                "been drained and stopped")
         if self._drainer_error is not None:
             raise RuntimeError("the background drainer died; the engine "
                                "cannot serve") from self._drainer_error
+        if self._drainer is not None and not self._drainer.is_alive():
+            raise RuntimeError(
+                "the background drainer thread is not running (it died "
+                "without reporting an error); the engine cannot serve — "
+                "construct a new engine")
+
+    def submit(self, x, *, direction: str = 'fwd',
+               real: Optional[bool] = None,
+               max_wait_ms: Optional[float] = _UNSET) -> FFTTicket:
+        """Queue one transform request (exactly its transform shape —
+        the engine owns batching). ``real=None`` infers the plan kind
+        as documented on :meth:`_resolve_request`. ``max_wait_ms``
+        overrides the engine-wide drainer deadline for THIS request —
+        the per-request latency-SLO seam: a service maps an SLO class
+        to the longest this request may sit in a coalescing queue
+        (None disables the deadline trigger for it; ignored on
+        foreground engines, which only dispatch on ``flush()``).
+        Thread-safe; raises after :meth:`close` and raises immediately
+        when the drainer thread has died (a queued request would
+        otherwise hang forever on ``result()``)."""
+        self._check_serving()
         x, tshape, real, dtype, planar, st = self._resolve_request(
             x, direction, real)
         key = (tshape, real, direction, dtype, planar)
         t = FFTTicket(self)
         with self._cond:
-            if self._closed:
-                raise RuntimeError("submit() after close(): the engine "
-                                   "has been drained and stopped")
-            if self._drainer_error is not None:
-                # re-checked under the lock: a drainer that died between
-                # the entry check and here already failed every queued
-                # ticket — an enqueue now would strand this request
-                raise RuntimeError(
-                    "the background drainer died; the engine cannot "
-                    "serve") from self._drainer_error
-            deadline = (time.monotonic() + self.max_wait_ms / 1e3
-                        if self._background and self.max_wait_ms is not None
+            # re-checked under the lock: a drainer that died between
+            # the entry check and here already failed every queued
+            # ticket — an enqueue now would strand this request
+            self._check_serving()
+            wait_ms = (self.max_wait_ms if max_wait_ms is _UNSET
+                       else max_wait_ms)
+            deadline = (time.monotonic() + wait_ms / 1e3
+                        if self._background and wait_ms is not None
                         else None)
             self._queues.setdefault(key, []).append(
                 _Request(t, key, x, self._seq, deadline, st.width))
@@ -781,6 +901,10 @@ class FFTEngine:
                 for e in group:
                     e.snapshot_donated()
             ops = [e.x for e in group]
+            with self._stats_lock:
+                self.dispatched_groups += 1
+                self.width_hist[len(group)] = (
+                    self.width_hist.get(len(group), 0) + 1)
 
             def resolve(yb, group=group):
                 # runs when the group's result is FORCED, in stream
@@ -892,21 +1016,26 @@ class FFTEngine:
 
     def _ripe_locked(self, now: float):
         """(ripe keys, wait timeout): a queue is ripe when it holds a
-        full coalesce-width watermark OR its oldest entry's deadline
-        passed; the timeout is the next deadline. Caller holds the
-        condition lock."""
+        full coalesce-width watermark OR any queued entry's deadline
+        passed; the timeout is the next deadline. The deadline scan
+        covers the WHOLE queue, not just the head: per-request
+        ``max_wait_ms`` (SLO classes) means a later, tighter-deadline
+        request can legitimately ripen a queue whose head is a patient
+        batch request — the batch rides the interactive dispatch.
+        Caller holds the condition lock."""
         ripe, next_deadline = [], None
         for key, q in self._queues.items():
             if not q:
                 continue
-            head = q[0]
-            mark = self.watermark if self.watermark is not None else head.width
-            if len(q) >= mark or (head.deadline is not None
-                                  and now >= head.deadline):
+            mark = (self.watermark if self.watermark is not None
+                    else q[0].width)
+            dl = min((e.deadline for e in q if e.deadline is not None),
+                     default=None)
+            if len(q) >= mark or (dl is not None and now >= dl):
                 ripe.append(key)
-            elif head.deadline is not None:
-                if next_deadline is None or head.deadline < next_deadline:
-                    next_deadline = head.deadline
+            elif dl is not None:
+                if next_deadline is None or dl < next_deadline:
+                    next_deadline = dl
         timeout = None if next_deadline is None else max(
             next_deadline - now, 0.0)
         return ripe, timeout

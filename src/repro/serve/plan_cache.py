@@ -16,10 +16,16 @@ is about to execute with it), so the budget is guaranteed whenever any
 *other* entry can be freed; a single entry larger than the whole
 budget is served but owns the cache alone. ``on_evict(key, value)``
 fires once per evicted entry — the engine uses it to drop the evicted
-plan's jit executables.
+plan's jit executables. A hook that *raises* must not poison the
+cache: the entry (and its byte accounting) is already gone when the
+hook runs, so the exception is swallowed into a ``RuntimeWarning``
+(counted in :attr:`LRUPlanCache.evict_errors`) and eviction continues
+— a flaky user callback can cost its own side effects, never the
+engine's serving loop or the budget invariant.
 """
 from __future__ import annotations
 
+import warnings
 from collections import OrderedDict
 from typing import Callable, Hashable, List, Optional, Tuple
 
@@ -43,6 +49,7 @@ class LRUPlanCache:
         self._entries: 'OrderedDict[Hashable, object]' = OrderedDict()
         self._nbytes: dict = {}
         self.evictions = 0
+        self.evict_errors = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -114,7 +121,20 @@ class LRUPlanCache:
             self._nbytes.pop(victim, None)
             self.evictions += 1
             if self.on_evict is not None:
-                self.on_evict(victim, value)
+                try:
+                    self.on_evict(victim, value)
+                except Exception as exc:
+                    # the entry and its bytes are already dropped: the
+                    # budget invariant holds no matter what the hook
+                    # did, so a hook failure must not unwind a put()/
+                    # grow() mid-serve (regression: a raising
+                    # on_plan_evict used to poison the engine's plan
+                    # cache and strand its caller)
+                    self.evict_errors += 1
+                    warnings.warn(
+                        f"on_evict hook failed for {victim!r}: {exc!r} "
+                        f"(entry evicted anyway; byte accounting is "
+                        f"consistent)", RuntimeWarning, stacklevel=3)
 
     def items(self) -> List[Tuple[Hashable, object]]:
         return list(self._entries.items())

@@ -1,0 +1,1047 @@
+"""Multi-tenant FFT service: a socket front-end over one FFTEngine.
+
+The engine (PR 4/5) already keeps a single warm pipeline saturated —
+but only for the process that owns it. Every additional client process
+would pay its own plan cache, its own compilations, its own cold
+pipeline. :class:`FFTService` multiplexes many client connections onto
+ONE shared engine: requests arrive as length-prefixed frames
+(:mod:`repro.serve.protocol`), are admission-controlled per tenant,
+queued into the engine's coalescing drainer, and answered
+asynchronously as they resolve. Production concerns are the feature:
+
+* **admission control** — per-tenant token buckets (sustained rate +
+  burst) and inflight quotas, plus a global inflight window sized to
+  the engine's pipeline. Saturation is an explicit, typed
+  ``RETRY_AFTER`` answer carrying a retry hint — never silent
+  queueing, so a flooding tenant observes backpressure instead of
+  inflating everyone's latency.
+* **latency SLO classes** — each request resolves an SLO class
+  (request field, else tenant default) whose budget propagates into
+  the drainer as that request's ``max_wait_ms`` deadline: interactive
+  requests ripen their queue in milliseconds while batch requests
+  wait out wide coalesces, on the same engine.
+* **adaptive drainer policy** — the service feeds every *offered*
+  request into :class:`repro.serve.policy.AdaptivePolicy`'s rate
+  estimator and retargets the engine's (watermark, max_wait_ms) as
+  the load level shifts; decided levels persist as load-tagged
+  schedule rows so restarts start warm.
+* **metrics** — per-tenant and per-shape counters, p50/p99 latency vs
+  the SLO deadline, admission rejections by reason, engine queue
+  depths and the coalesce-width histogram, exported as one JSON
+  document (the ``METRICS`` frame and :meth:`FFTService.metrics`).
+* **graceful drain** — :meth:`FFTService.close` stops accepting,
+  waits for every admitted request to resolve, persists the policy,
+  and closes the engine it owns.
+
+:class:`FFTClient` is the thin matching client: ``submit`` returns a
+ticket, a reader thread demultiplexes result/backpressure frames by
+request id, and ``transform`` adds honor-the-hint retries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import queue
+import socket
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.comm import cost as ccost
+from repro.serve import protocol as proto
+from repro.serve.fft_engine import FFTEngine, ResultTimeout
+from repro.serve.policy import AdaptivePolicy
+
+Address = Union[str, Tuple[str, int]]
+
+
+class RetryAfter(RuntimeError):
+    """Typed backpressure: the service refused admission and the
+    caller should retry after ``retry_after_ms``. ``reason`` is one of
+    ``'rate'`` (token bucket empty), ``'tenant_quota'`` (per-tenant
+    inflight cap), ``'inflight_window'`` (the service-wide window)."""
+
+    def __init__(self, reason: str, retry_after_ms: float,
+                 tenant: Optional[str] = None):
+        super().__init__(
+            f"admission refused ({reason}"
+            + (f", tenant {tenant!r}" if tenant else "")
+            + f"): retry after {retry_after_ms:.1f} ms")
+        self.reason = reason
+        self.retry_after_ms = float(retry_after_ms)
+        self.tenant = tenant
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One latency class. ``deadline_ms`` is the p99 target the
+    metrics report violations against; ``max_wait_ms`` is how long a
+    request of this class may sit in a coalescing queue (the drainer
+    deadline propagated per request) — by default a quarter of the
+    deadline, leaving the rest for execution."""
+    name: str
+    deadline_ms: float
+    max_wait_ms: Optional[float] = None
+
+    def wait_ms(self) -> float:
+        return (self.deadline_ms / 4.0 if self.max_wait_ms is None
+                else self.max_wait_ms)
+
+
+def default_slo_classes() -> Dict[str, SLOClass]:
+    return {c.name: c for c in (
+        SLOClass('interactive', deadline_ms=50.0, max_wait_ms=2.0),
+        SLOClass('standard', deadline_ms=250.0, max_wait_ms=20.0),
+        SLOClass('batch', deadline_ms=2000.0, max_wait_ms=100.0),
+    )}
+
+
+@dataclasses.dataclass
+class TenantConfig:
+    """Static per-tenant admission policy. ``rate_per_s`` / ``burst``
+    parameterize a token bucket over *offered* requests;
+    ``max_inflight`` caps this tenant's admitted-but-unresolved
+    requests; ``slo`` names the default SLO class; ``token`` is an
+    optional shared secret the client must echo in HELLO."""
+    name: str
+    rate_per_s: float = math.inf
+    burst: int = 64
+    max_inflight: int = 16
+    slo: str = 'standard'
+    token: Optional[str] = None
+
+
+class _TokenBucket:
+    """Classic token bucket; returns 0.0 on admit, else the seconds
+    until a token will exist."""
+
+    def __init__(self, rate_per_s: float, burst: int):
+        self.rate = float(rate_per_s)
+        self.burst = max(1, int(burst))
+        self.tokens = float(self.burst)
+        self._t = time.monotonic()
+
+    def try_take(self, now: Optional[float] = None) -> float:
+        if math.isinf(self.rate):
+            return 0.0
+        now = time.monotonic() if now is None else now
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self._t) * self.rate)
+        self._t = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return 0.0
+        if self.rate <= 0:
+            return math.inf
+        return (1.0 - self.tokens) / self.rate
+
+
+class _Tenant:
+    """Runtime state for one tenant."""
+
+    def __init__(self, cfg: TenantConfig):
+        self.cfg = cfg
+        self.bucket = _TokenBucket(cfg.rate_per_s, cfg.burst)
+        self.inflight = 0
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected: Dict[str, int] = {}
+        # slo name -> deque of latency_ms samples (bounded reservoir)
+        self.latencies: Dict[str, deque] = {}
+
+    def record_latency(self, slo: str, ms: float) -> None:
+        self.latencies.setdefault(slo, deque(maxlen=4096)).append(ms)
+
+
+def _percentile(samples: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of a non-empty sample list."""
+    s = sorted(samples)
+    return s[min(len(s) - 1, max(0, math.ceil(q / 100.0 * len(s)) - 1))]
+
+
+class _Conn:
+    """One client connection: its socket, tenant, outbound queue (one
+    writer thread serializes the socket), and an inflight counter for
+    DRAIN semantics."""
+
+    def __init__(self, sock):
+        self.sock = sock
+        self.outq: 'queue.Queue' = queue.Queue()
+        self.tenant: Optional[_Tenant] = None
+        self.inflight = 0
+        self.cond = threading.Condition()
+        self.dead = False
+
+    def track(self, delta: int) -> None:
+        with self.cond:
+            self.inflight += delta
+            if self.inflight <= 0:
+                self.cond.notify_all()
+
+    def send(self, msg_type: int, meta: dict, arrays: Sequence = ()) -> None:
+        """Queue one frame for the writer thread (pre-packing happens
+        there; what crosses this queue is cheap to build)."""
+        self.outq.put(('frame', msg_type, meta, tuple(arrays)))
+
+
+class FFTService:
+    """The multi-tenant socket front-end over one :class:`FFTEngine`.
+
+    Args:
+      mesh: device mesh for the engine the service builds (ignored
+        when ``engine`` is given).
+      engine: an existing *background* engine to serve with; the
+        service takes over its drainer triggers when the adaptive
+        policy is on. Default: the service builds (and owns, and
+        closes) ``FFTEngine(mesh=mesh, background=True,
+        **engine_kwargs)``.
+      address: a unix socket path (str) or a ``(host, port)`` TCP
+        tuple; may instead be passed to :meth:`start`.
+      tenants: :class:`TenantConfig` entries. With none given, unknown
+        tenants are auto-admitted under a default config; with any
+        given, unknown tenants are rejected unless
+        ``allow_unknown_tenants=True``.
+      slo_classes: latency classes by name
+        (default :func:`default_slo_classes`).
+      max_inflight: the service-wide admitted-but-unresolved window —
+        beyond it every tenant sees ``RETRY_AFTER('inflight_window')``.
+      policy: ``'adaptive'`` (default) builds an
+        :class:`AdaptivePolicy` sized to the engine and retargets the
+        drainer as load shifts; an :class:`AdaptivePolicy` instance is
+        used as given; None leaves the engine's triggers alone.
+      persist_policy: persist the policy's load-level rows into the
+        serving schedule table on :meth:`close` (needs the engine's
+        schedule table enabled).
+      **engine_kwargs: forwarded to the engine the service builds.
+    """
+
+    def __init__(self, mesh=None, *, engine: Optional[FFTEngine] = None,
+                 address: Optional[Address] = None,
+                 tenants: Sequence[TenantConfig] = (),
+                 slo_classes: Optional[Dict[str, SLOClass]] = None,
+                 max_inflight: int = 64,
+                 policy: Union[str, AdaptivePolicy, None] = 'adaptive',
+                 allow_unknown_tenants: Optional[bool] = None,
+                 persist_policy: bool = True,
+                 **engine_kwargs):
+        if engine is not None:
+            if engine_kwargs:
+                raise ValueError(
+                    f"engine_kwargs {sorted(engine_kwargs)} are for the "
+                    f"engine the service builds; an explicit engine "
+                    f"arrives fully configured")
+            if not engine._background:
+                raise ValueError(
+                    "FFTService needs a background engine (its drainer "
+                    "is the serving loop); construct it with "
+                    "background=True or a drainer trigger")
+            self.engine = engine
+            self._own_engine = False
+        else:
+            if mesh is None:
+                raise ValueError("FFTService(mesh=...) is required when "
+                                 "no engine is given")
+            engine_kwargs.setdefault('background', True)
+            self.engine = FFTEngine(mesh=mesh, **engine_kwargs)
+            self._own_engine = True
+
+        self.slo_classes = dict(slo_classes if slo_classes is not None
+                                else default_slo_classes())
+        self.max_inflight = int(max_inflight)
+        if self.max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, "
+                             f"got {max_inflight}")
+        self._lock = threading.Lock()
+        self._drain_cond = threading.Condition(self._lock)
+        self._tenants: Dict[str, _Tenant] = {}
+        for cfg in tenants:
+            if cfg.slo not in self.slo_classes:
+                raise ValueError(f"tenant {cfg.name!r} defaults to "
+                                 f"unknown SLO class {cfg.slo!r}")
+            self._tenants[cfg.name] = _Tenant(cfg)
+        self.allow_unknown_tenants = (not tenants
+                                      if allow_unknown_tenants is None
+                                      else allow_unknown_tenants)
+        self._inflight_total = 0
+        self._lat_ewma_ms: Optional[float] = None
+        self._shape_lat: Dict[str, deque] = {}
+
+        if policy == 'adaptive':
+            base_wait = self.engine.max_wait_ms
+            policy = AdaptivePolicy(
+                max_coalesce=self.engine.max_coalesce,
+                max_wait_ms=(50.0 if base_wait in (None, 0)
+                             else float(base_wait)),
+                overlap_chunks=1)
+        self.policy: Optional[AdaptivePolicy] = policy
+        self.persist_policy = persist_policy and policy is not None
+        self._last_decision = None
+        if (self.policy is not None and self.engine.shape is not None
+                and self.engine._schedule_table is not None):
+            # warm start: adopt persisted load-level rows for the
+            # engine's default config before the first request lands
+            self.policy.seed(
+                self.engine._schedule_table, dict(self.engine.mesh.shape),
+                self.engine.shape, 'complex',
+                self.engine._plan_kwargs.get('comm', 'auto'),
+                backend=_jax_backend())
+        self._apply_policy(force=True)
+
+        self.address: Optional[Address] = address
+        self._listener: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conns: List[_Conn] = []
+        self._conn_lock = threading.Lock()
+        self._closed = False
+        self._t0 = time.monotonic()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self, address: Optional[Address] = None) -> 'FFTService':
+        """Bind, listen, and serve connections on a daemon accept
+        thread. Returns self (so ``with FFTService(...).start() as s``
+        works)."""
+        if self._listener is not None:
+            raise RuntimeError("the service is already serving")
+        if self._closed:
+            raise RuntimeError("start() after close()")
+        if address is not None:
+            self.address = address
+        if self.address is None:
+            raise ValueError("no address: pass a unix socket path or a "
+                             "(host, port) tuple")
+        if isinstance(self.address, str):
+            if os.path.exists(self.address):
+                os.unlink(self.address)
+            self._listener = socket.socket(socket.AF_UNIX,
+                                           socket.SOCK_STREAM)
+            self._listener.bind(self.address)
+        else:
+            host, port = self.address
+            self._listener = socket.socket(socket.AF_INET,
+                                           socket.SOCK_STREAM)
+            self._listener.setsockopt(socket.SOL_SOCKET,
+                                      socket.SO_REUSEADDR, 1)
+            self._listener.bind((host, int(port)))
+            if port == 0:
+                self.address = self._listener.getsockname()
+        self._listener.listen(64)
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name='FFTService-accept', daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def __enter__(self) -> 'FFTService':
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
+    def close(self, *, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
+        """Graceful shutdown: stop accepting, optionally wait for
+        every admitted request to resolve, persist the adaptive
+        policy's load-level rows, close the connections and (when the
+        service built it) the engine. Idempotent."""
+        already = self._closed
+        self._closed = True
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            if isinstance(self.address, str):
+                try:
+                    os.unlink(self.address)
+                except OSError:
+                    pass
+        if drain and not already:
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            with self._drain_cond:
+                while self._inflight_total > 0:
+                    left = (None if deadline is None
+                            else deadline - time.monotonic())
+                    if left is not None and left <= 0:
+                        break
+                    self._drain_cond.wait(0.1 if left is None
+                                          else min(left, 0.1))
+        if not already:
+            self._persist_policy_rows()
+        # half-close every connection: the handler sees EOF, its writer
+        # flushes all queued result frames IN ORDER, then the socket
+        # closes — a drained shutdown never drops an answered request
+        with self._conn_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.sock.shutdown(socket.SHUT_RD)
+            except OSError:
+                pass
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            with self._conn_lock:
+                if not self._conns:
+                    break
+            time.sleep(0.01)
+        with self._conn_lock:
+            conns, self._conns = list(self._conns), []
+        for c in conns:                        # stragglers: force-close
+            c.outq.put(None)
+            try:
+                c.sock.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+        if self._own_engine and not already:
+            self.engine.close()
+
+    def local_client(self, tenant: str = 'default',
+                     token: Optional[str] = None) -> 'FFTClient':
+        """A connected client for this service's address."""
+        if self.address is None:
+            raise RuntimeError("the service is not serving yet")
+        return FFTClient(self.address, tenant=tenant, token=token)
+
+    # -- admission ----------------------------------------------------------
+
+    def _tenant(self, name: str, token: Optional[str]) -> _Tenant:
+        with self._lock:
+            t = self._tenants.get(name)
+            if t is None:
+                if not self.allow_unknown_tenants:
+                    raise PermissionError(f"unknown tenant {name!r}")
+                t = _Tenant(TenantConfig(name))
+                self._tenants[name] = t
+            if t.cfg.token is not None and token != t.cfg.token:
+                raise PermissionError(f"bad token for tenant {name!r}")
+            return t
+
+    def _resolve_slo(self, name: Optional[str],
+                     tenant: _Tenant) -> SLOClass:
+        if name is None:
+            name = tenant.cfg.slo
+        slo = self.slo_classes.get(name)
+        if slo is None:
+            raise ValueError(f"unknown SLO class {name!r} (have "
+                             f"{sorted(self.slo_classes)})")
+        return slo
+
+    def _retry_hint_ms(self, slo: SLOClass) -> float:
+        """How long a refused caller should back off: roughly one
+        request's observed end-to-end latency (a slot frees about that
+        fast), floored at 1 ms."""
+        base = self._lat_ewma_ms
+        if base is None:
+            base = slo.wait_ms()
+        return max(1.0, base)
+
+    def _admit(self, tenant: _Tenant, slo: SLOClass) -> None:
+        """Charge admission or raise :class:`RetryAfter`. Every
+        *offered* request feeds the policy's rate estimator — the
+        adaptive drainer must see the load the service is asked to
+        carry, not the post-rejection residue."""
+        with self._lock:
+            now = time.monotonic()
+            if self.policy is not None:
+                self.policy.observe(1, now)
+            tenant.submitted += 1
+            wait_s = tenant.bucket.try_take(now)
+            if wait_s > 0:
+                tenant.rejected['rate'] = tenant.rejected.get('rate', 0) + 1
+                raise RetryAfter('rate', wait_s * 1e3, tenant.cfg.name)
+            if tenant.inflight >= tenant.cfg.max_inflight:
+                tenant.rejected['tenant_quota'] = (
+                    tenant.rejected.get('tenant_quota', 0) + 1)
+                raise RetryAfter('tenant_quota', self._retry_hint_ms(slo),
+                                 tenant.cfg.name)
+            if self._inflight_total >= self.max_inflight:
+                tenant.rejected['inflight_window'] = (
+                    tenant.rejected.get('inflight_window', 0) + 1)
+                raise RetryAfter('inflight_window',
+                                 self._retry_hint_ms(slo), tenant.cfg.name)
+            tenant.inflight += 1
+            self._inflight_total += 1
+        self._apply_policy()
+
+    def _release(self, tenant: _Tenant, *, ok: bool, slo: SLOClass,
+                 shape_key: str, latency_ms: Optional[float]) -> None:
+        with self._lock:
+            tenant.inflight -= 1
+            self._inflight_total -= 1
+            if ok:
+                tenant.completed += 1
+            else:
+                tenant.failed += 1
+            if latency_ms is not None:
+                tenant.record_latency(slo.name, latency_ms)
+                self._shape_lat.setdefault(
+                    shape_key, deque(maxlen=4096)).append(latency_ms)
+                self._lat_ewma_ms = (
+                    latency_ms if self._lat_ewma_ms is None
+                    else 0.9 * self._lat_ewma_ms + 0.1 * latency_ms)
+                if self.policy is not None:
+                    self.policy.note_latency(latency_ms * 1e3)
+            self._drain_cond.notify_all()
+
+    def _apply_policy(self, force: bool = False) -> None:
+        """Retarget the engine's drainer when the policy's decision
+        materially moved (watermark changed, or the wait by > 20%)."""
+        if self.policy is None:
+            return
+        d = self.policy.decide()
+        last = self._last_decision
+        if (force or last is None or d.watermark != last.watermark
+                or abs(d.max_wait_ms - last.max_wait_ms)
+                > 0.2 * max(last.max_wait_ms, 1e-9)):
+            self.engine.set_drainer(watermark=d.watermark,
+                                    max_wait_ms=d.max_wait_ms)
+            self._last_decision = d
+
+    def _persist_policy_rows(self) -> None:
+        if (not self.persist_policy or self.policy is None
+                or self.engine._schedule_path is None):
+            return
+        rows = []
+        strategy = self.engine._plan_kwargs.get('comm', 'auto')
+        for shape, real in self.engine.serving_shapes():
+            rows.extend(self.policy.rows(
+                dict(self.engine.mesh.shape), shape,
+                'real' if real else 'complex', strategy,
+                backend=_jax_backend()))
+        if rows:
+            try:
+                ccost.persist_schedule_rows(rows,
+                                            self.engine._schedule_path)
+            except OSError:
+                import warnings
+                warnings.warn("could not persist adaptive-policy rows",
+                              RuntimeWarning)
+
+    # -- the wire loop ------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return                         # listener closed: shut down
+            conn = _Conn(sock)
+            with self._conn_lock:
+                if self._closed:
+                    sock.close()
+                    return
+                self._conns.append(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name='FFTService-conn', daemon=True).start()
+
+    def _writer_loop(self, conn: _Conn) -> None:
+        """The single sender for one connection. Result payload
+        conversion (device -> host numpy) happens HERE, not on the
+        drainer thread — a slow client costs itself, never the
+        pipeline."""
+        while True:
+            item = conn.outq.get()
+            if item is None:
+                return
+            if conn.dead:
+                continue                       # drain the queue quietly
+            try:
+                if item[0] == 'frame':
+                    _, msg_type, meta, arrays = item
+                    proto.send_frame(conn.sock, msg_type, meta, arrays)
+                else:                          # ('result', req_id, ticket)
+                    _, req_id, ticket = item
+                    self._send_result(conn, req_id, ticket)
+            except (OSError, proto.ProtocolError):
+                conn.dead = True               # client went away mid-write
+
+    def _send_result(self, conn: _Conn, req_id: int, ticket) -> None:
+        if ticket.failed:
+            try:
+                ticket.result(timeout=0)
+            except Exception as exc:
+                proto.send_frame(conn.sock, proto.ERROR,
+                                 {'req_id': req_id, 'kind': 'request',
+                                  'error': f"{type(exc).__name__}: {exc}"})
+                return
+        value = ticket.result(timeout=0)
+        if isinstance(value, tuple):
+            arrays = [np.asarray(v) for v in value]
+            form = 'planar'
+        else:
+            arrays = [np.asarray(value)]
+            form = 'array'
+        proto.send_frame(conn.sock, proto.RESULT,
+                         {'req_id': req_id, 'form': form}, arrays)
+
+    def _serve_conn(self, conn: _Conn) -> None:
+        writer = None
+        try:
+            try:
+                hello = proto.recv_frame(conn.sock)
+            except proto.VersionMismatch as exc:
+                proto.send_frame(conn.sock, proto.ERROR,
+                                 {'kind': 'version', 'error': str(exc)})
+                return
+            except proto.ProtocolError as exc:
+                try:
+                    proto.send_frame(conn.sock, proto.ERROR,
+                                     {'kind': 'protocol',
+                                      'error': str(exc)})
+                except OSError:
+                    pass
+                return
+            if hello is None:
+                return
+            msg_type, meta, _ = hello
+            if msg_type != proto.HELLO:
+                proto.send_frame(conn.sock, proto.ERROR,
+                                 {'kind': 'protocol',
+                                  'error': 'expected HELLO first'})
+                return
+            try:
+                tenant = self._tenant(str(meta.get('tenant', 'default')),
+                                      meta.get('token'))
+            except PermissionError as exc:
+                proto.send_frame(conn.sock, proto.ERROR,
+                                 {'kind': 'auth', 'error': str(exc)})
+                return
+            conn.tenant = tenant
+            writer = threading.Thread(target=self._writer_loop,
+                                      args=(conn,),
+                                      name='FFTService-writer', daemon=True)
+            writer.start()
+            conn.send(proto.HELLO_OK, {
+                'tenant': tenant.cfg.name,
+                'max_inflight': tenant.cfg.max_inflight,
+                'rate_per_s': (None if math.isinf(tenant.cfg.rate_per_s)
+                               else tenant.cfg.rate_per_s),
+                'slo_classes': {n: {'deadline_ms': c.deadline_ms,
+                                    'max_wait_ms': c.wait_ms()}
+                                for n, c in self.slo_classes.items()},
+                'default_slo': tenant.cfg.slo,
+            })
+            while True:
+                try:
+                    frame = proto.recv_frame(conn.sock)
+                except proto.VersionMismatch as exc:
+                    # a v1 HELLO got us here; a mid-stream version
+                    # flip is a client bug — answer typed, then close
+                    conn.send(proto.ERROR,
+                              {'kind': 'version', 'error': str(exc)})
+                    return
+                except proto.ProtocolError as exc:
+                    conn.send(proto.ERROR,
+                              {'kind': 'protocol', 'error': str(exc)})
+                    return
+                if frame is None:
+                    return                     # clean client close
+                msg_type, meta, arrays = frame
+                if msg_type == proto.SUBMIT:
+                    self._handle_submit(conn, tenant, meta, arrays)
+                elif msg_type == proto.METRICS:
+                    conn.send(proto.METRICS_OK,
+                              {'req_id': meta.get('req_id'),
+                               'metrics': self.metrics()})
+                elif msg_type == proto.DRAIN:
+                    with conn.cond:
+                        while conn.inflight > 0:
+                            conn.cond.wait(0.1)
+                    conn.send(proto.DRAIN_OK,
+                              {'req_id': meta.get('req_id')})
+                else:
+                    conn.send(proto.ERROR,
+                              {'kind': 'protocol',
+                               'error': f'unexpected message type '
+                                        f'{msg_type}'})
+        finally:
+            if writer is not None:
+                conn.outq.put(None)
+                writer.join(timeout=10.0)
+            try:
+                conn.sock.close()
+            except OSError:
+                pass
+            with self._conn_lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+
+    def _handle_submit(self, conn: _Conn, tenant: _Tenant, meta: dict,
+                       arrays: List[np.ndarray]) -> None:
+        req_id = meta.get('req_id')
+        try:
+            slo = self._resolve_slo(meta.get('slo'), tenant)
+        except ValueError as exc:
+            conn.send(proto.ERROR, {'req_id': req_id, 'kind': 'request',
+                                    'error': str(exc)})
+            return
+        try:
+            self._admit(tenant, slo)
+        except RetryAfter as ra:
+            conn.send(proto.RETRY_AFTER,
+                      {'req_id': req_id, 'reason': ra.reason,
+                       'retry_after_ms': ra.retry_after_ms})
+            return
+        direction = meta.get('direction', 'fwd')
+        real = meta.get('real')
+        form = meta.get('form', 'array')
+        shape_key = (f"{'x'.join(map(str, arrays[0].shape))}"
+                     f":{direction}" if arrays else '?')
+        t_submit = time.monotonic()
+        try:
+            if form == 'planar':
+                if len(arrays) != 2:
+                    raise ValueError(
+                        f"planar submit needs exactly 2 arrays, "
+                        f"got {len(arrays)}")
+                x = (arrays[0], arrays[1])
+            else:
+                if len(arrays) != 1:
+                    raise ValueError(
+                        f"submit needs exactly 1 array, got {len(arrays)}")
+                x = arrays[0]
+            # the class's wait budget, tightened (never extended) by
+            # the adaptive policy's current decision
+            wait_ms = slo.wait_ms()
+            if self._last_decision is not None:
+                wait_ms = min(wait_ms, self._last_decision.max_wait_ms)
+            ticket = self.engine.submit(x, direction=direction, real=real,
+                                        max_wait_ms=wait_ms)
+        except Exception as exc:
+            self._release(tenant, ok=False, slo=slo, shape_key=shape_key,
+                          latency_ms=None)
+            conn.send(proto.ERROR, {'req_id': req_id, 'kind': 'request',
+                                    'error': f"{type(exc).__name__}: "
+                                             f"{exc}"})
+            return
+        conn.track(+1)
+
+        def on_done(t, conn=conn, tenant=tenant, slo=slo,
+                    shape_key=shape_key, req_id=req_id,
+                    t_submit=t_submit):
+            # drainer thread: bookkeeping + handoff only — the numpy
+            # conversion and the socket write happen on the writer
+            latency_ms = (time.monotonic() - t_submit) * 1e3
+            self._release(tenant, ok=t.done, slo=slo, shape_key=shape_key,
+                          latency_ms=latency_ms if t.done else None)
+            conn.outq.put(('result', req_id, t))
+            conn.track(-1)
+
+        ticket.add_done_callback(on_done)
+
+    # -- metrics ------------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """The whole metrics surface as one JSON-serializable dict."""
+        with self._lock:
+            tenants = {}
+            for name, t in self._tenants.items():
+                lat = {}
+                for slo_name, samples in t.latencies.items():
+                    slo = self.slo_classes.get(slo_name)
+                    vals = list(samples)
+                    lat[slo_name] = {
+                        'count': len(vals),
+                        'p50_ms': round(_percentile(vals, 50), 3),
+                        'p99_ms': round(_percentile(vals, 99), 3),
+                        'slo_deadline_ms': (slo.deadline_ms
+                                            if slo else None),
+                        'violations': (sum(v > slo.deadline_ms
+                                           for v in vals)
+                                       if slo else None),
+                    }
+                tenants[name] = {
+                    'submitted': t.submitted,
+                    'completed': t.completed,
+                    'failed': t.failed,
+                    'inflight': t.inflight,
+                    'rejected': dict(t.rejected),
+                    'latency_ms': lat,
+                }
+            shapes = {k: {'count': len(v),
+                          'p50_ms': round(_percentile(list(v), 50), 3),
+                          'p99_ms': round(_percentile(list(v), 99), 3)}
+                      for k, v in self._shape_lat.items() if v}
+            inflight = self._inflight_total
+            last = self._last_decision
+        queues = {self._key_str(k): d
+                  for k, d in self.engine.queue_depths().items()}
+        out = {
+            'service': {
+                'uptime_s': round(time.monotonic() - self._t0, 3),
+                'inflight': inflight,
+                'max_inflight': self.max_inflight,
+                'queue_depths': queues,
+                'dispatch': self.engine.dispatch_stats(),
+                'policy': None if last is None else {
+                    'watermark': last.watermark,
+                    'max_wait_ms': round(last.max_wait_ms, 3),
+                    'load_level': last.load_level,
+                    'rate_per_s': round(last.rate_per_s, 3),
+                },
+            },
+            'tenants': tenants,
+            'shapes': shapes,
+        }
+        return out
+
+    @staticmethod
+    def _key_str(key: tuple) -> str:
+        shape, real, direction, dtype, planar = key
+        return (f"{'x'.join(map(str, shape))}"
+                f"{'/real' if real else ''}:{direction}:{dtype}"
+                f"{':planar' if planar else ''}")
+
+    def __repr__(self):
+        return (f"FFTService(address={self.address!r}, "
+                f"tenants={sorted(self._tenants)}, "
+                f"inflight={self._inflight_total}/{self.max_inflight}, "
+                f"policy={'on' if self.policy else 'off'})")
+
+
+def _jax_backend() -> Optional[str]:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+class ClientTicket:
+    """Client-side handle for one submitted request: resolves with the
+    transform output, or raises the server's typed answer —
+    :class:`RetryAfter` on backpressure, ``RuntimeError`` on a request
+    error, ``ConnectionError`` when the link died first."""
+
+    __slots__ = ('_event', '_value', '_error', 'done_at')
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+        #: monotonic timestamp of the settling frame's arrival (set by
+        #: the reader thread) — latency measured at the wire, not at
+        #: whenever the caller got around to result()
+        self.done_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set() and self._error is None
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise ResultTimeout(
+                f"no server answer within {timeout}s — the request may "
+                f"still be queued; call result() again")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self.done_at = time.monotonic()
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self.done_at = time.monotonic()
+        self._event.set()
+
+
+class FFTClient:
+    """Thin client for :class:`FFTService`.
+
+    ``submit`` sends one frame and returns a :class:`ClientTicket`; a
+    reader thread demultiplexes the (unordered) answers by request id.
+    ``transform`` is the synchronous convenience that also honors
+    ``RETRY_AFTER`` hints with bounded retries.
+    """
+
+    def __init__(self, address: Address, *, tenant: str = 'default',
+                 token: Optional[str] = None,
+                 connect_timeout: Optional[float] = 30.0):
+        self.tenant = tenant
+        if isinstance(address, str):
+            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._sock.settimeout(connect_timeout)
+            self._sock.connect(address)
+        else:
+            self._sock = socket.create_connection(
+                (address[0], int(address[1])), timeout=connect_timeout)
+        self._sock.settimeout(None)
+        self._send_lock = threading.Lock()
+        self._tickets: Dict[int, ClientTicket] = {}
+        self._tickets_lock = threading.Lock()
+        self._next_id = 0
+        self._closed = False
+
+        proto.send_frame(self._sock, proto.HELLO,
+                         {'tenant': tenant, 'token': token})
+        first = proto.recv_frame(self._sock)
+        if first is None:
+            raise ConnectionError("server closed during handshake")
+        msg_type, meta, _ = first
+        if msg_type == proto.ERROR:
+            raise PermissionError(
+                f"server refused the connection "
+                f"({meta.get('kind')}): {meta.get('error')}")
+        if msg_type != proto.HELLO_OK:
+            raise proto.ProtocolError(
+                f"expected HELLO_OK, got message type {msg_type}")
+        self.server_info = meta
+        self._reader = threading.Thread(target=self._reader_loop,
+                                        name='FFTClient-reader',
+                                        daemon=True)
+        self._reader.start()
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _register(self) -> Tuple[int, ClientTicket]:
+        with self._tickets_lock:
+            self._next_id += 1
+            t = ClientTicket()
+            self._tickets[self._next_id] = t
+            return self._next_id, t
+
+    def _take(self, req_id) -> Optional[ClientTicket]:
+        with self._tickets_lock:
+            return self._tickets.pop(req_id, None)
+
+    def _reader_loop(self) -> None:
+        err: BaseException = ConnectionError("connection closed")
+        try:
+            while True:
+                frame = proto.recv_frame(self._sock)
+                if frame is None:
+                    break
+                msg_type, meta, arrays = frame
+                req_id = meta.get('req_id')
+                t = self._take(req_id)
+                if msg_type == proto.RESULT:
+                    if t is not None:
+                        if meta.get('form') == 'planar':
+                            t._resolve((arrays[0], arrays[1]))
+                        else:
+                            t._resolve(arrays[0])
+                elif msg_type == proto.RETRY_AFTER:
+                    if t is not None:
+                        t._fail(RetryAfter(meta.get('reason', '?'),
+                                           float(meta.get('retry_after_ms',
+                                                          1.0)),
+                                           self.tenant))
+                elif msg_type == proto.ERROR:
+                    exc = RuntimeError(
+                        f"server error ({meta.get('kind')}): "
+                        f"{meta.get('error')}")
+                    if t is not None:
+                        t._fail(exc)
+                    elif req_id is None:
+                        err = exc              # connection-level: fail all
+                        break
+                elif msg_type in (proto.METRICS_OK, proto.DRAIN_OK):
+                    if t is not None:
+                        t._resolve(meta.get('metrics', True))
+        except proto.ProtocolError as exc:
+            err = exc
+        except OSError as exc:
+            err = ConnectionError(f"connection lost: {exc}")
+        with self._tickets_lock:
+            pending, self._tickets = self._tickets, {}
+        for t in pending.values():
+            t._fail(err)
+
+    def _send(self, msg_type: int, meta: dict, arrays: Sequence = ()):
+        if self._closed:
+            raise RuntimeError("client is closed")
+        with self._send_lock:
+            proto.send_frame(self._sock, msg_type, meta, arrays)
+
+    # -- API ----------------------------------------------------------------
+
+    def submit(self, x, *, direction: str = 'fwd',
+               real: Optional[bool] = None,
+               slo: Optional[str] = None) -> ClientTicket:
+        """Send one transform request; the ticket resolves when the
+        server answers (results arrive in the server's order, not
+        submission order)."""
+        if isinstance(x, (tuple, list)):
+            arrays = [np.ascontiguousarray(a) for a in x]
+            form = 'planar'
+        else:
+            arrays = [np.ascontiguousarray(x)]
+            form = 'array'
+        req_id, t = self._register()
+        meta = {'req_id': req_id, 'direction': direction, 'form': form}
+        if real is not None:
+            meta['real'] = bool(real)
+        if slo is not None:
+            meta['slo'] = slo
+        try:
+            self._send(proto.SUBMIT, meta, arrays)
+        except BaseException:
+            self._take(req_id)
+            raise
+        return t
+
+    def transform(self, xs: Sequence, *, direction: str = 'fwd',
+                  real: Optional[bool] = None, slo: Optional[str] = None,
+                  timeout: Optional[float] = 120.0,
+                  max_attempts: int = 8) -> List:
+        """Submit every operand and return the results in order,
+        sleeping out ``RETRY_AFTER`` hints and resubmitting (at most
+        ``max_attempts`` per request) — the well-behaved-client loop."""
+        out = []
+        for x in xs:
+            for attempt in range(max_attempts):
+                t = self.submit(x, direction=direction, real=real, slo=slo)
+                try:
+                    out.append(t.result(timeout))
+                    break
+                except RetryAfter as ra:
+                    if attempt == max_attempts - 1:
+                        raise
+                    time.sleep(ra.retry_after_ms / 1e3)
+        return out
+
+    def metrics(self, timeout: Optional[float] = 30.0) -> dict:
+        """The server's metrics JSON document."""
+        req_id, t = self._register()
+        self._send(proto.METRICS, {'req_id': req_id})
+        return t.result(timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until the server resolved every request THIS client
+        has submitted so far (their result frames are queued/sent)."""
+        req_id, t = self._register()
+        self._send(proto.DRAIN, {'req_id': req_id})
+        t.result(timeout)
+
+    def close(self) -> None:
+        """Close the connection; outstanding tickets fail with
+        ``ConnectionError``."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        self._reader.join(timeout=10.0)
+
+    def __enter__(self) -> 'FFTClient':
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
