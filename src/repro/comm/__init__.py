@@ -6,9 +6,13 @@ The inter-superstep redistributions — the all-to-all transposes between
 lives or dies. This package makes them a first-class subsystem:
 
 * :mod:`repro.comm.strategies` — a strategy registry (mirroring
-  ``repro.fft.methods``) with three bit-exact-equivalent schedules:
+  ``repro.fft.methods``) with bit-exact-equivalent schedules:
   ``'all_to_all'`` (tiled collective), ``'ppermute'`` (pairwise ring),
-  ``'hierarchical'`` (two-phase pod-split exchange).
+  ``'hierarchical'`` (two-phase pod-split exchange) and parameterized
+  ``'pod_tree:<spec>'`` trees (arbitrary per-axis factorizations, e.g.
+  ``'pod_tree:x.4*y.2*y.2'`` splits 16 devices 4 x 2 x 2). Compact
+  16-bit *wire formats* (``wire_dtype='fp16'|'bf16'``) compose with
+  every strategy via :func:`strategies.swap_axes_wire`.
 * :mod:`repro.comm.overlap` — chunked compute/communication pipelining
   that composes with *any* strategy (lifted out of ``fft/pencil.py``).
 * :mod:`repro.comm.cost` — the paper's cycle model (extended in

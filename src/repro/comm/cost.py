@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import json
 import math
 import os
@@ -34,6 +35,72 @@ OVERLAP_CHUNK_OVERHEAD = 1000.0
 TWIDDLE_FLOPS_PER_ELEM = 8.0
 
 _OVERLAP_CANDIDATES = (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Pod-tree factorization search (arXiv 2404.15888's searchable phase
+# decomposition, applied to the ownership swap)
+# ---------------------------------------------------------------------------
+
+#: default depth bound of the factorization search: at most this many
+#: factors per mesh axis. Depth-3 already covers 4 -> 2x2 pods and
+#: 512 -> 8x8x8; deeper trees only add fixed-cost phases.
+POD_TREE_MAX_DEPTH = 3
+
+#: candidate cap of :func:`enumerate_trees` — itertools.product order,
+#: so the two-phase-equivalent all-full tree (every axis one level) is
+#: always first and the search result can never price worse than the
+#: fixed two-phase split.
+POD_TREE_MAX_TREES = 64
+
+
+@functools.lru_cache(maxsize=256)
+def enumerate_axis_factorizations(
+        extent: int,
+        max_depth: int = POD_TREE_MAX_DEPTH) -> Tuple[Tuple[int, ...], ...]:
+    """Every ordered factor sequence (factors >= 2, at most
+    ``max_depth`` long) whose product is ``extent``; ``(extent,)``
+    first. Order matters: digit significance fixes which phase runs
+    first, and strided phases price differently. Extent 1 has the empty
+    factorization only."""
+    def rec(rem: int, depth_left: int):
+        if rem == 1:
+            return [()]
+        if depth_left == 0:
+            return []
+        out = []
+        for f in range(2, rem + 1):
+            if rem % f == 0:
+                for tail in rec(rem // f, depth_left - 1):
+                    out.append((f,) + tail)
+        return out
+
+    seqs = rec(int(extent), max(int(max_depth), 1))
+    seqs.sort(key=lambda s: (len(s), s))
+    return tuple(seqs)
+
+
+def enumerate_trees(mesh_axes: Sequence[str], mesh_shape: Mapping[str, int],
+                    *, max_depth: int = POD_TREE_MAX_DEPTH,
+                    max_trees: int = POD_TREE_MAX_TREES) -> Tuple[str, ...]:
+    """Candidate ``'pod_tree:<spec>'`` strategy names factoring each of
+    ``mesh_axes`` within the depth bound (cross product over axes,
+    capped at ``max_trees``). The first candidate is the all-full tree
+    — one level per axis, i.e. exactly the fixed two-phase pod split —
+    so a search over these names is never worse than 'hierarchical'."""
+    per_axis = []
+    for a in mesh_axes:
+        facts = enumerate_axis_factorizations(mesh_shape[a], max_depth)
+        per_axis.append([(a, f) for f in facts])
+    names = []
+    for combo in itertools.product(*per_axis):
+        tree = {a: f for a, f in combo if f}   # extent-1 axes drop out
+        if not tree:
+            continue
+        names.append(strat.POD_TREE_PREFIX + strat.format_tree_spec(tree))
+        if len(names) >= max_trees:
+            break
+    return tuple(dict.fromkeys(names))
 
 
 def select_method(n: int, precision: wm.Precision = 'fp32') -> str:
@@ -70,6 +137,12 @@ MEASURED_ENV = 'REPRO_MEASURED_COSTS'
 #: measures (reachable today via ``MeasuredTable.swap_us(dtype=...)``).
 PRECISION_WIRE_DTYPE = {'fp16': 'c64', 'fp32': 'c64', 'fp64': 'c128'}
 
+#: measured-grid dtype tag per compact wire format: fp16/bf16 wire rows
+#: time 16-bit component arrays and key on their own tags, so a compact
+#: wire is priced from its own measurements, never from scaled native
+#: rows.
+WIRE_MEASURED_DTYPE = {'fp16': 'f16', 'bf16': 'bf16'}
+
 
 def _default_measured_path() -> str:
     return os.path.join(os.path.dirname(__file__), '..', '..', '..',
@@ -95,6 +168,12 @@ class MeasuredTable:
 
     def __len__(self):
         return sum(len(v) for v in self._table.values())
+
+    def strategies_for(self, mesh_shape: Mapping[str, int]) -> Tuple[str, ...]:
+        """Strategy names with any measured row on this mesh — how the
+        selector discovers benchmarked pod trees without enumerating."""
+        mesh_key = 'x'.join(str(v) for v in mesh_shape.values())
+        return tuple(sorted({k[2] for k in self._table if k[0] == mesh_key}))
 
     def swap_us(self, strategy: str, mesh_shape: Mapping[str, int],
                 mesh_axis, elems: float, *,
@@ -187,7 +266,12 @@ class ScheduleTable:
 
     ``kind`` is ``'real'`` or ``'complex'`` (the engine's plan kinds);
     ``dtype`` is the canonical operand dtype name the schedule was
-    measured at (``None`` on rows that predate the tag).
+    measured at (``None`` on rows that predate the tag). A searched
+    pod tree is simply a distinct ``strategy`` string
+    (``'pod_tree:<spec>'``), so tree schedules never collide with the
+    fixed strategies'. Rows measured under a compact wire format carry
+    a ``wire`` tag (``'fp16'``/``'bf16'``); untagged rows are
+    native-wire measurements and only answer native-wire lookups.
 
     Rows may additionally carry a ``load`` tag — an integer load level
     from the adaptive drainer policy (:mod:`repro.serve.policy`), where
@@ -210,14 +294,16 @@ class ScheduleTable:
         # overwrite a GPU host's persisted measurement (lookup() filters
         # by backend, so the clobbered row would just vanish)
         dt, be, ld = r.get('dtype'), r.get('backend'), r.get('load')
+        wr = r.get('wire')
         return (str(r['mesh']), str(r['shape']), str(r['kind']),
                 str(r['strategy']), None if dt is None else str(dt),
                 None if be is None else str(be),
-                None if ld is None else int(ld))
+                None if ld is None else int(ld),
+                None if wr is None else str(wr))
 
     def __init__(self, rows=()):
         # keyed by _row_key:
-        # (mesh, shape, kind, strategy, dtype, backend, load)
+        # (mesh, shape, kind, strategy, dtype, backend, load, wire)
         self._rows: Dict[tuple, dict] = {}
         self.merge(rows)
 
@@ -241,7 +327,8 @@ class ScheduleTable:
     def lookup(self, mesh_shape: Mapping[str, int], shape: Sequence[int],
                kind: str, strategy: str, *, dtype: Optional[str] = None,
                backend: Optional[str] = None,
-               load: Optional[int] = None) -> Optional[dict]:
+               load: Optional[int] = None,
+               wire: Optional[str] = None) -> Optional[dict]:
         """The measured row for this serving config, or None. Rows
         measured on a DIFFERENT jax backend never answer (the
         per-backend dispatch overhead is the whole reason the table
@@ -256,10 +343,15 @@ class ScheduleTable:
         given, the load-tagged rows nearest that level answer (exact
         level first); when no tagged row exists the load-less rows
         answer as a fallback, so a policy restarting on a fresh table
-        still warms from whatever was measured."""
+        still warms from whatever was measured.
+
+        ``wire=None`` (native) answers only from untagged rows; a
+        compact wire format (``wire='fp16'``/``'bf16'``) answers only
+        from rows measured under exactly that format."""
         base = self.make_key(mesh_shape, shape, kind, strategy)
         cands = [r for k, r in self._rows.items()
                  if k[:4] == base
+                 and r.get('wire') == wire
                  and (backend is None or r.get('backend') in (None, backend))]
         tagged = [r for r in cands if r.get('load') is not None]
         if load is None:
@@ -356,6 +448,7 @@ class PlanCost:
     method: str
     precision: wm.Precision
     overlap_chunks: int = 1
+    wire_dtype: str = 'native'
 
     @property
     def serial_cycles(self) -> float:
@@ -469,18 +562,26 @@ def _swap_step(mesh_axis, mesh_shape, elems: float, strategy: str,
                measured: Optional[MeasuredTable] = None, *,
                measured_arrays: int = 2,
                measured_elems: Optional[float] = None,
-               measured_dtype: Optional[str] = None) -> StepCost:
+               measured_dtype: Optional[str] = None,
+               wire_dtype: str = 'native',
+               axis_bw: Optional[Mapping[str, float]] = None) -> StepCost:
     """One swap of ``elems`` local complex elements. The measured path
     prices what actually moves: by default a planar pair — two f32
     arrays of ``elems`` elements each; a single-real-array swap (the
     rank-1 real four-step's first exchange) passes ``measured_arrays=1``
     with its own f32 ``measured_elems``. ``measured_dtype`` picks the
     dtype grid of the measured table (default: the grid matching
-    ``precision`` per :data:`PRECISION_WIRE_DTYPE`)."""
+    ``precision`` per :data:`PRECISION_WIRE_DTYPE`, or the compact-wire
+    grid per :data:`WIRE_MEASURED_DTYPE` when ``wire_dtype`` is set). A
+    compact ``wire_dtype`` prices the analytic wire term at the
+    paper's r=1 FP16 rate — 16-bit components pack a (re,im) pair per
+    32-bit wavelet; ``axis_bw`` weights per-axis link bandwidth."""
     ax = '*'.join(strat.axis_tuple(mesh_axis))
+    wire = '' if wire_dtype == 'native' else f' wire={wire_dtype}'
     if measured is not None:
         if measured_dtype is None:
-            measured_dtype = PRECISION_WIRE_DTYPE.get(precision, 'c64')
+            measured_dtype = WIRE_MEASURED_DTYPE.get(
+                wire_dtype, PRECISION_WIRE_DTYPE.get(precision, 'c64'))
         us = measured.swap_us(strategy, mesh_shape, mesh_axis,
                               elems if measured_elems is None
                               else measured_elems, dtype=measured_dtype)
@@ -488,10 +589,14 @@ def _swap_step(mesh_axis, mesh_shape, elems: float, strategy: str,
             cyc = measured_arrays * us * (wm.CLOCK_HZ / 1e6)
             p = strat.static_group_size(mesh_axis, mesh_shape)
             sc = wm.SwapCost(strategy, p, elems, cyc, 0.0)
-            return StepCost('swap', f'{ax} p={p} ({strategy}, measured)',
+            return StepCost('swap',
+                            f'{ax} p={p} ({strategy}, measured){wire}',
                             cyc, sc)
-    sc = strat.get(strategy).cost(mesh_axis, mesh_shape, elems, precision)
-    return StepCost('swap', f'{ax} p={sc.p} ({sc.strategy})', sc.cycles, sc)
+    eff = 'fp16' if wire_dtype in WIRE_MEASURED_DTYPE else precision
+    sc = strat.get(strategy).cost(mesh_axis, mesh_shape, elems, eff,
+                                  axis_bw=axis_bw)
+    return StepCost('swap', f'{ax} p={sc.p} ({sc.strategy}){wire}',
+                    sc.cycles, sc)
 
 
 def _rfft_step(n_ax: int, axis: int, elems: int, method: str,
@@ -510,7 +615,9 @@ def pencil_plan_cost(shape: Sequence[int], layout: Layout,
                      method: str = 'auto', strategy: str = 'all_to_all',
                      overlap_chunks: int = 1, real: bool = False,
                      padded_spectrum: bool = True,
-                     measured='auto') -> PlanCost:
+                     measured='auto', wire_dtype: str = 'native',
+                     axis_bw: Optional[Mapping[str, float]] = None
+                     ) -> PlanCost:
     """Cost the rank-2/3 pencil schedule (``forward_schedule``) step by
     step. Per-superstep element counts are schedule-dependent: complex
     plans exchange a layout-invariant ``elems`` per swap (the paper's
@@ -543,7 +650,8 @@ def pencil_plan_cost(shape: Sequence[int], layout: Layout,
                                      precision))
         else:
             out.append(_swap_step(step[1], mesh_shape, elems, strategy,
-                                  precision, tbl))
+                                  precision, tbl, wire_dtype=wire_dtype,
+                                  axis_bw=axis_bw))
     if real and not padded_spectrum and final_lay[ra] is not None:
         # facade boundary: all-gather of the truncated axis into memory
         # so the public output can carry the odd n//2 + 1 extent
@@ -553,7 +661,8 @@ def pencil_plan_cost(shape: Sequence[int], layout: Layout,
         out.append(StepCost(
             'gather', f'{ax} p={p} x{elems} (np-layout boundary)',
             wm.swap_cycles_a2a(p, elems, precision)))
-    return PlanCost(tuple(out), strategy, method, precision, overlap_chunks)
+    return PlanCost(tuple(out), strategy, method, precision, overlap_chunks,
+                    wire_dtype)
 
 
 def large1d_plan_cost(n1: int, n2: int, mesh_axes,
@@ -562,7 +671,9 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
                       method: str = 'auto', strategy: str = 'all_to_all',
                       natural_order: bool = True,
                       overlap_chunks: int = 1, real: bool = False,
-                      measured='auto') -> PlanCost:
+                      measured='auto', wire_dtype: str = 'native',
+                      axis_bw: Optional[Mapping[str, float]] = None
+                      ) -> PlanCost:
     """Cost the distributed four-step 1-D schedule: swap, n1-DFT,
     twiddle, swap, n2-DFT (+ the natural-order content transpose).
     ``overlap_chunks`` is the plan's pipelining depth — it only takes
@@ -587,33 +698,37 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
             # cycles analytically, one elems-sized transfer measured
             _swap_step(mesh_axis, mesh_shape, elems / 2.0, strategy,
                        precision, tbl, measured_arrays=1,
-                       measured_elems=float(elems)),
+                       measured_elems=float(elems), wire_dtype=wire_dtype,
+                       axis_bw=axis_bw),
             _rfft_step(n1, 0, elems, method, precision),
             StepCost('twiddle', f'W[j1,k2] x{half}',
                      TWIDDLE_FLOPS_PER_ELEM * half),
             _swap_step(mesh_axis, mesh_shape, half, strategy, precision,
-                       tbl),
+                       tbl, wire_dtype=wire_dtype, axis_bw=axis_bw),
             _fft_step(n2, 1, half, method, precision),
             StepCost('reorder', f'half-plane assembly x{half}',
                      wm.LOCAL_REORDER_CPE * half),
         ]
         return PlanCost(tuple(steps), strategy, method, precision,
-                        overlap_chunks)
+                        overlap_chunks, wire_dtype)
     steps = [
-        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl),
+        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl,
+                   wire_dtype=wire_dtype, axis_bw=axis_bw),
         _fft_step(n1, 0, elems, method, precision),
         StepCost('twiddle', f'W[j1,k2] x{elems}',
                  TWIDDLE_FLOPS_PER_ELEM * elems),
-        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl),
+        _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl,
+                   wire_dtype=wire_dtype, axis_bw=axis_bw),
         _fft_step(n2, 1, elems, method, precision),
     ]
     if natural_order:
         steps.append(_swap_step(mesh_axis, mesh_shape, elems, strategy,
-                                precision, tbl))
+                                precision, tbl, wire_dtype=wire_dtype,
+                                axis_bw=axis_bw))
         steps.append(StepCost('reorder', f'local T x{elems}',
                               wm.LOCAL_REORDER_CPE * elems))
     return PlanCost(tuple(steps), strategy, method, precision,
-                    overlap_chunks)
+                    overlap_chunks, wire_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -692,11 +807,36 @@ class Selection:
         return self.costs[self.strategy]
 
 
+def _tree_candidates(mesh_shape: Mapping[str, int], measured,
+                     pod_trees: Optional[bool],
+                     max_depth: int = POD_TREE_MAX_DEPTH) -> Tuple[str, ...]:
+    """Pod-tree strategy names the selector should consider.
+
+    Default (``pod_trees=None``): only trees with measured rows on this
+    mesh — the benchmark decides what's worth searching, and abstract
+    paper-scale costing (no measurements) keeps its paper-faithful
+    fixed-strategy ranking. ``pod_trees=True`` enumerates the full
+    bounded-depth search analytically; ``False`` disables."""
+    if pod_trees is False:
+        return ()
+    if pod_trees:
+        return enumerate_trees(tuple(mesh_shape), mesh_shape,
+                               max_depth=max_depth)
+    tbl = _resolve_measured(measured)
+    if tbl is None:
+        return ()
+    return tuple(s for s in tbl.strategies_for(mesh_shape)
+                 if s.startswith(strat.POD_TREE_PREFIX))
+
+
 def select(shape: Sequence[int], layout: Layout,
            mesh_shape: Mapping[str, int], *,
            precision: wm.Precision = 'fp32', method: str = 'auto',
            strategies: Optional[Sequence[str]] = None,
-           real: bool = False, measured='auto') -> Selection:
+           real: bool = False, measured='auto',
+           wire_dtype: str = 'native',
+           axis_bw: Optional[Mapping[str, float]] = None,
+           pod_trees: Optional[bool] = None) -> Selection:
     """Pick (strategy, overlap_chunks, method) minimizing predicted
     cycles for the pencil schedule of ``shape``/``layout``.
 
@@ -705,7 +845,11 @@ def select(shape: Sequence[int], layout: Layout,
     registry's per-length 'auto' rule stays in charge at trace time).
     ``real`` prices the half-spectrum schedule; ``measured`` (default
     'auto') lets a measured swap-us table override the analytic swap
-    model where it has data.
+    model where it has data. Beyond the registered names, searched
+    ``'pod_tree:<spec>'`` candidates join per :func:`_tree_candidates`
+    (measured-supported trees by default; ``pod_trees=True`` for the
+    full analytic factorization search). ``wire_dtype``/``axis_bw``
+    price every swap under that wire format / link weighting.
     """
     if method == 'auto':
         # real plans spend the last axis's flops on a length-n/2 pencil
@@ -714,14 +858,21 @@ def select(shape: Sequence[int], layout: Layout,
         picks = {select_method(n, precision) for n in lens}
         method = picks.pop() if len(picks) == 1 else 'auto'
     chunk_opts = feasible_overlap(shape, layout, mesh_shape, real=real)
+    if strategies is None:
+        cand = list(strat.names())
+        cand += [t for t in _tree_candidates(mesh_shape, measured, pod_trees)
+                 if t not in cand]
+    else:
+        cand = list(strategies)
     costs: Dict[str, PlanCost] = {}
-    for name in (strategies or strat.names()):
+    for name in cand:
         best = None
         for c in chunk_opts:
             pc = pencil_plan_cost(shape, layout, mesh_shape,
                                   precision=precision, method=method,
                                   strategy=name, overlap_chunks=c,
-                                  real=real, measured=measured)
+                                  real=real, measured=measured,
+                                  wire_dtype=wire_dtype, axis_bw=axis_bw)
             if best is None or pc.cycles < best.cycles:
                 best = pc
         costs[name] = best
@@ -742,12 +893,25 @@ def format_report(pc: PlanCost, shape: Sequence[int],
     lines = [
         f"cost_report shape={tuple(shape)} mesh={dict(mesh_shape)} "
         f"strategy={pc.strategy} method={pc.method} "
-        f"precision={pc.precision} overlap_chunks={pc.overlap_chunks}",
+        f"precision={pc.precision} overlap_chunks={pc.overlap_chunks} "
+        f"wire_dtype={pc.wire_dtype}",
         f"{'step':>4}  {'kind':<8} {'detail':<34} {'cycles':>14}",
     ]
+    if pc.strategy.startswith(strat.POD_TREE_PREFIX):
+        tree = strat.parse_tree_spec(pc.strategy[len(strat.POD_TREE_PREFIX):])
+        fac = '  '.join(
+            f"{a}: {mesh_shape.get(a, '?')} -> "
+            + 'x'.join(str(f) for f in fs) for a, fs in sorted(tree.items()))
+        lines.insert(1, f"      pod tree: {fac}")
+    native_comp = 8 if PRECISION_WIRE_DTYPE.get(pc.precision) == 'c128' else 4
+    comp_bytes = strat.wire_elem_bytes(pc.wire_dtype, native_comp)
     paired = set(pc.overlapped_steps())
     for i, s in enumerate(pc.steps):
         mark = '  ~ovl' if (pc.overlap_chunks > 1 and i in paired) else ''
+        if s.kind == 'swap' and s.swap is not None:
+            # planar complex pair: 2 component arrays on the wire
+            wb = 2 * s.swap.elems * comp_bytes
+            mark = f'  {wb / 1024.0:>8.1f} KiB/dev wire' + mark
         lines.append(f"{i:>4}  {s.kind:<8} {s.detail:<34} "
                      f"{s.cycles:>14.0f}{mark}")
     lines.append(f"{'':>4}  {'total':<8} {'(serial)':<34} "

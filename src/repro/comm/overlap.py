@@ -180,12 +180,22 @@ def pipelined_stream(fn: Callable, stream: Iterable, *,
 
 def overlapped_fft_swap(re: jnp.ndarray, im: jnp.ndarray, *,
                         fft_fn: Callable, swap_fn: Callable,
-                        chunk_axis: int, n_chunks: int
+                        chunk_axis: int, n_chunks: int,
+                        wire_dtype: str = 'native'
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """The pencil superstep pair — ``fft`` then ``swap`` — pipelined
     over ``n_chunks`` slices of ``chunk_axis``. ``fft_fn(re, im)`` and
-    ``swap_fn(x)`` operate on local chunks."""
+    ``swap_fn(x)`` operate on local chunks. A compact ``wire_dtype``
+    casts each chunk to the wire format around its swap independently
+    (the chunk's compute stays full precision, and chunk i+1's cast
+    cannot stall behind chunk i's collective)."""
+    from repro.comm import strategies as _strat
+
     def stage(cr, ci):
         cr, ci = fft_fn(cr, ci)
-        return swap_fn(cr), swap_fn(ci)
+        out = []
+        for c in (cr, ci):
+            w, restore = _strat.wire_cast(c, wire_dtype)
+            out.append(_strat.wire_restore(swap_fn(w), restore))
+        return tuple(out)
     return pipelined(n_chunks, chunk_axis, stage, re, im)

@@ -22,6 +22,22 @@ pluggable choice, mirroring the local-pencil method registry
   Pays two small-group exchanges plus a local transpose instead of one
   p-wide exchange — it wins when the per-peer reconfiguration/latency
   term dominates (many peers, small blocks).
+* ``'pod_tree:<spec>'`` — the generalization of ``'hierarchical'`` to
+  an *arbitrary factorization tree* (cf. the multi-phase mesh
+  collectives of arXiv 2404.15888): ``spec`` lists per-axis factor
+  sequences (``'pod_tree:x.4*y.2*y.2'`` factors a 4x4 group as
+  4 -> 2 x 2 along y), and the swap executes one grouped sub-exchange
+  per factor — ``lax.all_to_all`` when a factor covers a whole named
+  axis, strided ``lax.ppermute`` rounds for proper sub-factors — plus
+  one local reorder. ``comm='auto'`` searches these trees via
+  :func:`repro.comm.cost.enumerate_trees`.
+
+Orthogonally, every strategy can carry a compact **wire format**
+(:func:`wire_cast` / :func:`swap_axes_wire`): operands are cast to
+fp16/bf16 immediately before the swap collective and restored right
+after, so the wire moves half the bytes while all compute stays in the
+request precision (the paper's FP16-vs-FP32 study, applied to the wire
+only).
 
 Every strategy implements the same :class:`Strategy` interface and is
 **bit-exact**: for any operand the three produce identical results
@@ -35,7 +51,8 @@ object is threaded through.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import functools
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,11 +126,14 @@ class Strategy:
         return y, planlib.swap(layout, mesh_axis, mem_pos)
 
     def cost(self, mesh_axis: MeshAxis, mesh_shape, elems: float,
-             precision: wm.Precision) -> wm.SwapCost:
+             precision: wm.Precision, *,
+             axis_bw: Optional[Mapping[str, float]] = None) -> wm.SwapCost:
         """Predicted cycles for one swap of ``elems`` local complex
         elements over ``mesh_axis`` of a mesh with extents
         ``mesh_shape`` (a name->size mapping; no device objects
-        needed, so paper-scale meshes can be costed abstractly)."""
+        needed, so paper-scale meshes can be costed abstractly).
+        ``axis_bw`` optionally maps axis name -> relative bandwidth
+        weight (>= 1 scales the wire term; asymmetric topologies)."""
         raise NotImplementedError
 
 
@@ -133,19 +153,25 @@ def names() -> Tuple[str, ...]:
 
 
 def get(name: str) -> Strategy:
+    if name.startswith(POD_TREE_PREFIX):
+        return _pod_tree_strategy(name)
     try:
         return _REGISTRY[name]
     except KeyError:
         raise ValueError(
-            f"unknown comm strategy {name!r}; known: {names() + ('auto',)}"
+            f"unknown comm strategy {name!r}; known: "
+            f"{names() + ('auto', POD_TREE_PREFIX + '<spec>')}"
         ) from None
 
 
 def validate(name: str) -> str:
-    """Check ``name`` is 'auto' or a registered strategy; returns it."""
-    if name != 'auto':
-        get(name)
-    return name
+    """Check ``name`` is 'auto', a registered strategy, or a
+    well-formed ``'pod_tree:<spec>'`` name; returns the canonical
+    spelling (pod-tree specs are normalized to sorted axis order so
+    equal trees share one cache/measured-table key)."""
+    if name == 'auto':
+        return name
+    return get(name).name
 
 
 def resolve(name: str) -> Strategy:
@@ -164,6 +190,118 @@ def static_group_size(mesh_axis: MeshAxis, mesh_shape) -> int:
     return p
 
 
+def _group_bw(mesh_axis: MeshAxis,
+              axis_bw: Optional[Mapping[str, float]]) -> float:
+    """Bandwidth weight of a (possibly tuple) axis group: the exchange
+    is bottlenecked by its slowest participating link class."""
+    axes = axis_tuple(mesh_axis)
+    if not axis_bw or not axes:
+        return 1.0
+    return max(float(axis_bw.get(a, 1.0)) for a in axes)
+
+
+def _scale_wire(cost: wm.SwapCost, bw: float) -> wm.SwapCost:
+    if bw == 1.0:
+        return cost
+    return wm.SwapCost(cost.strategy, cost.p, cost.elems,
+                       cost.wire_cycles * bw, cost.fixed_cycles)
+
+
+# ---------------------------------------------------------------------------
+# Wire formats: cast-to-compact around the collective only
+# ---------------------------------------------------------------------------
+
+#: valid ``wire_dtype`` values. 'native' moves request-precision bytes
+#: (bit-identical, the default); 'fp16'/'bf16' cast each planar float
+#: component to 16 bits immediately before the swap collective and
+#: restore after, halving wire bytes (fp32 request) at a precision cost.
+WIRE_DTYPES: Tuple[str, ...] = ('native', 'fp16', 'bf16')
+
+_WIRE_JNP = {'fp16': jnp.float16, 'bf16': jnp.bfloat16}
+
+
+def validate_wire_dtype(wire_dtype: str) -> str:
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"unknown wire_dtype {wire_dtype!r}; known: {WIRE_DTYPES}")
+    return wire_dtype
+
+
+def wire_elem_bytes(wire_dtype: str, native_bytes: int) -> int:
+    """Bytes one (planar float) element occupies on the wire."""
+    if wire_dtype == 'native':
+        return native_bytes
+    return min(native_bytes, 2)
+
+
+def wire_cast(x: jax.Array, wire_dtype: str):
+    """Cast a planar float operand to the compact wire format. Returns
+    ``(wire_operand, restore_dtype)``; ``restore_dtype`` is None when no
+    cast happened (native wire, already-narrow or non-float operand).
+    The optimization barrier pins the cast against the collective so
+    XLA cannot hoist the upcast across it and silently move wide
+    bytes."""
+    if wire_dtype == 'native':
+        return x, None
+    wd = jnp.dtype(_WIRE_JNP[validate_wire_dtype(wire_dtype)])
+    if (not jnp.issubdtype(x.dtype, jnp.floating)
+            or jnp.dtype(x.dtype).itemsize <= wd.itemsize):
+        # already at (or below) wire width — e.g. a bf16 block-state
+        # operand under an fp16 wire: recasting moves no fewer bytes
+        return x, None
+    return lax.optimization_barrier(x.astype(wd)), x.dtype
+
+
+def wire_restore(x: jax.Array, restore_dtype) -> jax.Array:
+    """Undo :func:`wire_cast` after the collective."""
+    if restore_dtype is None:
+        return x
+    return lax.optimization_barrier(x).astype(restore_dtype)
+
+
+def swap_axes_wire(strategy: 'Strategy', x: jax.Array, mesh_axis: MeshAxis,
+                   *, shard_pos: int, mem_pos: int,
+                   wire_dtype: str = 'native') -> jax.Array:
+    """One ownership swap with the operand cast to the compact wire
+    format around the collective only — all upstream/downstream compute
+    sees the original dtype."""
+    w, restore = wire_cast(x, wire_dtype)
+    y = strategy.swap_axes(w, mesh_axis, shard_pos=shard_pos,
+                           mem_pos=mem_pos)
+    return wire_restore(y, restore)
+
+
+# ---------------------------------------------------------------------------
+# Pod-tree specs: 'pod_tree:x.4*y.2*y.2' <-> {'x': (4,), 'y': (2, 2)}
+# ---------------------------------------------------------------------------
+
+POD_TREE_PREFIX = 'pod_tree:'
+
+Tree = Dict[str, Tuple[int, ...]]
+
+
+def parse_tree_spec(spec: str) -> Tree:
+    """Parse a pod-tree spec: '*'-joined ``<axis>.<factor>`` levels,
+    factors >= 2, per-axis order = digit significance (most significant
+    first)."""
+    tree: Dict[str, list] = {}
+    if not spec:
+        raise ValueError("empty pod_tree spec")
+    for part in spec.split('*'):
+        axis, sep, fac = part.rpartition('.')
+        if not sep or not axis or not fac.isdigit() or int(fac) < 2:
+            raise ValueError(
+                f"bad pod_tree level {part!r} in spec {spec!r}; expected "
+                f"'<axis>.<factor>' with an integer factor >= 2")
+        tree.setdefault(axis, []).append(int(fac))
+    return {a: tuple(fs) for a, fs in tree.items()}
+
+
+def format_tree_spec(tree: Mapping[str, Tuple[int, ...]]) -> str:
+    """Canonical spec string (axes sorted by name)."""
+    return '*'.join(f'{a}.{f}' for a in sorted(tree) for f in tree[a])
+
+
 # ---------------------------------------------------------------------------
 # 'all_to_all': the paper's broadcast-and-filter transpose, TPU form
 # ---------------------------------------------------------------------------
@@ -177,9 +315,11 @@ class AllToAllStrategy(Strategy):
         return lax.all_to_all(x, mesh_axis, split_axis=mem_pos,
                               concat_axis=shard_pos, tiled=True)
 
-    def cost(self, mesh_axis, mesh_shape, elems, precision):
+    def cost(self, mesh_axis, mesh_shape, elems, precision, *, axis_bw=None):
         p = static_group_size(mesh_axis, mesh_shape)
-        return wm.swap_cost_a2a(p, elems, precision, strategy=self.name)
+        return _scale_wire(
+            wm.swap_cost_a2a(p, elems, precision, strategy=self.name),
+            _group_bw(mesh_axis, axis_bw))
 
 
 # ---------------------------------------------------------------------------
@@ -270,43 +410,166 @@ class PpermuteStrategy(Strategy):
             exchange=lambda a, ax, sp, mp: self.swap_axes(
                 a, ax, shard_pos=sp, mem_pos=mp))
 
-    def cost(self, mesh_axis, mesh_shape, elems, precision):
+    def cost(self, mesh_axis, mesh_shape, elems, precision, *, axis_bw=None):
         p = static_group_size(mesh_axis, mesh_shape)
-        return wm.swap_cost_ring(p, elems, precision, strategy=self.name)
+        return _scale_wire(
+            wm.swap_cost_ring(p, elems, precision, strategy=self.name),
+            _group_bw(mesh_axis, axis_bw))
 
 
 # ---------------------------------------------------------------------------
-# 'hierarchical': two-phase pod-split exchange over a tuple axis group
+# 'pod_tree:<spec>' / 'hierarchical': phased pod-split exchanges
 # ---------------------------------------------------------------------------
 
-class HierarchicalStrategy(Strategy):
+def _digit_ring(x, axis_name: str, factor: int, stride: int,
+                shard_pos: int, mem_pos: int):
+    """One sub-factor exchange phase: a full ownership swap within the
+    ``factor``-member *digit subgroup* of ``axis_name`` — the devices
+    that agree on every axis coordinate except the digit of place value
+    ``stride`` (axis index i has digit ``(i // stride) % factor``).
+
+    ``lax.all_to_all`` cannot address a strict subgroup of a named
+    axis, so this is built as factor-1 pairwise ``lax.ppermute`` rounds
+    (round s shifts blocks s digits ahead *within* each subgroup, i.e.
+    a strided permutation of the full axis), matching the tiled
+    all_to_all's semantics over the subgroup: received blocks land in
+    source-digit order along ``shard_pos``.
+    """
+    p = lax.psum(1, axis_name)
+    if factor <= 1:
+        return x
+    if x.shape[mem_pos] % factor:
+        raise ValueError(
+            f"pod-tree swap: mem axis size {x.shape[mem_pos]} not divisible "
+            f"by factor {factor} of axis {axis_name!r}")
+    idx = lax.axis_index(axis_name)
+    digit = (idx // stride) % factor
+    blk = x.shape[mem_pos] // factor
+    seg = x.shape[shard_pos]
+    out_shape = list(x.shape)
+    out_shape[mem_pos] = blk
+    out_shape[shard_pos] = seg * factor
+    own = lax.dynamic_slice_in_dim(x, digit * blk, blk, axis=mem_pos)
+    out = jnp.zeros(tuple(out_shape), x.dtype)
+    out = lax.dynamic_update_slice_in_dim(out, own, digit * seg,
+                                          axis=shard_pos)
+    for s in range(1, factor):
+        dst_digit = (digit + s) % factor
+        send = lax.dynamic_slice_in_dim(x, dst_digit * blk, blk,
+                                        axis=mem_pos)
+        perm = []
+        for i in range(p):
+            di = (i // stride) % factor
+            perm.append((i, i + (((di + s) % factor) - di) * stride))
+        recv = lax.ppermute(send, axis_name, perm)
+        src_digit = (digit - s) % factor
+        out = lax.dynamic_update_slice_in_dim(out, recv, src_digit * seg,
+                                              axis=shard_pos)
+    return out
+
+
+class PodTreeStrategy(Strategy):
+    """Phased pod-tree exchange over an arbitrary factorization.
+
+    ``tree`` maps axis name -> factor sequence (most-significant digit
+    first); axes of the swap group it does not name get one full-extent
+    level. The swap runs one grouped sub-exchange per level in flat
+    digit-significance order (mesh-axis tuple order, then per-axis
+    factors), then a single local reorder restores row-major group
+    order — bit-identical to the one-shot all_to_all, because every
+    phase is pure data movement. ``tree=None`` is the classic
+    'hierarchical' two-phase pod split (one level per named axis).
+    """
+
+    def __init__(self, tree: Optional[Mapping[str, Tuple[int, ...]]] = None):
+        self.tree: Optional[Tree] = (
+            None if tree is None
+            else {a: tuple(int(f) for f in fs) for a, fs in tree.items()})
+        if self.tree is not None:
+            spec = format_tree_spec(self.tree)
+            self.name = POD_TREE_PREFIX + spec
+            self.description = (
+                f'phased pod-tree exchange over factorization {spec} '
+                f'(grouped sub-swaps + one local reorder)')
+
+    def _levels(self, mesh_axis, extent_of):
+        """Flatten the tree into ``(axis, factor, stride)`` phases in
+        digit-significance order; ``stride`` is the digit's place value
+        within its axis. Tree axes not in this swap group are ignored —
+        the tree is a per-axis factorization map, and one plan applies
+        its single strategy string to swaps over different groups."""
+        axes = axis_tuple(mesh_axis)
+        levels = []
+        for a in axes:
+            extent = extent_of(a)
+            factors = ((self.tree or {}).get(a) or (extent,))
+            prod = 1
+            for f in factors:
+                prod *= f
+            if prod != extent:
+                raise ValueError(
+                    f"pod_tree factors {factors} for axis {a!r} multiply "
+                    f"to {prod}, not its extent {extent}")
+            stride = extent
+            for f in factors:
+                stride //= f
+                levels.append((a, int(f), stride))
+        return levels
+
+    def swap_axes(self, x, mesh_axis, *, shard_pos, mem_pos):
+        levels = [lv for lv in self._levels(
+            mesh_axis, lambda a: lax.psum(1, a)) if lv[1] > 1]
+        if not levels:
+            return x           # extent-1 group: nothing moves
+        seg = x.shape[shard_pos]
+        for a, f, stride in levels:
+            if f == lax.psum(1, a):
+                x = lax.all_to_all(x, a, split_axis=mem_pos,
+                                   concat_axis=shard_pos, tiled=True)
+            else:
+                x = _digit_ring(x, a, f, stride, shard_pos, mem_pos)
+        if len(levels) == 1:
+            return x
+        # received shard order is (last phase, ..., first phase, seg);
+        # reverse the digits to restore flat row-major group order
+        shp = x.shape
+        fs = tuple(f for _, f, _ in levels)
+        k = len(fs)
+        x = x.reshape(shp[:shard_pos] + tuple(reversed(fs)) + (seg,)
+                      + shp[shard_pos + 1:])
+        perm = (tuple(range(shard_pos))
+                + tuple(shard_pos + k - 1 - i for i in range(k))
+                + tuple(range(shard_pos + k, x.ndim)))
+        return jnp.transpose(x, perm).reshape(shp)
+
+    def cost(self, mesh_axis, mesh_shape, elems, precision, *, axis_bw=None):
+        wm_levels = []
+        for a, f, stride in self._levels(mesh_axis,
+                                         lambda ax: mesh_shape[ax]):
+            kind = 'a2a' if f == mesh_shape[a] else 'ring'
+            bw = 1.0 if not axis_bw else float(axis_bw.get(a, 1.0))
+            if kind == 'ring':
+                # a stride-v digit ring's messages travel v x the links
+                # (v interleaved subgroups share the physical row), so
+                # each element occupies v x the bottleneck bandwidth
+                bw *= max(int(stride), 1)
+            wm_levels.append((f, kind, bw))
+        return wm.swap_cost_tree(tuple(wm_levels), elems, precision,
+                                 strategy=self.name)
+
+
+@functools.lru_cache(maxsize=256)
+def _pod_tree_strategy(name: str) -> Strategy:
+    return PodTreeStrategy(parse_tree_spec(name[len(POD_TREE_PREFIX):]))
+
+
+class HierarchicalStrategy(PodTreeStrategy):
     name = 'hierarchical'
     description = ('two-phase pod-split exchange (outer-axis all_to_all, '
                    'inner-axis all_to_all, local reorder)')
 
-    def swap_axes(self, x, mesh_axis, *, shard_pos, mem_pos):
-        axes = axis_tuple(mesh_axis)
-        if len(axes) < 2:
-            # no pod factorization available on a single named axis
-            return _A2A.swap_axes(x, mesh_axis, shard_pos=shard_pos,
-                                  mem_pos=mem_pos)
-        return two_phase_swap(
-            x, axes, shard_pos=shard_pos, mem_pos=mem_pos,
-            exchange=lambda a, ax, sp, mp: lax.all_to_all(
-                a, ax, split_axis=mp, concat_axis=sp, tiled=True))
-
-    def cost(self, mesh_axis, mesh_shape, elems, precision):
-        axes = axis_tuple(mesh_axis)
-        if len(axes) < 2:
-            # degenerates to the plain exchange
-            return wm.swap_cost_a2a(
-                static_group_size(mesh_axis, mesh_shape), elems, precision,
-                strategy=self.name)
-        p_out = static_group_size(axes[0], mesh_shape)
-        p_in = static_group_size(axes[1] if len(axes) == 2 else axes[1:],
-                                 mesh_shape)
-        return wm.swap_cost_hierarchical(p_out, p_in, elems, precision,
-                                         strategy=self.name)
+    def __init__(self):
+        super().__init__(None)
 
 
 _A2A = register(AllToAllStrategy())

@@ -84,12 +84,17 @@ class PencilPlan:
     use_kernel  dispatch local pencils to the Pallas kernels
     compute_dtype  matmul operand dtype for the four-step (bf16 study)
     comm        redistribution strategy from the repro.comm registry
-                ('all_to_all'|'ppermute'|'hierarchical')
+                ('all_to_all'|'ppermute'|'hierarchical'|
+                'pod_tree:<spec>')
     real        real-input (rfft) plan: the LAST axis is transformed
                 real-to-complex in the first superstep, and every later
                 superstep/swap sees its conjugate-symmetric half
                 spectrum (n -> n//2 + 1 bins, padded for even
                 sharding) — half the wire bytes and pencil flops.
+    wire_dtype  swap-collective wire format ('native'|'fp16'|'bf16'):
+                compact formats cast planar components to 16 bits
+                immediately before each swap and restore after — half
+                the wire bytes, all compute in request precision.
     """
     shape: Tuple[int, ...]
     mesh: Mesh
@@ -99,6 +104,7 @@ class PencilPlan:
     compute_dtype: Optional[object] = None
     comm: str = 'all_to_all'
     real: bool = False
+    wire_dtype: str = 'native'
 
     @property
     def real_axis(self) -> Optional[int]:
@@ -121,6 +127,11 @@ class PencilPlan:
         return tuple(s // self.axis_size(o) for s, o in zip(self.shape, lay))
 
     def validate(self) -> None:
+        # mirrors strategies.WIRE_DTYPES (comm imports this module)
+        if self.wire_dtype not in ('native', 'fp16', 'bf16'):
+            raise ValueError(
+                f"unknown wire_dtype {self.wire_dtype!r}; known: "
+                f"('native', 'fp16', 'bf16')")
         for s, o in zip(self.shape, self.layout):
             p = self.axis_size(o)
             if s % p:

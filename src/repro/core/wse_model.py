@@ -170,14 +170,43 @@ def swap_cycles_ring(p: int, elems: float, precision: Precision) -> float:
     return (p * p / 4.0) * (elems / p) * r + RING_ROUND_OVERHEAD * (p - 1)
 
 
+def swap_cycles_tree(levels, elems: float, precision: Precision) -> float:
+    """Multi-phase pod-tree exchange (generalizes the two-phase
+    pod-split): ``levels`` is a sequence of ``(factor, kind, bw)``
+    phases — the factorization tree flattened in digit-significance
+    order. Each phase exchanges ``elems`` local complex elements over a
+    group of ``factor`` devices; ``kind`` is ``'a2a'`` for a full-mesh-
+    axis phase (broadcast-and-filter, router-reconfig fixed cost) or
+    ``'ring'`` for a sub-factor phase (pairwise ppermute rounds,
+    per-round launch cost). ``bw`` is the per-level relative bandwidth
+    weight (>= 1 multiplies the wire term — asymmetric topologies, e.g.
+    slow wafer-to-wafer vertical links, make some levels' bytes cost
+    more). One local reorder pass restores flat group order whenever
+    more than one phase ran."""
+    total = 0.0
+    n_levels = 0
+    for f, kind, bw in levels:
+        if f <= 1:
+            continue
+        n_levels += 1
+        base = (swap_cycles_ring(f, elems, precision) if kind == 'ring'
+                else swap_cycles_a2a(f, elems, precision))
+        fixed = (RING_ROUND_OVERHEAD if kind == 'ring'
+                 else ROUTER_RECONFIG) * (f - 1)
+        total += (base - fixed) * float(bw) + fixed
+    if n_levels > 1:
+        total += LOCAL_REORDER_CPE * elems
+    return total
+
+
 def swap_cycles_hierarchical(p_outer: int, p_inner: int, elems: float,
                              precision: Precision) -> float:
     """Two-phase pod-split exchange: a p_outer-group exchange, a
     p_inner-group exchange, and one local reorder pass. Fixed terms
-    scale with p_outer + p_inner instead of p_outer * p_inner."""
-    return (swap_cycles_a2a(p_outer, elems, precision)
-            + swap_cycles_a2a(p_inner, elems, precision)
-            + LOCAL_REORDER_CPE * elems)
+    scale with p_outer + p_inner instead of p_outer * p_inner. (The
+    two-level instance of :func:`swap_cycles_tree`.)"""
+    return swap_cycles_tree(((p_outer, 'a2a', 1.0), (p_inner, 'a2a', 1.0)),
+                            elems, precision)
 
 
 def swap_cost_a2a(p: int, elems: float, precision: Precision, *,
@@ -194,13 +223,31 @@ def swap_cost_ring(p: int, elems: float, precision: Precision, *,
     return SwapCost(strategy, p, elems, total - fixed, fixed)
 
 
+def swap_cost_tree(levels, elems: float, precision: Precision, *,
+                   strategy: str = 'pod_tree') -> SwapCost:
+    """SwapCost split for a pod-tree exchange (see
+    :func:`swap_cycles_tree` for the ``levels`` format)."""
+    total = swap_cycles_tree(levels, elems, precision)
+    p = 1
+    fixed = 0.0
+    n_levels = 0
+    for f, kind, _bw in levels:
+        if f <= 1:
+            continue
+        n_levels += 1
+        p *= f
+        fixed += (RING_ROUND_OVERHEAD if kind == 'ring'
+                  else ROUTER_RECONFIG) * (f - 1)
+    if n_levels > 1:
+        fixed += LOCAL_REORDER_CPE * elems
+    return SwapCost(strategy, p, elems, total - fixed, fixed)
+
+
 def swap_cost_hierarchical(p_outer: int, p_inner: int, elems: float,
                            precision: Precision, *,
                            strategy: str = 'hierarchical') -> SwapCost:
-    total = swap_cycles_hierarchical(p_outer, p_inner, elems, precision)
-    fixed = (ROUTER_RECONFIG * ((p_outer - 1) + (p_inner - 1))
-             + LOCAL_REORDER_CPE * elems)
-    return SwapCost(strategy, p_outer * p_inner, elems, total - fixed, fixed)
+    return swap_cost_tree(((p_outer, 'a2a', 1.0), (p_inner, 'a2a', 1.0)),
+                          elems, precision, strategy=strategy)
 
 
 # ---------------------------------------------------------------------------

@@ -46,6 +46,7 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
          mesh_axes: Optional[Tuple[str, ...]] = None,
          layout: Optional[Layout] = None,
          comm: str = 'auto', overlap_chunks: Optional[int] = None,
+         wire_dtype: str = 'native',
          restore_layout: bool = False,
          batch_spec: Optional[str] = None,
          real: bool = False, padded_spectrum: bool = False,
@@ -68,16 +69,26 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
       layout: explicit initial ownership per array axis (ranks 2/3
         only); overrides ``mesh_axes``.
       comm: redistribution strategy from the :mod:`repro.comm` registry
-        ('auto' | 'all_to_all' | 'ppermute' | 'hierarchical').
+        ('auto' | 'all_to_all' | 'ppermute' | 'hierarchical' |
+        ``'pod_tree:<spec>'``, e.g. ``'pod_tree:x.4*y.2*y.2'``).
         ``'auto'`` prices the whole schedule with the paper's cycle
-        model (:mod:`repro.comm.cost`, fp32 wire assumption) and picks
-        the strategy, the pipelining depth, and — when ``method`` is
+        model (:mod:`repro.comm.cost`, under the plan's ``wire_dtype``)
+        and picks the strategy — including any pod trees benchmarked on
+        this mesh — the pipelining depth, and — when ``method`` is
         also 'auto' — the local pencil algorithm. All strategies are
         bit-exact equivalent; only the schedule on the wire changes.
       overlap_chunks: pipeline local compute with the transpose
         collectives (beyond-paper; rank 1 overlaps over a leading
         batch axis). Default: cost-model choice under ``comm='auto'``,
         else 1.
+      wire_dtype: wire format of the swap collectives
+        ('native' | 'fp16' | 'bf16'). Compact formats cast each planar
+        component to 16 bits immediately before every redistribution
+        and restore the request dtype right after — half the wire
+        bytes; ALL compute (twiddles, pencil FFTs, Hermitian combines)
+        stays in the request precision. ``'native'`` is bit-identical
+        to not setting the knob. ``comm='auto'`` prices the schedule
+        under the chosen wire format.
       restore_layout: make forward/inverse consume AND produce the input
         sharding instead of the rotated one (extra transposes).
       batch_spec: mesh axis name a single leading batch dimension is
@@ -129,7 +140,10 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         raise ValueError("padded_spectrum applies to real plans of "
                          "rank 2/3 only")
     methods.validate(method)
-    commlib.validate(comm)
+    # canonical spelling: pod-tree specs normalize (sorted axes) so
+    # equal trees share one plan-cache / measured-table key
+    comm = commlib.validate(comm)
+    commlib.strategies.validate_wire_dtype(wire_dtype)
     if batch_spec is not None and batch_spec not in mesh.axis_names:
         raise ValueError(f"batch_spec {batch_spec!r} not a mesh axis "
                          f"of {mesh.axis_names}")
@@ -152,10 +166,10 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
                 f"devices of mesh axes {axes} must divide both factors")
         strategy, oc, meth = _resolve_comm_1d(
             (n1, n2), axes, dict(mesh.shape), comm, overlap_chunks, method,
-            real)
+            real, wire_dtype)
         return FFT(shape=shape, mesh=mesh, method=meth,
                    compute_dtype=compute_dtype, use_kernel=use_kernel,
-                   comm=strategy, overlap_chunks=oc,
+                   comm=strategy, overlap_chunks=oc, wire_dtype=wire_dtype,
                    restore_layout=restore_layout, real=real,
                    batch_spec=batch_spec, donate=donate,
                    axes1d=axes, factors=(n1, n2))
@@ -182,14 +196,15 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
                         f"rank-3 FFT needs two mesh axes, mesh has {cand}")
             layout = (row, col, None)
     strategy, oc, meth = _resolve_comm(
-        shape, layout, dict(mesh.shape), comm, overlap_chunks, method, real)
+        shape, layout, dict(mesh.shape), comm, overlap_chunks, method, real,
+        wire_dtype)
     pplan = PencilPlan(shape=shape, mesh=mesh, layout=layout, method=meth,
                        use_kernel=use_kernel, compute_dtype=compute_dtype,
-                       comm=strategy, real=real)
+                       comm=strategy, real=real, wire_dtype=wire_dtype)
     pplan.validate()
     return FFT(shape=shape, mesh=mesh, method=meth,
                compute_dtype=compute_dtype, use_kernel=use_kernel,
-               comm=strategy, overlap_chunks=oc,
+               comm=strategy, overlap_chunks=oc, wire_dtype=wire_dtype,
                restore_layout=restore_layout, real=real,
                padded_spectrum=padded_spectrum,
                batch_spec=batch_spec, donate=donate, pplan=pplan)
@@ -204,22 +219,24 @@ def rplan(shape: Sequence[int], mesh: Mesh, **kw) -> 'FFT':
 
 
 def _resolve_comm(shape, layout, mesh_shape, comm, overlap_chunks, method,
-                  real=False):
+                  real=False, wire_dtype='native'):
     """Cost-model resolution of (strategy, overlap_chunks, method) for
     the pencil ranks. Explicit user choices always win; the selector
     runs only under comm='auto' (an explicit strategy keeps the
-    documented overlap_chunks default of 1)."""
+    documented overlap_chunks default of 1). The selector prices the
+    schedule under the plan's wire format and considers any pod trees
+    the measured table has benchmarked on this mesh."""
     if comm != 'auto':
         return comm, 1 if overlap_chunks is None else overlap_chunks, method
     sel = commlib.cost.select(shape, layout, mesh_shape, method=method,
-                              real=real)
+                              real=real, wire_dtype=wire_dtype)
     oc = overlap_chunks if overlap_chunks is not None else sel.overlap_chunks
     meth = sel.method if method == 'auto' else method
     return sel.strategy, oc, meth
 
 
 def _resolve_comm_1d(factors, axes, mesh_shape, comm, overlap_chunks, method,
-                     real=False):
+                     real=False, wire_dtype='native'):
     """Rank-1 resolution: strategy by the four-step schedule's cost;
     overlap stays 1 unless the caller asks (it needs a batch axis only
     present at execution time); method per the two factor lengths."""
@@ -227,11 +244,14 @@ def _resolve_comm_1d(factors, axes, mesh_shape, comm, overlap_chunks, method,
     mesh_axes = tuple(axes) if len(axes) > 1 else axes[0]
     if comm == 'auto':
         n1, n2 = factors
+        cand = commlib.names() + tuple(
+            t for t in commlib.cost._tree_candidates(mesh_shape, 'auto', None)
+            if t not in commlib.names())
         costs = {
             name: commlib.cost.large1d_plan_cost(
                 n1, n2, mesh_axes, mesh_shape, method=method, strategy=name,
-                real=real)
-            for name in commlib.names()}
+                real=real, wire_dtype=wire_dtype)
+            for name in cand}
         comm = min(costs, key=lambda k: costs[k].cycles)
         if method == 'auto':
             lens = (max(factors[0] // 2, 1), factors[1]) if real else factors
@@ -267,7 +287,7 @@ class FFT:
     def __init__(self, *, shape, mesh, method, compute_dtype, use_kernel,
                  comm, overlap_chunks, restore_layout, batch_spec,
                  real: bool = False, padded_spectrum: bool = False,
-                 donate: bool = True,
+                 donate: bool = True, wire_dtype: str = 'native',
                  pplan: Optional[PencilPlan] = None,
                  axes1d: Optional[Tuple[str, ...]] = None,
                  factors: Optional[Tuple[int, int]] = None):
@@ -279,6 +299,7 @@ class FFT:
         self.use_kernel = use_kernel
         self.comm = comm
         self.overlap_chunks = overlap_chunks
+        self.wire_dtype = wire_dtype
         self.restore_layout = restore_layout
         self.batch_spec = batch_spec
         self.real = real
@@ -306,6 +327,7 @@ class FFT:
         kw = dict(method=self.method, compute_dtype=self.compute_dtype,
                   use_kernel=self.use_kernel, comm=self.comm,
                   overlap_chunks=self.overlap_chunks,
+                  wire_dtype=self.wire_dtype,
                   restore_layout=self.restore_layout,
                   batch_spec=self.batch_spec, real=self.real,
                   padded_spectrum=self.padded_spectrum, donate=self.donate)
@@ -453,7 +475,8 @@ class FFT:
                     method=self.method, use_kernel=self.use_kernel,
                     compute_dtype=self.compute_dtype, batch=batch,
                     batch_spec=self.batch_spec, comm=self.comm,
-                    overlap_chunks=self.overlap_chunks)
+                    overlap_chunks=self.overlap_chunks,
+                    wire_dtype=self.wire_dtype)
                 self._raw_cache[key] = fn
                 return fn
             f1, f2 = ((n2, n1) if inverse else (n1, n2))
@@ -462,7 +485,8 @@ class FFT:
                 natural_order=True, method=self.method,
                 use_kernel=self.use_kernel, compute_dtype=self.compute_dtype,
                 batch=batch, batch_spec=self.batch_spec, comm=self.comm,
-                overlap_chunks=self.overlap_chunks)
+                overlap_chunks=self.overlap_chunks,
+                wire_dtype=self.wire_dtype)
         else:
             fn, _, _ = pencil.make_fft(
                 self._pplan, inverse=inverse,
@@ -674,13 +698,13 @@ class FFT:
                 n1, n2, tuple(ax) if len(ax) > 1 else ax[0], mesh_shape,
                 precision=precision, method=self.method, strategy=self.comm,
                 overlap_chunks=self.overlap_chunks, real=self.real,
-                measured=measured)
+                measured=measured, wire_dtype=self.wire_dtype)
         return commlib.cost.pencil_plan_cost(
             self.shape, self._pplan.layout, mesh_shape, precision=precision,
             method=self.method, strategy=self.comm,
             overlap_chunks=self.overlap_chunks, real=self.real,
             padded_spectrum=self.padded_spectrum or not self.real,
-            measured=measured)
+            measured=measured, wire_dtype=self.wire_dtype)
 
     def cost_report(self, precision: str = 'fp32') -> str:
         """Predicted cycles per superstep/transpose, formatted next to
@@ -695,5 +719,6 @@ class FFT:
         return (f"FFT(shape={self.shape}, rank={self.rank}, "
                 f"real={self.real}, "
                 f"method={self.method!r}, comm={self.comm!r}, "
+                f"wire_dtype={self.wire_dtype!r}, "
                 f"mesh={dict(self.mesh.shape)}, "
                 f"batch_spec={self.batch_spec!r})")

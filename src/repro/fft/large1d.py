@@ -41,7 +41,7 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
                      method: str = 'auto', use_kernel: bool = False,
                      compute_dtype=None, batch: bool = False,
                      batch_spec=None, comm: str = 'all_to_all',
-                     overlap_chunks: int = 1):
+                     overlap_chunks: int = 1, wire_dtype: str = 'native'):
     """1-D FFT of length n = n1*n2 as a distributed four-step.
 
     Input x viewed as row-major A[k1, k2] (k = k1*n2 + k2), rows sharded
@@ -65,11 +65,17 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
     off = 1 if (batch or batch_spec is not None) else 0
     mesh_axis = ax if len(ax) > 1 else ax[0]
     strategy = commlib.resolve(comm)
+    commlib.strategies.validate_wire_dtype(wire_dtype)
+
+    def wswap(a, shard_pos, mem_pos):
+        return commlib.strategies.swap_axes_wire(
+            strategy, a, mesh_axis, shard_pos=shard_pos, mem_pos=mem_pos,
+            wire_dtype=wire_dtype)
 
     def body(ar, ai):
         # in: (n1/p, n2) rows-sharded. swap -> (n1, n2/p)
-        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
-        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+        ar = wswap(ar, off + 0, off + 1)
+        ai = wswap(ai, off + 0, off + 1)
         # columns DFT over k1 (local axis 0)
         ar, ai = methods.apply(ar, ai, axis=off + 0, inverse=inverse,
                                method=method, compute_dtype=compute_dtype,
@@ -85,15 +91,15 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
             wi = -wi
         ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
         # swap back -> (n1/p, n2); rows DFT over k2 (local axis 1)
-        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
-        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
+        ar = wswap(ar, off + 1, off + 0)
+        ai = wswap(ai, off + 1, off + 0)
         ar, ai = methods.apply(ar, ai, axis=off + 1, inverse=inverse,
                                method=method, compute_dtype=compute_dtype,
                                use_kernel=use_kernel)
         if natural_order:
             # content transpose D -> D.T: exchange ownership then local T
-            ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
-            ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+            ar = wswap(ar, off + 0, off + 1)
+            ai = wswap(ai, off + 0, off + 1)
             ar = ar.swapaxes(off + 0, off + 1)          # (n2/p, n1)
             ai = ai.swapaxes(off + 0, off + 1)
         return ar, ai
@@ -118,7 +124,8 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
                       inverse: bool = False, method: str = 'auto',
                       use_kernel: bool = False, compute_dtype=None,
                       batch: bool = False, batch_spec=None,
-                      comm: str = 'all_to_all', overlap_chunks: int = 1):
+                      comm: str = 'all_to_all', overlap_chunks: int = 1,
+                      wire_dtype: str = 'native'):
     """Rank-1 REAL four-step: the rows-halved half-plane form.
 
     Forward consumes the real row-major view A[k1, k2] (rows sharded
@@ -148,6 +155,12 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
     off = 1 if (batch or batch_spec is not None) else 0
     mesh_axis = ax if len(ax) > 1 else ax[0]
     strategy = commlib.resolve(comm)
+    commlib.strategies.validate_wire_dtype(wire_dtype)
+
+    def wswap(a, shard_pos, mem_pos):
+        return commlib.strategies.swap_axes_wire(
+            strategy, a, mesh_axis, shard_pos=shard_pos, mem_pos=mem_pos,
+            wire_dtype=wire_dtype)
 
     def _twiddle(conj: bool):
         # W[j1, k2_global] on this device's k2 chunk; the pad rows get
@@ -162,7 +175,7 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
 
     def body_fwd(x):
         # in: (n1/p, n2) real rows-sharded; swap moves ONE real array
-        x = strategy.swap_axes(x, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+        x = wswap(x, off + 0, off + 1)
         # r2c column DFT over k1 -> (nh1, n2/p), padded rows
         ar, ai = methods.apply_real(x, axis=off + 0, method=method,
                                     compute_dtype=compute_dtype)
@@ -173,8 +186,8 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
         wr, wi = _twiddle(conj=False)
         ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
         # swap back -> (nh1p/p, n2); row DFT over k2
-        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
-        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 1, mem_pos=off + 0)
+        ar = wswap(ar, off + 1, off + 0)
+        ai = wswap(ai, off + 1, off + 0)
         return methods.apply(ar, ai, axis=off + 1, method=method,
                              compute_dtype=compute_dtype,
                              use_kernel=use_kernel)
@@ -185,8 +198,8 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
                                method=method, compute_dtype=compute_dtype,
                                use_kernel=use_kernel)
         # swap -> (nh1p, n2/p); conjugate twiddle
-        ar = strategy.swap_axes(ar, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
-        ai = strategy.swap_axes(ai, mesh_axis, shard_pos=off + 0, mem_pos=off + 1)
+        ar = wswap(ar, off + 0, off + 1)
+        ai = wswap(ai, off + 0, off + 1)
         wr, wi = _twiddle(conj=True)
         ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
         # drop pad rows, c2r column IDFT -> (n1, n2/p) real
@@ -195,8 +208,7 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
         x = methods.apply_real(ar, ai, axis=off + 0, inverse=True,
                                method=method, compute_dtype=compute_dtype)
         # swap the real array back to rows-sharded
-        return strategy.swap_axes(x, mesh_axis, shard_pos=off + 1,
-                                  mem_pos=off + 0)
+        return wswap(x, off + 1, off + 0)
 
     body = body_inv if inverse else body_fwd
 

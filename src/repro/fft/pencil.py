@@ -171,6 +171,7 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
     off = batch_ndim
     lay = layout
     strategy = comm.resolve(plan.comm)
+    wire = plan.wire_dtype
     i = 0
     while i < len(steps):
         step = steps[i]
@@ -195,7 +196,8 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
                     swap_fn=lambda a, ma=mesh_axis, s=sp, mp=mem_pos:
                         strategy.swap_axes(a, ma, shard_pos=off + s,
                                            mem_pos=off + mp),
-                    chunk_axis=ck, n_chunks=overlap_chunks)
+                    chunk_axis=ck, n_chunks=overlap_chunks,
+                    wire_dtype=wire)
                 lay = planlib.swap(lay, mesh_axis, mem_pos)
                 i += 2
                 continue
@@ -204,10 +206,12 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
         else:
             _, mesh_axis, mem_pos = step
             sp = planlib.owner_pos(lay, mesh_axis)
-            re = strategy.swap_axes(re, mesh_axis, shard_pos=off + sp,
-                                    mem_pos=off + mem_pos)
-            im = strategy.swap_axes(im, mesh_axis, shard_pos=off + sp,
-                                    mem_pos=off + mem_pos)
+            re = comm.strategies.swap_axes_wire(
+                strategy, re, mesh_axis, shard_pos=off + sp,
+                mem_pos=off + mem_pos, wire_dtype=wire)
+            im = comm.strategies.swap_axes_wire(
+                strategy, im, mesh_axis, shard_pos=off + sp,
+                mem_pos=off + mem_pos, wire_dtype=wire)
             lay = planlib.swap(lay, mesh_axis, mem_pos)
         i += 1
     return re, im
@@ -316,12 +320,14 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                 if ck is not None:
                     def stage(xc):
                         cr, ci = r2c(xc)
-                        return (strategy.swap_axes(
-                                    cr, mesh_axis, shard_pos=off + sp,
-                                    mem_pos=off + mem_pos),
-                                strategy.swap_axes(
-                                    ci, mesh_axis, shard_pos=off + sp,
-                                    mem_pos=off + mem_pos))
+                        return (comm.strategies.swap_axes_wire(
+                                    strategy, cr, mesh_axis,
+                                    shard_pos=off + sp, mem_pos=off + mem_pos,
+                                    wire_dtype=plan.wire_dtype),
+                                comm.strategies.swap_axes_wire(
+                                    strategy, ci, mesh_axis,
+                                    shard_pos=off + sp, mem_pos=off + mem_pos,
+                                    wire_dtype=plan.wire_dtype))
                     re, im = ov.pipelined(overlap_chunks, ck, stage, x)
                     lay = planlib.swap(in_layout, mesh_axis, mem_pos)
                     return _execute(re, im, lay, rest[1:], inverse=False,
@@ -361,12 +367,12 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                 mesh_axis, mem_pos, sp, ck = tail
 
                 def stage_inv(cr, ci):
-                    cr = strategy.swap_axes(cr, mesh_axis,
-                                            shard_pos=off + sp,
-                                            mem_pos=off + mem_pos)
-                    ci = strategy.swap_axes(ci, mesh_axis,
-                                            shard_pos=off + sp,
-                                            mem_pos=off + mem_pos)
+                    cr = comm.strategies.swap_axes_wire(
+                        strategy, cr, mesh_axis, shard_pos=off + sp,
+                        mem_pos=off + mem_pos, wire_dtype=plan.wire_dtype)
+                    ci = comm.strategies.swap_axes_wire(
+                        strategy, ci, mesh_axis, shard_pos=off + sp,
+                        mem_pos=off + mem_pos, wire_dtype=plan.wire_dtype)
                     return c2r(cr, ci)
                 return ov.pipelined(overlap_chunks, ck, stage_inv, re, im)
             return c2r(re, im)
@@ -404,10 +410,15 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                         # across the all_to_all, doubling transpose
                         # bytes (measured; CPU-backend dots upcast bf16)
                         x = jax.lax.optimization_barrier(x)
-                    x = strategy.swap_axes(x, mesh_axis, shard_pos=off + sp,
-                                           mem_pos=off + mem_pos)
-                    if narrow:
+                        x = strategy.swap_axes(x, mesh_axis,
+                                               shard_pos=off + sp,
+                                               mem_pos=off + mem_pos)
                         x = jax.lax.optimization_barrier(x)
+                    else:
+                        x = comm.strategies.swap_axes_wire(
+                            strategy, x, mesh_axis, shard_pos=off + sp,
+                            mem_pos=off + mem_pos,
+                            wire_dtype=plan.wire_dtype)
                     lay = planlib.swap(lay, mesh_axis, mem_pos)
             return x[0], x[1]
         return _execute(re, im, in_layout, steps, inverse=inverse, plan=plan,

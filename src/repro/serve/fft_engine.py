@@ -350,9 +350,9 @@ class FFTEngine:
         ``REPRO_SERVE_SCHEDULES`` env var, '' disables); a path string
         uses that file; None disables persisted seeding.
       **plan_kwargs: forwarded to ``fft.plan`` for every plan the
-        engine builds (method, comm, compute_dtype, padded_spectrum,
-        ...). ``batch_spec`` is not allowed — the engine owns the
-        batch axis.
+        engine builds (method, comm, compute_dtype, wire_dtype,
+        padded_spectrum, ...). ``batch_spec`` is not allowed — the
+        engine owns the batch axis.
     """
 
     def __init__(self, plan_like=None, mesh=None, *, max_coalesce: int = 16,
@@ -538,7 +538,9 @@ class FFTEngine:
         row = (self._schedule_table.lookup(
                    dict(self.mesh.shape), p.shape,
                    'real' if p.real else 'complex', p.comm,
-                   backend=jax.default_backend())
+                   backend=jax.default_backend(),
+                   wire=(None if p.wire_dtype == 'native'
+                         else p.wire_dtype))
                if self._schedule_table is not None else None)
         if row is not None:
             w, c = row['coalesce_width'], row['overlap_chunks']
@@ -1186,6 +1188,8 @@ class FFTEngine:
             row.update(dtype=dtype, coalesce_width=w, overlap_chunks=c,
                        us_per_request=min(timings[best]),
                        backend=jax.default_backend())
+            if base.wire_dtype != 'native':
+                row['wire'] = base.wire_dtype
             try:
                 ccost.persist_schedule_rows([row], self._schedule_path)
                 self._schedule_table = ccost.schedule_table(

@@ -5,7 +5,8 @@ Run in a *subprocess* (so the main pytest process keeps 1 device):
 Exits 0 on success; prints PASS lines per case.
 
 Checks, on a 4x4 ('x', 'y') mesh:
-  * every registered strategy's swap is BIT-EXACT equal to the tiled
+  * every registered strategy's swap — plus parameterized pod trees
+    (``'pod_tree:<spec>'``) — is BIT-EXACT equal to the tiled
     all_to_all reference, for single-axis and flattened tuple-axis
     groups and several (shard_pos, mem_pos) placements;
   * ``redistribute(x, src, dst)`` then ``redistribute(y, dst, src)``
@@ -29,6 +30,15 @@ import repro.fft as fft  # noqa: E402
 
 RNG = np.random.default_rng(11)
 
+#: parameterized pod trees exercised beyond the registered names — a
+#: deep single-axis split and an asymmetric mixed-depth tree, both on
+#: the 4x4 mesh
+TREES = ('pod_tree:x.2*x.2*y.2*y.2', 'pod_tree:x.4*y.2*y.2')
+
+
+def all_strategies():
+    return comm.names() + TREES
+
 
 def run_swap(mesh, mesh_axis, strategy, x, shard_pos, mem_pos, ndim):
     in_spec = [None] * ndim
@@ -50,7 +60,7 @@ def check_swaps(mesh):
     for mesh_axis in ('x', 'y', ('x', 'y'), ('y', 'x')):
         for shard_pos, mem_pos in ((0, 1), (0, 2), (2, 0), (1, 2)):
             ref = None
-            for name in comm.names():
+            for name in all_strategies():
                 got = run_swap(mesh, mesh_axis, name, x, shard_pos, mem_pos, 3)
                 if ref is None:
                     ref = got
@@ -98,7 +108,7 @@ def check_facade_matrix(mesh):
         z = RNG.standard_normal(shape) + 1j * RNG.standard_normal(shape)
         want = np.fft.fftn(z, axes=tuple(range(-rank, 0)))
         ref = None
-        for strategy in comm.names():
+        for strategy in comm.names() + TREES[:1]:
             p = fft.plan(shape, mesh, comm=strategy)
             zc = jax.device_put(jnp.asarray(z, jnp.complex64), p.in_sharding)
             y = p.forward(zc)
@@ -140,7 +150,9 @@ def check_overlap_equivalence(mesh):
 
 def check_auto_plan(mesh):
     p = fft.plan((16, 16, 16), mesh, comm='auto')
-    assert p.comm in comm.names(), p.comm
+    # auto may pick a measured pod tree beyond the registered names;
+    # validate() accepts both and raises on anything else
+    assert comm.validate(p.comm) == p.comm, p.comm
     assert p.overlap_chunks >= 1
     rep = p.cost_report()
     assert 'swap' in rep and 'fft' in rep
@@ -238,7 +250,7 @@ def check_strategy_grads(mesh):
     ct = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
     for mesh_axis in ('x', 'y', ('x', 'y')):
         grads, cts = {}, {}
-        for name in comm.names():
+        for name in all_strategies():
             f = shard_map(
                 lambda a, n=name: comm.swap_axes(
                     a, mesh_axis, shard_pos=0, mem_pos=1, strategy=n),
@@ -250,7 +262,7 @@ def check_strategy_grads(mesh):
             cts[name] = np.asarray(vjp(ct)[0])
         ref = grads['all_to_all']
         ref_ct = cts['all_to_all']
-        for name in comm.names():
+        for name in all_strategies():
             assert np.array_equal(grads[name], ref), (mesh_axis, name)
             assert np.array_equal(cts[name], ref_ct), (mesh_axis, name)
         print(f"PASS grad/vjp through strategies axis={mesh_axis} "
