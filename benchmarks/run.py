@@ -75,6 +75,10 @@ def main(argv=None) -> None:
     _script(env, "bench_serve_service.py",
             *(['--smoke'] if args.smoke else []))
 
+    _section("Kernel tier: local methods + fused superstep A/B")
+    _script(env, "bench_kernels.py",
+            *(['--smoke'] if args.smoke else []))
+
     # Roofline tables are produced by the dry-run pipeline (launch/dryrun
     # + benchmarks/roofline_fft); aggregate whatever artifacts exist.
     base = os.path.join(os.path.dirname(__file__), "..")

@@ -271,7 +271,10 @@ class ScheduleTable:
     (``'pod_tree:<spec>'``), so tree schedules never collide with the
     fixed strategies'. Rows measured under a compact wire format carry
     a ``wire`` tag (``'fp16'``/``'bf16'``); untagged rows are
-    native-wire measurements and only answer native-wire lookups.
+    native-wire measurements and only answer native-wire lookups. Rows
+    measured under the Pallas kernel tier carry a ``kernel`` tag
+    (``'pallas'``) the same way; untagged rows predate the tier or
+    measured the reference path, and only answer reference lookups.
 
     Rows may additionally carry a ``load`` tag — an integer load level
     from the adaptive drainer policy (:mod:`repro.serve.policy`), where
@@ -294,16 +297,18 @@ class ScheduleTable:
         # overwrite a GPU host's persisted measurement (lookup() filters
         # by backend, so the clobbered row would just vanish)
         dt, be, ld = r.get('dtype'), r.get('backend'), r.get('load')
-        wr = r.get('wire')
+        wr, kn = r.get('wire'), r.get('kernel')
         return (str(r['mesh']), str(r['shape']), str(r['kind']),
                 str(r['strategy']), None if dt is None else str(dt),
                 None if be is None else str(be),
                 None if ld is None else int(ld),
-                None if wr is None else str(wr))
+                None if wr is None else str(wr),
+                None if kn is None else str(kn))
 
     def __init__(self, rows=()):
         # keyed by _row_key:
-        # (mesh, shape, kind, strategy, dtype, backend, load, wire)
+        # (mesh, shape, kind, strategy, dtype, backend, load, wire,
+        #  kernel)
         self._rows: Dict[tuple, dict] = {}
         self.merge(rows)
 
@@ -328,7 +333,8 @@ class ScheduleTable:
                kind: str, strategy: str, *, dtype: Optional[str] = None,
                backend: Optional[str] = None,
                load: Optional[int] = None,
-               wire: Optional[str] = None) -> Optional[dict]:
+               wire: Optional[str] = None,
+               kernel: Optional[str] = None) -> Optional[dict]:
         """The measured row for this serving config, or None. Rows
         measured on a DIFFERENT jax backend never answer (the
         per-backend dispatch overhead is the whole reason the table
@@ -347,11 +353,16 @@ class ScheduleTable:
 
         ``wire=None`` (native) answers only from untagged rows; a
         compact wire format (``wire='fp16'``/``'bf16'``) answers only
-        from rows measured under exactly that format."""
+        from rows measured under exactly that format. ``kernel`` works
+        the same way: ``None`` (the reference tier) answers only from
+        kernel-less rows — every row persisted before the kernel tier
+        existed measured the reference path — and ``kernel='pallas'``
+        answers only from rows measured under that tier."""
         base = self.make_key(mesh_shape, shape, kind, strategy)
         cands = [r for k, r in self._rows.items()
                  if k[:4] == base
                  and r.get('wire') == wire
+                 and r.get('kernel') == kernel
                  and (backend is None or r.get('backend') in (None, backend))]
         tagged = [r for r in cands if r.get('load') is not None]
         if load is None:
@@ -449,6 +460,7 @@ class PlanCost:
     precision: wm.Precision
     overlap_chunks: int = 1
     wire_dtype: str = 'native'
+    kernel: str = 'reference'
 
     @property
     def serial_cycles(self) -> float:
@@ -550,11 +562,14 @@ def _local_shape(shape: Sequence[int], layout: Layout,
 
 
 def _fft_step(n_ax: int, axis: int, elems: int, method: str,
-              precision: wm.Precision) -> StepCost:
+              precision: wm.Precision, *, kernel: str = 'reference',
+              backend: str = 'wse') -> StepCost:
     pencils = elems // n_ax
     meth = select_method(n_ax, precision) if method == 'auto' else method
-    cyc = pencils * wm.pencil_cycles_method(n_ax, precision, meth)
-    return StepCost('fft', f'n={n_ax} axis={axis} x{pencils} ({meth})', cyc)
+    cyc = pencils * wm.pencil_cycles_backend(n_ax, precision, meth,
+                                             backend=backend, kernel=kernel)
+    return StepCost('fft',
+                    f'n={n_ax} axis={axis} x{pencils} ({meth}/{kernel})', cyc)
 
 
 def _swap_step(mesh_axis, mesh_shape, elems: float, strategy: str,
@@ -600,12 +615,19 @@ def _swap_step(mesh_axis, mesh_shape, elems: float, strategy: str,
 
 
 def _rfft_step(n_ax: int, axis: int, elems: int, method: str,
-               precision: wm.Precision) -> StepCost:
+               precision: wm.Precision, *, kernel: str = 'reference',
+               backend: str = 'wse') -> StepCost:
     pencils = elems // n_ax
     meth = (select_method(max(n_ax // 2, 1), precision)
             if method == 'auto' else method)
-    cyc = pencils * wm.rfft_pencil_cycles_method(n_ax, precision, meth)
-    return StepCost('rfft', f'n={n_ax} axis={axis} x{pencils} ({meth}, r2c)',
+    # the r2c path runs the complex sub-pencil through the tier-adjusted
+    # model; the O(n) Hermitian combine always runs in the reference tier
+    half = max(n_ax // 2, 1)
+    cyc = pencils * (wm.pencil_cycles_backend(half, precision, meth,
+                                              backend=backend, kernel=kernel)
+                     + wm.RFFT_COMBINE_CPE * n_ax)
+    return StepCost('rfft',
+                    f'n={n_ax} axis={axis} x{pencils} ({meth}/{kernel}, r2c)',
                     cyc)
 
 
@@ -616,6 +638,7 @@ def pencil_plan_cost(shape: Sequence[int], layout: Layout,
                      overlap_chunks: int = 1, real: bool = False,
                      padded_spectrum: bool = True,
                      measured='auto', wire_dtype: str = 'native',
+                     kernel: str = 'reference', backend: str = 'wse',
                      axis_bw: Optional[Mapping[str, float]] = None
                      ) -> PlanCost:
     """Cost the rank-2/3 pencil schedule (``forward_schedule``) step by
@@ -628,7 +651,10 @@ def pencil_plan_cost(shape: Sequence[int], layout: Layout,
     public contract); True prices the pure distributed pipeline.
     ``measured='auto'`` prefers the measured swap-us table
     (:func:`measured_table`) over the analytic model for swaps it
-    covers."""
+    covers. ``kernel``/``backend`` price the local-compute supersteps
+    under a resolved kernel tier on a named backend
+    (:func:`repro.core.wse_model.pencil_cycles_backend`); the defaults
+    reproduce the paper's WSE model exactly."""
     from repro.fft import pencil as _pencil   # lazy: avoids import cycle
     tbl = _resolve_measured(measured)
     ra = len(shape) - 1 if real else None
@@ -642,12 +668,14 @@ def pencil_plan_cost(shape: Sequence[int], layout: Layout,
         elems = math.prod(cur) // p_total
         if step[0] == 'fft':
             if real and step[1] == ra:
-                out.append(_rfft_step(cur[ra], ra, elems, method, precision))
+                out.append(_rfft_step(cur[ra], ra, elems, method, precision,
+                                      kernel=kernel, backend=backend))
                 cur[ra] = _pencil.real_padded_extent(shape, layout,
                                                      mesh_shape)
             else:
                 out.append(_fft_step(cur[step[1]], step[1], elems, method,
-                                     precision))
+                                     precision, kernel=kernel,
+                                     backend=backend))
         else:
             out.append(_swap_step(step[1], mesh_shape, elems, strategy,
                                   precision, tbl, wire_dtype=wire_dtype,
@@ -662,7 +690,7 @@ def pencil_plan_cost(shape: Sequence[int], layout: Layout,
             'gather', f'{ax} p={p} x{elems} (np-layout boundary)',
             wm.swap_cycles_a2a(p, elems, precision)))
     return PlanCost(tuple(out), strategy, method, precision, overlap_chunks,
-                    wire_dtype)
+                    wire_dtype, kernel)
 
 
 def large1d_plan_cost(n1: int, n2: int, mesh_axes,
@@ -672,6 +700,7 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
                       natural_order: bool = True,
                       overlap_chunks: int = 1, real: bool = False,
                       measured='auto', wire_dtype: str = 'native',
+                      kernel: str = 'reference', backend: str = 'wse',
                       axis_bw: Optional[Mapping[str, float]] = None
                       ) -> PlanCost:
     """Cost the distributed four-step 1-D schedule: swap, n1-DFT,
@@ -700,26 +729,30 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
                        precision, tbl, measured_arrays=1,
                        measured_elems=float(elems), wire_dtype=wire_dtype,
                        axis_bw=axis_bw),
-            _rfft_step(n1, 0, elems, method, precision),
+            _rfft_step(n1, 0, elems, method, precision, kernel=kernel,
+                       backend=backend),
             StepCost('twiddle', f'W[j1,k2] x{half}',
                      TWIDDLE_FLOPS_PER_ELEM * half),
             _swap_step(mesh_axis, mesh_shape, half, strategy, precision,
                        tbl, wire_dtype=wire_dtype, axis_bw=axis_bw),
-            _fft_step(n2, 1, half, method, precision),
+            _fft_step(n2, 1, half, method, precision, kernel=kernel,
+                      backend=backend),
             StepCost('reorder', f'half-plane assembly x{half}',
                      wm.LOCAL_REORDER_CPE * half),
         ]
         return PlanCost(tuple(steps), strategy, method, precision,
-                        overlap_chunks, wire_dtype)
+                        overlap_chunks, wire_dtype, kernel)
     steps = [
         _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl,
                    wire_dtype=wire_dtype, axis_bw=axis_bw),
-        _fft_step(n1, 0, elems, method, precision),
+        _fft_step(n1, 0, elems, method, precision, kernel=kernel,
+                  backend=backend),
         StepCost('twiddle', f'W[j1,k2] x{elems}',
                  TWIDDLE_FLOPS_PER_ELEM * elems),
         _swap_step(mesh_axis, mesh_shape, elems, strategy, precision, tbl,
                    wire_dtype=wire_dtype, axis_bw=axis_bw),
-        _fft_step(n2, 1, elems, method, precision),
+        _fft_step(n2, 1, elems, method, precision, kernel=kernel,
+                  backend=backend),
     ]
     if natural_order:
         steps.append(_swap_step(mesh_axis, mesh_shape, elems, strategy,
@@ -728,7 +761,7 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
         steps.append(StepCost('reorder', f'local T x{elems}',
                               wm.LOCAL_REORDER_CPE * elems))
     return PlanCost(tuple(steps), strategy, method, precision,
-                    overlap_chunks, wire_dtype)
+                    overlap_chunks, wire_dtype, kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -894,7 +927,7 @@ def format_report(pc: PlanCost, shape: Sequence[int],
         f"cost_report shape={tuple(shape)} mesh={dict(mesh_shape)} "
         f"strategy={pc.strategy} method={pc.method} "
         f"precision={pc.precision} overlap_chunks={pc.overlap_chunks} "
-        f"wire_dtype={pc.wire_dtype}",
+        f"wire_dtype={pc.wire_dtype} kernel={pc.kernel}",
         f"{'step':>4}  {'kind':<8} {'detail':<34} {'cycles':>14}",
     ]
     if pc.strategy.startswith(strat.POD_TREE_PREFIX):

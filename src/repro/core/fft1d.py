@@ -264,6 +264,33 @@ def fft_four_step_block(x: jnp.ndarray, axis: int, *, inverse: bool = False,
 
 
 # ---------------------------------------------------------------------------
+# Fused superstep reference: FFT + twiddle rotation + transposed emit
+# ---------------------------------------------------------------------------
+
+def fft_twiddle_transpose(re: jnp.ndarray, im: jnp.ndarray,
+                          wr=None, wi=None, *, inverse: bool = False,
+                          fft_fn=None,
+                          compute_dtype: Optional[jnp.dtype] = None) -> Planar:
+    """Reference (pure-jnp) fused superstep: FFT along the LAST axis,
+    optional planar twiddle multiply, and emit with the last two axes
+    exchanged — ``out[..., k, j] = (W * FFT(x))[..., j, k]``.
+
+    This is the jnp twin of the Pallas kernel in
+    :mod:`repro.kernels.fft_fused`: the distributed supersteps hand its
+    output straight to the swap, so the rotation and the transpose that
+    XLA previously materialized as separate HBM passes between the local
+    FFT and the collective become one fused emit. ``wr``/``wi`` must
+    broadcast against the pre-transpose FFT output (..., b, n); pass
+    None for a transpose-only superstep (the 3-D pencil path, which has
+    no inter-superstep twiddle)."""
+    fft_fn = fft_stockham if fft_fn is None else fft_fn
+    yr, yi = fft_fn(re, im, inverse=inverse, compute_dtype=compute_dtype)
+    if wr is not None:
+        yr, yi = yr * wr - yi * wi, yr * wi + yi * wr
+    return jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
+
+
+# ---------------------------------------------------------------------------
 # Real-input pencils: pack-two-reals-as-one-complex rfft / irfft
 # ---------------------------------------------------------------------------
 #

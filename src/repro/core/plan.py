@@ -81,7 +81,13 @@ class PencilPlan:
     mesh        jax Mesh
     layout      initial ownership of each array axis
     method      local pencil algorithm ('stockham'|'four_step'|'auto')
-    use_kernel  dispatch local pencils to the Pallas kernels
+    kernel      local-compute tier ('auto'|'pallas'|'reference'): 'auto'
+                resolves per backend (Pallas where it lowers natively,
+                pure-jnp reference elsewhere), 'pallas' forces the
+                hand-written kernels (interpret mode where needed),
+                'reference' forces pure jnp
+    use_kernel  DEPRECATED boolean alias: True forces kernel='pallas'
+                when ``kernel`` was left at 'auto'
     compute_dtype  matmul operand dtype for the four-step (bf16 study)
     comm        redistribution strategy from the repro.comm registry
                 ('all_to_all'|'ppermute'|'hierarchical'|
@@ -100,11 +106,20 @@ class PencilPlan:
     mesh: Mesh
     layout: Layout
     method: str = 'auto'
+    kernel: str = 'auto'
     use_kernel: bool = False
     compute_dtype: Optional[object] = None
     comm: str = 'all_to_all'
     real: bool = False
     wire_dtype: str = 'native'
+
+    @property
+    def kernel_tier(self) -> str:
+        """The kernel-tier option with the deprecated ``use_kernel``
+        boolean folded in — what execution paths should consume."""
+        if self.use_kernel and self.kernel == 'auto':
+            return 'pallas'
+        return self.kernel
 
     @property
     def real_axis(self) -> Optional[int]:
@@ -132,6 +147,11 @@ class PencilPlan:
             raise ValueError(
                 f"unknown wire_dtype {self.wire_dtype!r}; known: "
                 f"('native', 'fp16', 'bf16')")
+        # mirrors methods.KERNEL_TIERS (fft imports this module)
+        if self.kernel not in ('auto', 'pallas', 'reference'):
+            raise ValueError(
+                f"unknown kernel tier {self.kernel!r}; known: "
+                f"('auto', 'pallas', 'reference')")
         for s, o in zip(self.shape, self.layout):
             p = self.axis_size(o)
             if s % p:

@@ -292,6 +292,53 @@ def pencil_cycles_method(n: int, precision: Precision,
     return pencil_cycles(n, precision)
 
 
+#: Per-backend local-compute characteristics relative to the WSE PE
+#: model ('wse' is the paper's CS-2 — scale 1, no dispatch cost):
+#:   scale              throughput multiplier on the per-pencil cycles
+#:   dispatch           fixed per-pencil-batch overhead (XLA op dispatch
+#:                      / kernel launch), in WSE-clock cycles
+#:   interpret_penalty  multiplier when the Pallas tier runs in
+#:                      interpret mode (op-by-op, debugging aid)
+#: Numbers are coarse planning weights, not measurements — they only
+#: need to rank tiers correctly per backend (the measured ScheduleTable
+#: overrides them wherever a benchmark has run).
+BACKEND_COMPUTE: Dict[str, Dict[str, float]] = {
+    'wse': {'scale': 1.0, 'dispatch': 0.0, 'interpret_penalty': 1.0},
+    'cpu': {'scale': 8.0, 'dispatch': 2000.0, 'interpret_penalty': 40.0},
+    'gpu': {'scale': 0.5, 'dispatch': 5000.0, 'interpret_penalty': 40.0},
+    'tpu': {'scale': 0.5, 'dispatch': 4000.0, 'interpret_penalty': 40.0},
+}
+_BACKEND_ALIASES = {'cuda': 'gpu', 'rocm': 'gpu'}
+#: backends whose Pallas tier compiles to real hardware kernels
+#: (mirrors fft.methods.PALLAS_LOWERING without importing jax here)
+PALLAS_NATIVE_BACKENDS = ('gpu', 'tpu')
+#: wire-term discount of the fused twiddle+transpose kernel tier on a
+#: native backend: the superstep producer emits pre-rotated,
+#: pre-transposed tiles, saving the separate twiddle and transpose
+#: HBM passes (~2 of the ~5 memory-bound passes of an unfused
+#: superstep at paper sizes).
+PALLAS_FUSED_SPEEDUP = 0.7
+
+
+def pencil_cycles_backend(n: int, precision: Precision,
+                          method: str = 'stockham', *,
+                          backend: str = 'wse',
+                          kernel: str = 'reference') -> float:
+    """Per-pencil cycles of :func:`pencil_cycles_method` adjusted for
+    the executing backend and kernel tier. 'wse'/'reference' reproduces
+    the paper model exactly; the Pallas tier is discounted on backends
+    where it lowers natively and penalized where it would interpret."""
+    bk = _BACKEND_ALIASES.get(backend, backend)
+    cfg = BACKEND_COMPUTE.get(bk, BACKEND_COMPUTE['cpu'])
+    cyc = pencil_cycles_method(n, precision, method) * cfg['scale']
+    if kernel == 'pallas':
+        if bk in PALLAS_NATIVE_BACKENDS:
+            cyc *= PALLAS_FUSED_SPEEDUP
+        else:
+            cyc *= cfg['interpret_penalty']
+    return cyc + cfg['dispatch']
+
+
 #: real flops per *input* element of the rfft Hermitian post-combine
 #: (split E/O halves + one twiddle rotation: ~10 flops per output bin,
 #: one bin per two inputs) and of its inverse pre-combine.

@@ -42,7 +42,8 @@ def _default_axes(mesh: Mesh, batch_spec) -> Tuple[str, ...]:
 
 
 def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
-         compute_dtype=None, use_kernel: bool = False,
+         compute_dtype=None, kernel: str = 'auto',
+         use_kernel: bool = False,
          mesh_axes: Optional[Tuple[str, ...]] = None,
          layout: Optional[Layout] = None,
          comm: str = 'auto', overlap_chunks: Optional[int] = None,
@@ -62,7 +63,16 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         ('auto' | 'stockham' | 'four_step' | 'block' | 'direct').
       compute_dtype: matmul operand dtype for the matmul-form pencils
         (e.g. ``jnp.bfloat16`` for the paper's half-precision study).
-      use_kernel: dispatch local pencils to the Pallas kernels.
+      kernel: local-compute tier ('auto' | 'pallas' | 'reference').
+        ``'auto'`` resolves per backend — the hand-written Pallas
+        kernels where they lower natively (TPU Mosaic, GPU Triton), the
+        pure-jnp reference tier elsewhere (CPU interpret mode is a
+        debugging aid, not a fast path). ``'pallas'`` forces the
+        kernels everywhere (interpret mode where no native lowering
+        exists); ``'reference'`` forces pure jnp. All tiers are
+        bit-identical under jit on the same backend.
+      use_kernel: DEPRECATED boolean alias for ``kernel='pallas'``
+        (ignored unless ``kernel`` is left at 'auto'); warns once.
       mesh_axes: mesh axis names to transform over. Rank 3: the
         (row, col) pair; ranks 1/2: axes flattened into one group.
         Defaults to every mesh axis except ``batch_spec``.
@@ -140,6 +150,12 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         raise ValueError("padded_spectrum applies to real plans of "
                          "rank 2/3 only")
     methods.validate(method)
+    methods.validate_kernel(kernel)
+    if use_kernel:
+        from repro.core import _deprecated
+        _deprecated.warn_once('repro.fft.plan(use_kernel=)',
+                              "kernel='pallas'")
+        kernel = methods._merge_kernel_arg(kernel, use_kernel)
     # canonical spelling: pod-tree specs normalize (sorted axes) so
     # equal trees share one plan-cache / measured-table key
     comm = commlib.validate(comm)
@@ -168,7 +184,7 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
             (n1, n2), axes, dict(mesh.shape), comm, overlap_chunks, method,
             real, wire_dtype)
         return FFT(shape=shape, mesh=mesh, method=meth,
-                   compute_dtype=compute_dtype, use_kernel=use_kernel,
+                   compute_dtype=compute_dtype, kernel=kernel,
                    comm=strategy, overlap_chunks=oc, wire_dtype=wire_dtype,
                    restore_layout=restore_layout, real=real,
                    batch_spec=batch_spec, donate=donate,
@@ -199,11 +215,11 @@ def plan(shape: Sequence[int], mesh: Mesh, *, method: str = 'auto',
         shape, layout, dict(mesh.shape), comm, overlap_chunks, method, real,
         wire_dtype)
     pplan = PencilPlan(shape=shape, mesh=mesh, layout=layout, method=meth,
-                       use_kernel=use_kernel, compute_dtype=compute_dtype,
+                       kernel=kernel, compute_dtype=compute_dtype,
                        comm=strategy, real=real, wire_dtype=wire_dtype)
     pplan.validate()
     return FFT(shape=shape, mesh=mesh, method=meth,
-               compute_dtype=compute_dtype, use_kernel=use_kernel,
+               compute_dtype=compute_dtype, kernel=kernel,
                comm=strategy, overlap_chunks=oc, wire_dtype=wire_dtype,
                restore_layout=restore_layout, real=real,
                padded_spectrum=padded_spectrum,
@@ -284,7 +300,8 @@ class FFT:
     device per call anyway).
     """
 
-    def __init__(self, *, shape, mesh, method, compute_dtype, use_kernel,
+    def __init__(self, *, shape, mesh, method, compute_dtype,
+                 kernel: str = 'auto',
                  comm, overlap_chunks, restore_layout, batch_spec,
                  real: bool = False, padded_spectrum: bool = False,
                  donate: bool = True, wire_dtype: str = 'native',
@@ -296,7 +313,7 @@ class FFT:
         self.mesh = mesh
         self.method = method
         self.compute_dtype = compute_dtype
-        self.use_kernel = use_kernel
+        self.kernel = kernel
         self.comm = comm
         self.overlap_chunks = overlap_chunks
         self.wire_dtype = wire_dtype
@@ -312,6 +329,16 @@ class FFT:
         self._exec_cache = {}   # (direction, batch_shape, dtype, form) -> jitted
 
     @property
+    def resolved_kernel(self) -> str:
+        """The kernel tier this plan's supersteps run on the CURRENT
+        backend ('pallas' | 'reference') — the 'auto' option resolved
+        at query time against :data:`methods.PALLAS_LOWERING` and the
+        method's per-backend kernel table."""
+        n = self._factors[1] if self.rank == 1 else self.shape[-1]
+        return methods.resolve_kernel(self.kernel,
+                                      methods.resolve(self.method, n))
+
+    @property
     def donates_input(self) -> bool:
         """True when this plan's executables consume their input buffer
         (``donate`` requested AND the aliasing is structurally possible
@@ -325,7 +352,7 @@ class FFT:
         overridden carries over already *resolved*, so no 'auto' choice
         is re-made. The new plan has its own executable caches."""
         kw = dict(method=self.method, compute_dtype=self.compute_dtype,
-                  use_kernel=self.use_kernel, comm=self.comm,
+                  kernel=self.kernel, comm=self.comm,
                   overlap_chunks=self.overlap_chunks,
                   wire_dtype=self.wire_dtype,
                   restore_layout=self.restore_layout,
@@ -472,7 +499,7 @@ class FFT:
                 # view — no factor flip, the facade owns the ordering
                 fn = large1d.make_rfft1d_large(
                     n1, n2, self.mesh, self._axes1d, inverse=inverse,
-                    method=self.method, use_kernel=self.use_kernel,
+                    method=self.method, kernel=self.kernel,
                     compute_dtype=self.compute_dtype, batch=batch,
                     batch_spec=self.batch_spec, comm=self.comm,
                     overlap_chunks=self.overlap_chunks,
@@ -483,7 +510,7 @@ class FFT:
             fn = large1d.make_fft1d_large(
                 f1, f2, self.mesh, self._axes1d, inverse=inverse,
                 natural_order=True, method=self.method,
-                use_kernel=self.use_kernel, compute_dtype=self.compute_dtype,
+                kernel=self.kernel, compute_dtype=self.compute_dtype,
                 batch=batch, batch_spec=self.batch_spec, comm=self.comm,
                 overlap_chunks=self.overlap_chunks,
                 wire_dtype=self.wire_dtype)
@@ -698,13 +725,15 @@ class FFT:
                 n1, n2, tuple(ax) if len(ax) > 1 else ax[0], mesh_shape,
                 precision=precision, method=self.method, strategy=self.comm,
                 overlap_chunks=self.overlap_chunks, real=self.real,
-                measured=measured, wire_dtype=self.wire_dtype)
+                measured=measured, wire_dtype=self.wire_dtype,
+                kernel=self.resolved_kernel)
         return commlib.cost.pencil_plan_cost(
             self.shape, self._pplan.layout, mesh_shape, precision=precision,
             method=self.method, strategy=self.comm,
             overlap_chunks=self.overlap_chunks, real=self.real,
             padded_spectrum=self.padded_spectrum or not self.real,
-            measured=measured, wire_dtype=self.wire_dtype)
+            measured=measured, wire_dtype=self.wire_dtype,
+            kernel=self.resolved_kernel)
 
     def cost_report(self, precision: str = 'fp32') -> str:
         """Predicted cycles per superstep/transpose, formatted next to
@@ -719,6 +748,7 @@ class FFT:
         return (f"FFT(shape={self.shape}, rank={self.rank}, "
                 f"real={self.real}, "
                 f"method={self.method!r}, comm={self.comm!r}, "
+                f"kernel={self.kernel!r}, "
                 f"wire_dtype={self.wire_dtype!r}, "
                 f"mesh={dict(self.mesh.shape)}, "
                 f"batch_spec={self.batch_spec!r})")

@@ -38,10 +38,12 @@ def _flat_axis_index(ax, sizes=None):
 
 def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
                      inverse: bool = False, natural_order: bool = False,
-                     method: str = 'auto', use_kernel: bool = False,
+                     method: str = 'auto', kernel: str = 'auto',
+                     use_kernel: bool = False,
                      compute_dtype=None, batch: bool = False,
                      batch_spec=None, comm: str = 'all_to_all',
-                     overlap_chunks: int = 1, wire_dtype: str = 'native'):
+                     overlap_chunks: int = 1, wire_dtype: str = 'native',
+                     fused=None):
     """1-D FFT of length n = n1*n2 as a distributed four-step.
 
     Input x viewed as row-major A[k1, k2] (k = k1*n2 + k2), rows sharded
@@ -51,10 +53,20 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
     one leading batch axis rides along, replicated or sharded over
     ``batch_spec``; ``overlap_chunks > 1`` pipelines the schedule over
     chunks of that batch axis. ``comm`` names the redistribution
-    strategy (:mod:`repro.comm`).
+    strategy (:mod:`repro.comm`); ``kernel`` the local-compute tier
+    (``use_kernel`` is the deprecated boolean alias). With ``fused``
+    (default on, see :func:`repro.fft.pencil.default_fused`) the column
+    DFT, the inter-factor twiddle rotation and the orientation restore
+    run as ONE fused superstep, and the natural-order epilogue's local
+    transpose is emitted by the row DFT itself.
     """
     methods.validate(method)
+    kern = methods._merge_kernel_arg(methods.validate_kernel(kernel),
+                                     use_kernel)
     commlib.validate(comm)
+    if fused is None:
+        from repro.fft.pencil import default_fused
+        fused = default_fused()
     n = n1 * n2
     ax = mesh_axes if isinstance(mesh_axes, tuple) else (mesh_axes,)
     psize = 1
@@ -72,30 +84,63 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
             strategy, a, mesh_axis, shard_pos=shard_pos, mem_pos=mem_pos,
             wire_dtype=wire_dtype)
 
-    def body(ar, ai):
-        # in: (n1/p, n2) rows-sharded. swap -> (n1, n2/p)
-        ar = wswap(ar, off + 0, off + 1)
-        ai = wswap(ai, off + 0, off + 1)
-        # columns DFT over k1 (local axis 0)
-        ar, ai = methods.apply(ar, ai, axis=off + 0, inverse=inverse,
-                               method=method, compute_dtype=compute_dtype,
-                               use_kernel=use_kernel)
-        # twiddle W[j1, k2_global] on the local k2 chunk
+    def _twiddle(transposed: bool):
+        # W[j1, k2_global] on the local k2 chunk; ``transposed`` gives
+        # the (k2, j1) orientation the fused superstep consumes — the
+        # integer products j1*k2 are identical either way, so the two
+        # orientations hold bitwise-equal values
         idx = commlib.group_index(mesh_axis)
         m2 = n2 // psize
         k2 = idx * m2 + jnp.arange(m2)
         j1 = jnp.arange(n1)
-        ang = (-2.0 * np.pi / n) * (j1[:, None] * k2[None, :])
+        jk = (k2[:, None] * j1[None, :] if transposed
+              else j1[:, None] * k2[None, :])
+        ang = (-2.0 * np.pi / n) * jk
         wr, wi = jnp.cos(ang), jnp.sin(ang)
         if inverse:
             wi = -wi
-        ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
+        return wr, wi
+
+    def body(ar, ai):
+        # in: (n1/p, n2) rows-sharded. swap -> (n1, n2/p)
+        ar = wswap(ar, off + 0, off + 1)
+        ai = wswap(ai, off + 0, off + 1)
+        if fused:
+            # fused superstep: columns DFT over k1 + inter-factor
+            # twiddle + orientation restore in ONE pass — the rotation
+            # and both moveaxis passes around the column FFT fold into
+            # the FFT's own transposed emit (in-kernel on the Pallas
+            # tier), so the swap back reads pre-rotated data
+            wr, wi = _twiddle(transposed=True)           # (m2, n1)
+            ar, ai = methods.apply_fused(
+                jnp.swapaxes(ar, off + 0, off + 1),
+                jnp.swapaxes(ai, off + 0, off + 1),
+                wr=wr, wi=wi, inverse=inverse, method=method,
+                compute_dtype=compute_dtype, kernel=kern)
+        else:
+            # columns DFT over k1 (local axis 0)
+            ar, ai = methods.apply(ar, ai, axis=off + 0, inverse=inverse,
+                                   method=method, compute_dtype=compute_dtype,
+                                   kernel=kern)
+            wr, wi = _twiddle(transposed=False)          # (n1, m2)
+            ar, ai = ar * wr - ai * wi, ar * wi + ai * wr
         # swap back -> (n1/p, n2); rows DFT over k2 (local axis 1)
         ar = wswap(ar, off + 1, off + 0)
         ai = wswap(ai, off + 1, off + 0)
+        if natural_order and fused:
+            # rows DFT with transposed emit: the fused op's (j2, j1)
+            # output IS the natural-order local transpose, so only the
+            # ownership exchange remains (at the permuted positions)
+            ar, ai = methods.apply_fused(ar, ai, inverse=inverse,
+                                         method=method,
+                                         compute_dtype=compute_dtype,
+                                         kernel=kern)
+            ar = wswap(ar, off + 1, off + 0)             # -> (n2/p, n1)
+            ai = wswap(ai, off + 1, off + 0)
+            return ar, ai
         ar, ai = methods.apply(ar, ai, axis=off + 1, inverse=inverse,
                                method=method, compute_dtype=compute_dtype,
-                               use_kernel=use_kernel)
+                               kernel=kern)
         if natural_order:
             # content transpose D -> D.T: exchange ownership then local T
             ar = wswap(ar, off + 0, off + 1)
@@ -122,7 +167,8 @@ def make_fft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
 
 def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
                       inverse: bool = False, method: str = 'auto',
-                      use_kernel: bool = False, compute_dtype=None,
+                      kernel: str = 'auto', use_kernel: bool = False,
+                      compute_dtype=None,
                       batch: bool = False, batch_spec=None,
                       comm: str = 'all_to_all', overlap_chunks: int = 1,
                       wire_dtype: str = 'native'):
@@ -142,6 +188,8 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
     facade (:mod:`repro.fft.api`), which owns the (n,) views.
     """
     methods.validate(method)
+    kern = methods._merge_kernel_arg(methods.validate_kernel(kernel),
+                                     use_kernel)
     commlib.validate(comm)
     n = n1 * n2
     nh1 = n1 // 2 + 1
@@ -189,14 +237,13 @@ def make_rfft1d_large(n1: int, n2: int, plan_mesh, mesh_axes=('x', 'y'), *,
         ar = wswap(ar, off + 1, off + 0)
         ai = wswap(ai, off + 1, off + 0)
         return methods.apply(ar, ai, axis=off + 1, method=method,
-                             compute_dtype=compute_dtype,
-                             use_kernel=use_kernel)
+                             compute_dtype=compute_dtype, kernel=kern)
 
     def body_inv(ar, ai):
         # in: (nh1p/p, n2) planar rows-sharded; row IDFT over j2
         ar, ai = methods.apply(ar, ai, axis=off + 1, inverse=True,
                                method=method, compute_dtype=compute_dtype,
-                               use_kernel=use_kernel)
+                               kernel=kern)
         # swap -> (nh1p, n2/p); conjugate twiddle
         ar = wswap(ar, off + 0, off + 1)
         ai = wswap(ai, off + 0, off + 1)

@@ -32,7 +32,8 @@ previously it was reachable only through ``make_fft``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+import os
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,21 +48,117 @@ Planar = Tuple[jnp.ndarray, jnp.ndarray]
 #: O(n^2) DFT for non-power-of-two sizes).
 AUTO_MATMUL_MIN = 64
 
+#: valid ``kernel=`` plan-option values. 'auto' resolves per backend
+#: (Pallas where it lowers natively, the pure-jnp reference elsewhere);
+#: 'pallas' forces the hand-written kernel tier (interpret mode on
+#: backends with no native lowering); 'reference' forces pure jnp.
+KERNEL_TIERS: Tuple[str, ...] = ('auto', 'pallas', 'reference')
+
+#: how ``pl.pallas_call`` lowers per jax backend: 'mosaic' (TPU) and
+#: 'triton' (GPU) compile to real hardware kernels; 'interpret' means
+#: the kernel only runs op-by-op under ``interpret=True`` (CPU).
+PALLAS_LOWERING: Dict[str, str] = {
+    'cpu': 'interpret',
+    'gpu': 'triton',
+    'cuda': 'triton',
+    'rocm': 'triton',
+    'tpu': 'mosaic',
+}
+
+#: env override for the interpret-mode default ('1'/'0'): CI forces
+#: interpret on, and a backend bringup can force native lowering.
+KERNEL_INTERPRET_ENV = 'REPRO_KERNEL_INTERPRET'
+
+
+def backend() -> str:
+    """The active jax backend name ('cpu' | 'gpu' | 'tpu') — the key of
+    every per-backend kernel/cost table (generalizes the old TPU-only
+    ``on_tpu`` heuristic)."""
+    return jax.default_backend()
+
 
 def on_tpu() -> bool:
-    return jax.default_backend() == 'tpu'
+    return backend() == 'tpu'
+
+
+def pallas_lowering(bk: Optional[str] = None) -> str:
+    """'mosaic' | 'triton' | 'interpret' for backend ``bk`` (default:
+    the active backend). Unknown backends are assumed interpret-only —
+    the safe direction (correct everywhere, never silently slow on a
+    backend we know lowers natively)."""
+    return PALLAS_LOWERING.get(backend() if bk is None else bk, 'interpret')
+
+
+def default_interpret(bk: Optional[str] = None) -> bool:
+    """Interpret-mode default for Pallas calls: True exactly where the
+    backend has no native Pallas lowering. The old rule keyed off
+    ``on_tpu`` only, so a GPU backend silently ran its kernels op by op;
+    now GPU lowers via Triton. ``REPRO_KERNEL_INTERPRET=1/0`` overrides
+    (CI pins interpret on its fake-device host mesh)."""
+    env = os.environ.get(KERNEL_INTERPRET_ENV)
+    if env not in (None, ''):
+        return env.lower() not in ('0', 'false', 'no')
+    return pallas_lowering(bk) == 'interpret'
+
+
+def validate_kernel(kernel: str) -> str:
+    """Check ``kernel`` is a known tier name; returns it."""
+    if kernel not in KERNEL_TIERS:
+        raise ValueError(
+            f"unknown kernel tier {kernel!r}; known: {KERNEL_TIERS}")
+    return kernel
+
+
+def resolve_kernel(kernel: str, method: Optional['Method'] = None,
+                   bk: Optional[str] = None) -> str:
+    """Resolve a kernel-tier option to the tier that will actually run:
+    'pallas' or 'reference'.
+
+    'auto' picks the Pallas tier only where the backend lowers it
+    natively (the xformers dispatcher rule: hand kernels where they are
+    hardware kernels, reference fallback elsewhere) — so CPU 'auto'
+    plans are bit-identical to 'reference' plans by construction. An
+    explicit 'pallas' runs everywhere (interpret mode where needed). A
+    method with no kernel for this backend always falls back to
+    'reference', matching the old ``use_kernel`` behavior."""
+    validate_kernel(kernel)
+    if kernel == 'reference':
+        return 'reference'
+    bk = backend() if bk is None else bk
+    if method is not None and method.kernel_for(bk) is None:
+        return 'reference'
+    if kernel == 'pallas':
+        return 'pallas'
+    return 'pallas' if pallas_lowering(bk) != 'interpret' else 'reference'
 
 
 @dataclasses.dataclass(frozen=True)
 class Method:
-    """One registered local pencil algorithm."""
+    """One registered local pencil algorithm.
+
+    ``kernel_fns`` is the per-backend kernel table: backend name ->
+    Pallas form (``None`` entries disable the kernel tier on that
+    backend). Backends the table does not name fall back to the
+    generic ``kernel_fn``. The built-ins register single-source Pallas
+    kernels that lower per backend (cpu-interpret / gpu-triton /
+    tpu-mosaic, see :data:`PALLAS_LOWERING`); the table is the
+    extension point for backend-specialized variants."""
     name: str
     pencil_fn: Callable
     axis_fn: Optional[Callable] = None
     kernel_fn: Optional[Callable] = None
+    kernel_fns: Optional[Mapping[str, Optional[Callable]]] = None
     real_fn: Optional[Callable] = None
     pow2_only: bool = True
     description: str = ''
+
+    def kernel_for(self, bk: Optional[str] = None) -> Optional[Callable]:
+        """The kernel serving backend ``bk`` (default: active backend),
+        or None when this method has no kernel tier there."""
+        bk = backend() if bk is None else bk
+        if self.kernel_fns is not None and bk in self.kernel_fns:
+            return self.kernel_fns[bk]
+        return self.kernel_fn
 
 
 _REGISTRY: Dict[str, Method] = {}
@@ -109,16 +206,29 @@ def resolve(name: str, n: int) -> Method:
     return get(name)
 
 
+def _merge_kernel_arg(kernel: str, use_kernel: bool) -> str:
+    """Fold the legacy ``use_kernel`` boolean into the kernel-tier
+    option (True forces 'pallas' when ``kernel`` was left at 'auto').
+    The one-time DeprecationWarning lives at the public plan surface
+    (``fft.plan`` / ``FFT.with_options``), not in this hot path."""
+    if use_kernel and kernel == 'auto':
+        return 'pallas'
+    return kernel
+
+
 def apply(re: jnp.ndarray, im: jnp.ndarray, *, axis: int = -1,
           inverse: bool = False, method: str = 'auto',
-          compute_dtype=None, use_kernel: bool = False,
+          compute_dtype=None, kernel: str = 'auto',
+          use_kernel: bool = False,
           interpret: Optional[bool] = None) -> Planar:
     """Run a registered pencil method along ``axis`` of planar (re, im).
 
-    ``use_kernel`` routes to the method's Pallas kernel when it has one
-    (interpret mode defaults to True off-TPU); otherwise the pure-jnp
-    path runs, preferring the axis-general form (no moveaxis) when the
-    method provides one.
+    ``kernel`` picks the tier: 'pallas' routes to the method's
+    per-backend Pallas kernel (interpret mode per
+    :func:`default_interpret`), 'reference' the pure-jnp path, 'auto'
+    resolves per backend (:func:`resolve_kernel`). The reference path
+    prefers the axis-general form (no moveaxis) when the method
+    provides one. ``use_kernel`` is the deprecated boolean alias.
     """
     axis = axis % re.ndim
     n = re.shape[axis]
@@ -128,11 +238,12 @@ def apply(re: jnp.ndarray, im: jnp.ndarray, *, axis: int = -1,
             f"method {m.name!r} requires a power-of-two pencil length, "
             f"got {n} (use method='direct' or 'auto')")
     last = axis == re.ndim - 1
-    if use_kernel and m.kernel_fn is not None:
-        itp = (not on_tpu()) if interpret is None else interpret
+    if resolve_kernel(_merge_kernel_arg(kernel, use_kernel), m) == 'pallas':
+        kfn = m.kernel_for()
+        itp = default_interpret() if interpret is None else interpret
         if not last:
             re, im = jnp.moveaxis(re, axis, -1), jnp.moveaxis(im, axis, -1)
-        yr, yi = m.kernel_fn(re, im, inverse=inverse, interpret=itp)
+        yr, yi = kfn(re, im, inverse=inverse, interpret=itp)
         if not last:
             yr, yi = jnp.moveaxis(yr, -1, axis), jnp.moveaxis(yi, -1, axis)
         return yr, yi
@@ -192,7 +303,8 @@ def apply_real(x: jnp.ndarray, im: Optional[jnp.ndarray] = None, *,
 
 
 def apply_block(x: jnp.ndarray, *, axis: int, inverse: bool = False,
-                compute_dtype=None, use_kernel: bool = False,
+                compute_dtype=None, kernel: str = 'auto',
+                use_kernel: bool = False,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """Block-complex form of the 'block' method: ``x`` carries a leading
     size-2 complex axis (x[0]=re, x[1]=im) and is transformed along
@@ -204,9 +316,11 @@ def apply_block(x: jnp.ndarray, *, axis: int, inverse: bool = False,
     if not tw.is_pow2(n):
         raise ValueError(
             f"method 'block' requires a power-of-two pencil length, got {n}")
-    if use_kernel:
+    tier = resolve_kernel(_merge_kernel_arg(kernel, use_kernel),
+                          _REGISTRY.get('block'))
+    if tier == 'pallas':
         from repro.kernels import fft_block as _kb
-        itp = (not on_tpu()) if interpret is None else interpret
+        itp = default_interpret() if interpret is None else interpret
         last = axis == x.ndim - 1
         if not last:
             x = jnp.moveaxis(x, axis, -1)
@@ -214,6 +328,49 @@ def apply_block(x: jnp.ndarray, *, axis: int, inverse: bool = False,
         return y if last else jnp.moveaxis(y, -1, axis)
     return _f1.fft_four_step_block(x, axis, inverse=inverse,
                                    compute_dtype=compute_dtype)
+
+
+def apply_fused(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
+                method: str = 'auto', compute_dtype=None,
+                kernel: str = 'auto', use_kernel: bool = False,
+                interpret: Optional[bool] = None,
+                wr=None, wi=None) -> Planar:
+    """One fused superstep: FFT along the LAST axis, an optional planar
+    twiddle multiply (``wr``/``wi`` broadcastable to the FFT output),
+    and an emit with the last two axes exchanged —
+    ``out[..., k, j] = (W * FFT(x))[..., j, k]``.
+
+    This is the op the distributed supersteps hand straight to the
+    swap: the rotation and the transpose that XLA previously
+    materialized as separate passes between ``apply`` and
+    ``swap_axes_wire`` happen in the producer (in-kernel on the Pallas
+    tier, one fused emit on the reference tier). Both tiers run the
+    same float ops in the same order for the Stockham method, so plan
+    outputs stay bit-identical across tiers.
+    """
+    if re.ndim < 2:
+        raise ValueError("apply_fused needs a batch axis next to the "
+                         f"pencil axis, got shape {re.shape}")
+    n = re.shape[-1]
+    m = resolve(method, n)
+    if m.pow2_only and not tw.is_pow2(n):
+        raise ValueError(
+            f"method {m.name!r} requires a power-of-two pencil length, "
+            f"got {n} (use method='direct' or 'auto')")
+    tier = resolve_kernel(_merge_kernel_arg(kernel, use_kernel), m)
+    if tier == 'pallas':
+        itp = default_interpret() if interpret is None else interpret
+        if m.name == 'stockham':
+            from repro.kernels import fft_fused as _kf
+            return _kf.fft_twiddle_transpose(
+                re, im, wr, wi, inverse=inverse, interpret=itp)
+        yr, yi = m.kernel_for()(re, im, inverse=inverse, interpret=itp)
+        if wr is not None:
+            yr, yi = yr * wr - yi * wi, yr * wi + yi * wr
+        return jnp.swapaxes(yr, -1, -2), jnp.swapaxes(yi, -1, -2)
+    return _f1.fft_twiddle_transpose(
+        re, im, wr, wi, inverse=inverse, fft_fn=m.pencil_fn,
+        compute_dtype=compute_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -248,14 +405,23 @@ def _block_axis(re, im, axis, *, inverse=False, compute_dtype=None):
 
 def _block_kernel(re, im, *, inverse, interpret):
     y = apply_block(jnp.stack([re, im]), axis=re.ndim, inverse=inverse,
-                    use_kernel=True, interpret=interpret)
+                    kernel='pallas', interpret=interpret)
     return y[0], y[1]
+
+
+def _backed(kfn: Callable) -> Dict[str, Callable]:
+    """Per-backend kernel table for a single-source Pallas kernel: the
+    same callable lowers per backend (cpu-interpret / gpu-triton /
+    tpu-mosaic, :data:`PALLAS_LOWERING` decides the mode). A
+    backend-specialized variant replaces its entry here."""
+    return {bk: kfn for bk in PALLAS_LOWERING}
 
 
 register(Method(
     name='stockham',
     pencil_fn=_f1.fft_stockham,
     kernel_fn=_stockham_kernel,
+    kernel_fns=_backed(_stockham_kernel),
     real_fn=_f1.rfft_via(_f1.fft_stockham),
     description='radix-2 Stockham autosort butterflies (paper-faithful)'))
 
@@ -264,6 +430,7 @@ register(Method(
     pencil_fn=_f1.fft_four_step,
     axis_fn=_f1.fft_four_step_axis,
     kernel_fn=_four_step_kernel,
+    kernel_fns=_backed(_four_step_kernel),
     real_fn=_f1.rfft_via(_f1.fft_four_step),
     description='Bailey four-step as dense matmuls (MXU form)'))
 
@@ -272,6 +439,7 @@ register(Method(
     pencil_fn=_block_pencil,
     axis_fn=_block_axis,
     kernel_fn=_block_kernel,
+    kernel_fns=_backed(_block_kernel),
     real_fn=_f1.rfft_via(_block_pencil),
     description='block-complex four-step: two real dots, fused twiddle'))
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -38,6 +39,20 @@ from repro.core.plan import Layout, PencilPlan
 from repro.fft import methods
 
 Planar = Tuple[jnp.ndarray, jnp.ndarray]
+
+#: env toggle for the fused twiddle+transpose superstep ('1'/'0'). The
+#: fused path runs the same float ops on the same values — only the op
+#: order and the collective's axis positions change — so it is on by
+#: default; the toggle exists for A/B benchmarking (bench_kernels.py)
+#: and bisection.
+FUSE_ENV = 'REPRO_FUSE_SUPERSTEP'
+
+
+def default_fused() -> bool:
+    env = os.environ.get(FUSE_ENV)
+    if env not in (None, ''):
+        return env.lower() not in ('0', 'false', 'no')
+    return True
 
 
 # ---------------------------------------------------------------------------
@@ -158,16 +173,55 @@ def packed_plan(plan: PencilPlan, nh_pad: int) -> PencilPlan:
 def _fft_along(re, im, axis: int, *, inverse: bool, plan: PencilPlan) -> Planar:
     return methods.apply(re, im, axis=axis, inverse=inverse,
                          method=plan.method, compute_dtype=plan.compute_dtype,
-                         use_kernel=plan.use_kernel)
+                         kernel=plan.kernel_tier)
+
+
+def _fused_pair(re, im, *, a: int, s: int, mesh_axis, inverse: bool,
+                plan: PencilPlan, strategy, wire: str) -> Planar:
+    """One fused superstep: FFT along local axis ``a`` and the swap that
+    exchanges it with the mesh axis at local position ``s``, with the
+    pre-collective transpose emitted BY the FFT (in-kernel on the Pallas
+    tier, one fused emit on the reference tier) instead of XLA
+    materializing it between ``apply`` and the collective.
+
+    The fft axis is arranged last, the fused op emits the last two axes
+    exchanged, the collective runs at the permuted positions, and the
+    final transpose restores the original axis order — adjacent
+    restore/arrange transposes of consecutive supersteps fold into one
+    XLA op. Pure positional rearrangement around identical float ops, so
+    outputs are bit-identical to the unfused path."""
+    nd = re.ndim
+    re1 = jnp.moveaxis(re, a, -1)
+    im1 = jnp.moveaxis(im, a, -1)
+    fr, fi = methods.apply_fused(re1, im1, inverse=inverse,
+                                 method=plan.method,
+                                 compute_dtype=plan.compute_dtype,
+                                 kernel=plan.kernel_tier)
+    # net arrange+emit permutation: order[i] = original axis at new pos i
+    order = [p for p in range(nd) if p != a]
+    order = order[:-1] + [a] + order[-1:]
+    s_new = order.index(s)
+    fr = comm.strategies.swap_axes_wire(
+        strategy, fr, mesh_axis, shard_pos=s_new, mem_pos=nd - 2,
+        wire_dtype=wire)
+    fi = comm.strategies.swap_axes_wire(
+        strategy, fi, mesh_axis, shard_pos=s_new, mem_pos=nd - 2,
+        wire_dtype=wire)
+    inv = [0] * nd
+    for i2, p in enumerate(order):
+        inv[p] = i2
+    return jnp.transpose(fr, inv), jnp.transpose(fi, inv)
 
 
 def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
-             batch_ndim: int, overlap_chunks: int) -> Planar:
+             batch_ndim: int, overlap_chunks: int,
+             fused: bool = True) -> Planar:
     """Run fft/swap steps, threading the layout. When overlap_chunks > 1
     each (fft, swap) pair is pipelined (via repro.comm.overlap) over
     chunks of a free local axis so compute of chunk i+1 overlaps the
-    collective of chunk i (beyond-paper); swaps dispatch through the
-    plan's registered comm strategy."""
+    collective of chunk i (beyond-paper); serial (fft, swap) pairs run
+    as one fused twiddle+transpose superstep when ``fused``; swaps
+    dispatch through the plan's registered comm strategy."""
     off = batch_ndim
     lay = layout
     strategy = comm.resolve(plan.comm)
@@ -201,6 +255,21 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
                 lay = planlib.swap(lay, mesh_axis, mem_pos)
                 i += 2
                 continue
+        if (fused and step[0] == 'fft' and nxt is not None
+                and nxt[0] == 'swap' and nxt[2] == step[1]
+                and re.ndim >= 2):
+            # serial fused superstep: the swap reads the fft axis it is
+            # about to split (mem_pos == the just-transformed axis — the
+            # schedule invariant in both directions)
+            _, mesh_axis, _ = nxt
+            re, im = _fused_pair(
+                re, im, a=off + step[1],
+                s=off + planlib.owner_pos(lay, mesh_axis),
+                mesh_axis=mesh_axis, inverse=inverse, plan=plan,
+                strategy=strategy, wire=wire)
+            lay = planlib.swap(lay, mesh_axis, nxt[2])
+            i += 2
+            continue
         if step[0] == 'fft':
             re, im = _fft_along(re, im, off + step[1], inverse=inverse, plan=plan)
         else:
@@ -223,8 +292,8 @@ def _execute(re, im, layout: Layout, steps, *, inverse: bool, plan: PencilPlan,
 
 def make_fft(plan: PencilPlan, *, inverse: bool = False,
              restore_layout: bool = False, batch: bool = False,
-             batch_spec=None,
-             overlap_chunks: int = 1) -> Tuple[Callable, Layout, Layout]:
+             batch_spec=None, overlap_chunks: int = 1,
+             fused: Optional[bool] = None) -> Tuple[Callable, Layout, Layout]:
     """Build a jit-able distributed FFT.
 
     Returns (fn, in_layout, out_layout); fn maps planar global arrays
@@ -237,8 +306,12 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
     paper's forward+inverse loop (§5: "ran forward and inverse Fourier
     transforms consecutively"). With ``restore_layout`` both directions
     consume AND produce the plan's initial layout (extra swaps pay for
-    the layout stability).
+    the layout stability). ``fused`` controls the fused twiddle+
+    transpose superstep (default: :func:`default_fused`, i.e. on unless
+    ``REPRO_FUSE_SUPERSTEP=0``).
     """
+    if fused is None:
+        fused = default_fused()
     plan.validate()
     methods.validate(plan.method)
     comm.validate(plan.comm)
@@ -332,11 +405,12 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                     lay = planlib.swap(in_layout, mesh_axis, mem_pos)
                     return _execute(re, im, lay, rest[1:], inverse=False,
                                     plan=packed, batch_ndim=batch_ndim,
-                                    overlap_chunks=overlap_chunks)
+                                    overlap_chunks=overlap_chunks,
+                                    fused=fused)
             re, im = r2c(x)
             return _execute(re, im, in_layout, rest, inverse=False,
                             plan=packed, batch_ndim=batch_ndim,
-                            overlap_chunks=overlap_chunks)
+                            overlap_chunks=overlap_chunks, fused=fused)
 
         def local_real_inv(re, im):
             assert steps[-1] == ('fft', ra), steps
@@ -362,7 +436,7 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                     head = head[:-1]
             re, im = _execute(re, im, in_layout, head, inverse=True,
                               plan=packed, batch_ndim=batch_ndim,
-                              overlap_chunks=overlap_chunks)
+                              overlap_chunks=overlap_chunks, fused=fused)
             if tail is not None:
                 mesh_axis, mem_pos, sp, ck = tail
 
@@ -399,7 +473,7 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                     x = methods.apply_block(
                         x, axis=off + step[1], inverse=inverse,
                         compute_dtype=plan.compute_dtype,
-                        use_kernel=plan.use_kernel)
+                        kernel=plan.kernel_tier)
                 else:
                     _, mesh_axis, mem_pos = step
                     sp = planlib.owner_pos(lay, mesh_axis)
@@ -422,7 +496,8 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                     lay = planlib.swap(lay, mesh_axis, mem_pos)
             return x[0], x[1]
         return _execute(re, im, in_layout, steps, inverse=inverse, plan=plan,
-                        batch_ndim=batch_ndim, overlap_chunks=overlap_chunks)
+                        batch_ndim=batch_ndim, overlap_chunks=overlap_chunks,
+                        fused=fused)
 
     fn = shard_map(local, mesh=plan.mesh,
                    in_specs=(in_spec, in_spec),

@@ -33,7 +33,13 @@ DEFAULT_BLOCK_B = 8
 
 def _stockham_block(xr, xi, wr_full, wi_full, *, n: int, inverse: bool):
     """Runs all log2(n) Stockham stages on a (B, n) block. Pure jnp —
-    usable both inside the Pallas kernel body and as a fallback."""
+    usable both inside the Pallas kernel body and as a fallback.
+
+    ``wr_full``/``wi_full`` must be the master table for the requested
+    DIRECTION (``tw.roots_of_unity_np(n, inverse=...)``): negating in
+    the host table instead of per stage keeps the kernel's op sequence
+    identical to the jnp reference path, so XLA's FMA fusion rounds
+    both tiers the same way and plan outputs stay bit-identical."""
     stages = tw.log2i(n)
     b = xr.shape[0]
     for s in range(stages):
@@ -42,8 +48,6 @@ def _stockham_block(xr, xi, wr_full, wi_full, *, n: int, inverse: bool):
         stride = n // (2 * L)          # master-table stride for w_{2L}^j
         wr = wr_full[::stride]         # (L,) static strided slice
         wi = wi_full[::stride]
-        if inverse:
-            wi = -wi
         vr = xr.reshape(b, 2, c // 2, L)
         vi = xi.reshape(b, 2, c // 2, L)
         ar, ai = vr[:, 0], vi[:, 0]
@@ -93,7 +97,7 @@ def fft_pencil(re: jnp.ndarray, im: jnp.ndarray, *, inverse: bool = False,
         xi = jnp.pad(xi, ((0, pad), (0, 0)))
     bp = b + pad
 
-    wr_np, wi_np = tw.roots_of_unity_np(n)
+    wr_np, wi_np = tw.roots_of_unity_np(n, inverse=inverse)
     wr = jnp.asarray(wr_np[: n // 2], dtype=re.dtype)
     wi = jnp.asarray(wi_np[: n // 2], dtype=re.dtype)
 

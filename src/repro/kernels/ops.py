@@ -16,7 +16,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.fft.methods import on_tpu  # noqa: F401  (re-exported)
+from repro.fft.methods import backend, on_tpu  # noqa: F401  (re-exported)
 
 Planar = Tuple[jnp.ndarray, jnp.ndarray]
 

@@ -540,7 +540,9 @@ class FFTEngine:
                    'real' if p.real else 'complex', p.comm,
                    backend=jax.default_backend(),
                    wire=(None if p.wire_dtype == 'native'
-                         else p.wire_dtype))
+                         else p.wire_dtype),
+                   kernel=(None if p.resolved_kernel == 'reference'
+                           else p.resolved_kernel))
                if self._schedule_table is not None else None)
         if row is not None:
             w, c = row['coalesce_width'], row['overlap_chunks']
@@ -1190,6 +1192,8 @@ class FFTEngine:
                        backend=jax.default_backend())
             if base.wire_dtype != 'native':
                 row['wire'] = base.wire_dtype
+            if base.resolved_kernel != 'reference':
+                row['kernel'] = base.resolved_kernel
             try:
                 ccost.persist_schedule_rows([row], self._schedule_path)
                 self._schedule_table = ccost.schedule_table(

@@ -120,7 +120,8 @@ def main():
     # ---- Pallas kernels inside shard_map (interpret mode) ----
     n = 16
     x = rng.standard_normal((n, n, n)) + 1j * rng.standard_normal((n, n, n))
-    plan = planlib.make_fft3d_plan(n, mesh, method="stockham", use_kernel=True)
+    plan = planlib.make_fft3d_plan(n, mesh, method="stockham",
+                                   kernel="pallas")
     re, im = (jax.device_put(a, plan.sharding()) for a in tw.to_planar(x))
     fwd, _, _ = dist.make_fft(plan)
     yr, yi = jax.jit(fwd)(re, im)

@@ -1,11 +1,23 @@
 """Pallas kernel correctness: shape/dtype sweeps vs the ref.py oracle,
-executed in interpret mode (kernel body evaluated on CPU)."""
+executed in interpret mode (kernel body evaluated on CPU), plus the
+kernel-tier dispatch contract (fused superstep kernel bit-identical to
+the jnp reference; per-backend 'auto' resolution)."""
+import functools
+import os
+import subprocess
+import sys
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import fft1d as _f1
 from repro.core import twiddle as tw
-from repro.kernels import fft_matmul, fft_pencil, ops, ref
+from repro.fft import methods
+from repro.kernels import fft_fused, fft_matmul, fft_pencil, ops, ref
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 RNG = np.random.default_rng(7)
 
@@ -119,3 +131,137 @@ def test_fft_block_kernel_vs_numpy():
     got = np.asarray(y[0]) + 1j * np.asarray(y[1])
     want = np.fft.fft(z, axis=-1)
     np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Kernel tier: fused twiddle+transpose superstep + per-backend dispatch
+# ---------------------------------------------------------------------------
+
+def _bitwise(got, want, name):
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape, f"{name}: {got.shape} != {want.shape}"
+    assert np.array_equal(got, want), (
+        f"{name}: max abs diff {np.max(np.abs(got - want)):.3e} "
+        "(not bitwise)")
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+@pytest.mark.parametrize("b", [5, 8, 17])
+@pytest.mark.parametrize("inverse", [False, True])
+@pytest.mark.parametrize("with_w", [False, True])
+def test_fused_kernel_bitwise_vs_reference(n, b, inverse, with_w):
+    """Interpret-mode fused kernel == jitted jnp reference, bit for bit
+    (incl. batch remainders that don't divide block_b)."""
+    re, im = tw.to_planar(_rand((b, n)))
+    wr = wi = None
+    if with_w:
+        wr, wi = tw.to_planar(_rand((b, n)))
+    want = jax.jit(functools.partial(
+        _f1.fft_twiddle_transpose, inverse=inverse))(re, im, wr, wi)
+    got = fft_fused.fft_twiddle_transpose(re, im, wr, wi, inverse=inverse,
+                                          interpret=True)
+    assert got[0].shape == (n, b)
+    for g, w, nm in zip(got, want, ("re", "im")):
+        _bitwise(g, w, f"fused n={n} b={b} inv={inverse} w={with_w} {nm}")
+
+
+def test_fused_kernel_lead_dims_and_broadcast_twiddle():
+    """Lead dims vectorize over the grid; a (1, n)-broadcast twiddle is
+    accepted like the jnp reference accepts it."""
+    n, b = 64, 6
+    re, im = tw.to_planar(_rand((2, 3, b, n)))
+    wr, wi = tw.to_planar(_rand((1, n)))
+    want = jax.jit(_f1.fft_twiddle_transpose)(re, im, wr, wi)
+    got = fft_fused.fft_twiddle_transpose(re, im, wr, wi, interpret=True)
+    assert got[0].shape == (2, 3, n, b)
+    for g, w, nm in zip(got, want, ("re", "im")):
+        _bitwise(g, w, f"fused lead-dims {nm}")
+
+
+def test_fused_kernel_rejects_rank1():
+    re, im = tw.to_planar(_rand((32,)))
+    with pytest.raises(ValueError):
+        fft_fused.fft_twiddle_transpose(re, im, interpret=True)
+
+
+def test_resolve_kernel_per_backend():
+    st = methods.resolve("stockham", 64)
+    assert methods.resolve_kernel("reference", st, "cpu") == "reference"
+    assert methods.resolve_kernel("pallas", st, "cpu") == "pallas"
+    # 'auto' takes the Pallas tier only where it lowers natively
+    assert methods.resolve_kernel("auto", st, "cpu") == "reference"
+    assert methods.resolve_kernel("auto", st, "gpu") == "pallas"
+    assert methods.resolve_kernel("auto", st, "cuda") == "pallas"
+    assert methods.resolve_kernel("auto", st, "tpu") == "pallas"
+    assert methods.resolve_kernel("auto", st, "mystery") == "reference"
+    # a method without a kernel for the backend always falls back
+    direct = methods.resolve("direct", 24)
+    assert methods.resolve_kernel("pallas", direct, "tpu") == "reference"
+    assert methods.resolve_kernel("auto", direct, "gpu") == "reference"
+    with pytest.raises(ValueError):
+        methods.resolve_kernel("mosaic", st)
+
+
+def test_default_interpret_env_override(monkeypatch):
+    monkeypatch.delenv(methods.KERNEL_INTERPRET_ENV, raising=False)
+    assert methods.default_interpret("cpu") is True
+    assert methods.default_interpret("gpu") is False
+    assert methods.default_interpret("tpu") is False
+    monkeypatch.setenv(methods.KERNEL_INTERPRET_ENV, "1")
+    assert methods.default_interpret("tpu") is True
+    monkeypatch.setenv(methods.KERNEL_INTERPRET_ENV, "0")
+    assert methods.default_interpret("cpu") is False
+    monkeypatch.setenv(methods.KERNEL_INTERPRET_ENV, "")
+    assert methods.default_interpret("cpu") is True
+
+
+@pytest.mark.parametrize("inverse", [False, True])
+def test_apply_pallas_tier_bitwise_stockham(inverse):
+    """methods.apply kernel='pallas' (interpret) == kernel='reference',
+    both jitted — the contract the distributed plans rely on."""
+    n = 128
+    re, im = tw.to_planar(_rand((6, n)))
+    tiers = {
+        t: jax.jit(functools.partial(methods.apply, method="stockham",
+                                     kernel=t, inverse=inverse))(re, im)
+        for t in ("reference", "pallas")
+    }
+    for g, w, nm in zip(tiers["pallas"], tiers["reference"], ("re", "im")):
+        _bitwise(g, w, f"apply stockham inv={inverse} {nm}")
+
+
+@pytest.mark.parametrize("method", ["four_step", "block"])
+def test_apply_pallas_tier_allclose(method):
+    """Non-stockham kernels use different op orders — allclose, not
+    bitwise."""
+    n = 256
+    re, im = tw.to_planar(_rand((4, n)))
+    ref_out = methods.apply(re, im, method=method, kernel="reference")
+    pal_out = methods.apply(re, im, method=method, kernel="pallas")
+    for g, w in zip(pal_out, ref_out):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=2e-3)
+
+
+def test_apply_auto_tier_is_reference_on_cpu():
+    n = 64
+    re, im = tw.to_planar(_rand((3, n)))
+    auto = jax.jit(functools.partial(methods.apply, method="stockham",
+                                     kernel="auto"))(re, im)
+    ref_out = jax.jit(functools.partial(methods.apply, method="stockham",
+                                        kernel="reference"))(re, im)
+    for g, w, nm in zip(auto, ref_out, ("re", "im")):
+        _bitwise(g, w, f"apply auto==reference {nm}")
+
+
+@pytest.mark.slow
+def test_kernel_tier_16_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_kernel_tier_worker.py")],
+        capture_output=True, text=True, env=env, timeout=1800)
+    assert r.returncode == 0, (
+        f"STDOUT:\n{r.stdout[-4000:]}\nSTDERR:\n{r.stderr[-4000:]}")
+    assert "KERNEL_TIER_WORKER_OK" in r.stdout
+    assert r.stdout.count("PASS") >= 18

@@ -343,6 +343,100 @@ def test_plan_rejects_unknown_wire_dtype():
         fft.plan((32, 32, 32), mesh, wire_dtype='fp8')
 
 
+# ---------------------------------------------------------------------------
+# kernel tier: plan option, deprecated alias, schedule-table tag
+# ---------------------------------------------------------------------------
+
+def test_with_options_roundtrips_kernel_tier():
+    """Regression: the kernel tier survives ``with_options`` re-plans,
+    like comm/wire/compute-dtype (same contract, same test shape)."""
+    import repro.fft as fft
+    mesh = _abstract_mesh(4, 4)
+    p = fft.plan((32, 32, 32), mesh, method='stockham', kernel='pallas')
+    q = p.with_options(donate=False)
+    assert q.kernel == p.kernel == 'pallas'
+    assert q.resolved_kernel == 'pallas'
+    r = q.with_options(kernel='reference')
+    assert r.kernel == 'reference' and r.comm == p.comm
+    assert 'pallas' in repr(p)
+    # rank-1 and real plans carry the tier too
+    p1 = fft.plan((4096,), mesh, kernel='pallas')
+    assert p1.with_options(overlap_chunks=4).kernel == 'pallas'
+    pr = fft.rplan((32, 32, 32), mesh, kernel='pallas')
+    assert pr.with_options(real=False).kernel == 'pallas'
+    # 'auto' resolves to 'reference' on this CPU host
+    pa = fft.plan((32, 32, 32), mesh)
+    assert pa.kernel == 'auto' and pa.resolved_kernel == 'reference'
+
+
+def test_plan_rejects_unknown_kernel_tier():
+    import repro.fft as fft
+    mesh = _abstract_mesh(4, 4)
+    with pytest.raises(ValueError, match='kernel'):
+        fft.plan((32, 32, 32), mesh, kernel='mosaic')
+
+
+def test_use_kernel_deprecated_alias_warns_once_and_maps():
+    import repro.fft as fft
+    from repro.core import _deprecated
+    mesh = _abstract_mesh(4, 4)
+    _deprecated.reset('repro.fft.plan(use_kernel=)')
+    with pytest.warns(DeprecationWarning, match="kernel='pallas'"):
+        p = fft.plan((32, 32, 32), mesh, use_kernel=True)
+    assert p.kernel == 'pallas'
+    # one-shot: a second deprecated call stays silent
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter('error')
+        p2 = fft.plan((32, 32, 32), mesh, use_kernel=True)
+    assert p2.kernel == 'pallas'
+    # use_kernel=False is inert: the kernel option passes through
+    p3 = fft.plan((32, 32, 32), mesh, kernel='reference', use_kernel=False)
+    assert p3.kernel == 'reference'
+
+
+def test_cost_report_shows_kernel_tier():
+    import repro.fft as fft
+    mesh = _abstract_mesh(4, 4)
+    rep = fft.plan((32, 32, 32), mesh, method='stockham',
+                   kernel='pallas').cost_report()
+    assert 'kernel=pallas' in rep
+    assert '(stockham/pallas)' in rep
+    rep_ref = fft.plan((32, 32, 32), mesh, method='stockham').cost_report()
+    assert 'kernel=reference' in rep_ref
+    assert '(stockham/reference)' in rep_ref
+
+
+def test_schedule_table_kernel_tag():
+    """Kernel-tagged autotune rows answer only same-tier lookups —
+    mirrors the wire-tag contract."""
+    mk = dict(mesh='4x4', shape='32x32x32', kind='complex',
+              strategy='all_to_all', coalesce_width=8, overlap_chunks=2,
+              us_per_request=10.0)
+    tiered = dict(mk, kernel='pallas', coalesce_width=4,
+                  us_per_request=9.0)
+    tbl = ccost.ScheduleTable([mk, tiered])
+    assert len(tbl) == 2            # distinct keys, no clobbering
+    ms = {'x': 4, 'y': 4}
+    ref = tbl.lookup(ms, (32, 32, 32), 'complex', 'all_to_all')
+    assert ref is not None and ref['coalesce_width'] == 8
+    pal = tbl.lookup(ms, (32, 32, 32), 'complex', 'all_to_all',
+                     kernel='pallas')
+    assert pal is not None and pal['coalesce_width'] == 4
+    # no measured row for an unknown tier — no silent cross-tier answers
+    assert tbl.lookup(ms, (32, 32, 32), 'complex', 'all_to_all',
+                      kernel='mosaic') is None
+    # wire and kernel tags compose into one key space
+    both = dict(mk, wire='fp16', kernel='pallas', coalesce_width=16)
+    tbl2 = ccost.ScheduleTable([mk, tiered, both])
+    assert len(tbl2) == 3
+    hit = tbl2.lookup(ms, (32, 32, 32), 'complex', 'all_to_all',
+                      wire='fp16', kernel='pallas')
+    assert hit is not None and hit['coalesce_width'] == 16
+    assert tbl2.lookup(ms, (32, 32, 32), 'complex', 'all_to_all',
+                       wire='fp16') is None
+
+
 def test_auto_select_with_measured_tree_prefers_it():
     """select(): a pod tree with (much faster) measured rows on this
     mesh wins comm='auto'; without measured rows no tree is even
