@@ -49,8 +49,8 @@ import jax                                   # noqa: E402
 import numpy as np                           # noqa: E402
 
 from repro.comm import cost as ccost         # noqa: E402
-from repro.serve import (AdaptivePolicy, FFTEngine,  # noqa: E402
-                         FFTService, SLOClass, TenantConfig)
+from repro.serve import (AdaptivePolicy, FaultPlan, FaultPoint,  # noqa: E402
+                         FFTEngine, FFTService, SLOClass, TenantConfig)
 from benchmarks.common import emit           # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "..",
@@ -143,9 +143,74 @@ def run_cell(eng, sock, config, reqs, offsets, repeats):
     return best, policy
 
 
+def _chaos_plan():
+    """The degraded-mode schedule: scripted (every-Nth) faults so the
+    row is reproducible — no fire at hit 0, the handshake survives."""
+    return FaultPlan(seed=3, points=[
+        FaultPoint('service.writer', 'drop', every=7, limit=8),
+        FaultPoint('service.writer', 'truncate', every=11, limit=4),
+        FaultPoint('engine.drainer', 'stall', every=9, delay_s=0.02,
+                   limit=6),
+        FaultPoint('engine.dispatch', 'raise', every=13, limit=2),
+    ])
+
+
+def run_chaos_cell(eng, sock, reqs, plan):
+    """One degraded-mode cell: the resilient client loop
+    (reconnect + idempotent resubmit) against an armed fault plan;
+    per-request latency measured around ``transform``. The cell
+    asserts exactly-once delivery — every request served, none
+    failed — and reports how much the faults cost."""
+    eng.set_drainer(watermark=4, max_wait_ms=5.0)
+    svc = FFTService(
+        engine=eng, policy=None, persist_policy=False, faults=plan,
+        slo_classes={'bench': SLOClass('bench', 1e9, 5.0)},
+        tenants=[TenantConfig('bench', max_inflight=1000, slo='bench')],
+    ).start(sock)
+    lats = []
+    try:
+        with svc.local_client('bench') as c:
+            c.transform(reqs[:2], timeout=120.0)       # warm compiles
+            t0 = time.perf_counter()
+            for x in reqs:
+                s = time.perf_counter()
+                c.transform([x], timeout=120.0, deadline_s=120.0)
+                lats.append((time.perf_counter() - s) * 1e3)
+            wall = time.perf_counter() - t0
+            reconnects = c.reconnects
+        tm = svc.metrics()['tenants']['bench']
+        assert tm['failed'] == 0, f"degraded mode lost work: {tm}"
+        fired = 0 if plan is None else plan.total_fired()
+    finally:
+        svc.close(drain=True)
+        eng.faults = None
+    return dict(mean_ms=round(sum(lats) / len(lats), 3),
+                p99_ms=round(p99(lats), 3), wall_s=round(wall, 3),
+                reconnects=reconnects, faults_fired=fired)
+
+
 def _row_key(r):
     return (r.get('mode'), r.get('trace'), r.get('config'),
             str(r.get('shape')))
+
+
+def _write_results(args, results):
+    """Write (or --refresh merge) the rows into the BENCH JSON."""
+    if args.refresh and os.path.exists(OUT):
+        try:
+            with open(OUT) as f:
+                old = json.load(f).get('results', [])
+        except (OSError, ValueError):
+            old = []
+        fresh = {_row_key(r) for r in results}
+        kept = [r for r in old if _row_key(r) not in fresh]
+        results = kept + results
+        print(f"# --refresh: kept {len(kept)} existing rows")
+    with open(OUT, "w") as f:
+        json.dump(dict(benchmark="serve_service",
+                       backend=jax.default_backend(),
+                       results=results), f, indent=1)
+    print(f"wrote {os.path.normpath(OUT)} ({len(results)} rows)")
 
 
 def main(argv=None):
@@ -159,6 +224,9 @@ def main(argv=None):
                          'BENCH_serve_schedule.json')
     ap.add_argument('--smoke', action='store_true',
                     help='tiny traces, 1 repeat, no win assertion (CI)')
+    ap.add_argument('--chaos', action='store_true',
+                    help='degraded-mode rows only: the resilient client '
+                         'against an armed fault plan vs a clean run')
     args = ap.parse_args(argv)
     repeats = 1 if args.smoke else args.repeats
     n_overhead = 12 if args.smoke else args.requests
@@ -171,8 +239,39 @@ def main(argv=None):
           f"({jax.default_backend()})")
     results = []
 
+    beats = []
     with FFTEngine(mesh=mesh, max_coalesce=MAX_COALESCE, max_wait_ms=20.0,
                    schedule_table=None) as eng:
+        if args.chaos:
+            # -- degraded mode: same stream, clean vs armed fault plan.
+            # The interesting numbers are the latency cost of riding
+            # out drops/truncations/stalls and that NOTHING is lost.
+            n = 24 if args.smoke else 48
+            reqs = make_requests(n, seed=23)
+            cells = {}
+            for label in ('clean', 'degraded'):
+                plan = _chaos_plan() if label == 'degraded' else None
+                cell = run_chaos_cell(eng, sock, reqs, plan)
+                cells[label] = cell
+                results.append(dict(mode='chaos', trace='degraded_mode',
+                                    config=label, shape=list(SHAPE),
+                                    mesh="4x4", n_requests=n, **cell))
+                emit(f"serve_service/chaos/{label}",
+                     cell['mean_ms'] * 1e3,
+                     f"p99={cell['p99_ms']:.1f}ms "
+                     f"reconnects={cell['reconnects']} "
+                     f"faults={cell['faults_fired']}")
+            slow = cells['degraded']['mean_ms'] / max(
+                cells['clean']['mean_ms'], 1e-9)
+            print(f"# chaos: degraded {cells['degraded']['mean_ms']:.2f}ms"
+                  f" vs clean {cells['clean']['mean_ms']:.2f}ms "
+                  f"({slow:.2f}x, {cells['degraded']['reconnects']} "
+                  f"reconnects, {cells['degraded']['faults_fired']} "
+                  f"faults fired, zero lost)")
+            assert cells['degraded']['faults_fired'] > 0, \
+                "chaos cell fired no faults"
+            _write_results(args, results)
+            return
         # -- 1. socket front-end overhead (sequential stream) ------------
         reqs = make_requests(n_overhead)
         eng.set_drainer(watermark=1, max_wait_ms=1.0)
@@ -247,21 +346,7 @@ def main(argv=None):
                 print(f"# persisted {len(rows)} load-level rows into "
                       f"{os.path.normpath(path)}")
 
-    if args.refresh and os.path.exists(OUT):
-        try:
-            with open(OUT) as f:
-                old = json.load(f).get('results', [])
-        except (OSError, ValueError):
-            old = []
-        fresh = {_row_key(r) for r in results}
-        kept = [r for r in old if _row_key(r) not in fresh]
-        results = kept + results
-        print(f"# --refresh: kept {len(kept)} existing rows")
-    with open(OUT, "w") as f:
-        json.dump(dict(benchmark="serve_service",
-                       backend=jax.default_backend(),
-                       results=results), f, indent=1)
-    print(f"wrote {os.path.normpath(OUT)} ({len(results)} rows)")
+    _write_results(args, results)
     if beats:
         print(f"# adaptive beat every fixed setting on: {beats}")
     if not args.smoke:

@@ -5,7 +5,11 @@ Three entry points:
 * ``serve`` — bind an :class:`repro.serve.FFTService` to a unix socket
   (or TCP ``host:port``) and serve until interrupted (or
   ``--duration`` elapses). Tenants are declared as
-  ``name[:rate_per_s[:burst[:max_inflight[:slo]]]]``.
+  ``name[:rate_per_s[:burst[:max_inflight[:slo]]]]`` and/or a
+  ``--tenant-file`` JSON list of TenantConfig dicts; ``SIGHUP``
+  re-reads the file and hot-swaps the tenant set atomically (the
+  in-band equivalent of a client RELOAD frame) without dropping
+  inflight requests.
 * ``client`` — connect as one tenant, stream a mixed workload of
   complex and real transforms, verify every result numerically, and
   print the server's metrics document.
@@ -26,6 +30,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import signal
 import sys
 import tempfile
 import threading
@@ -67,6 +72,18 @@ def _tenant_specs(spec: str):
     return out
 
 
+def _load_tenant_file(path: str):
+    """A JSON list of TenantConfig dicts — the durable, reloadable
+    form (``TenantConfig.to_dict`` round-trips through it)."""
+    from repro.serve import TenantConfig
+    with open(path) as f:
+        specs = json.load(f)
+    if not isinstance(specs, list):
+        raise ValueError(f"{path}: expected a JSON list of tenant "
+                         f"configs, got {type(specs).__name__}")
+    return [TenantConfig.from_dict(d) for d in specs]
+
+
 def _mixed_requests(rng, shapes, count):
     """Alternating complex/real operands over the shape rotation."""
     import numpy as np
@@ -96,18 +113,39 @@ def _verify(x, y) -> float:
 def cmd_serve(args) -> None:
     from repro.serve import FFTService
     mesh = _mesh(args.mesh)
+    tenants = _tenant_specs(args.tenants)
+    if args.tenant_file:
+        tenants += _load_tenant_file(args.tenant_file)
     svc = FFTService(
-        mesh, tenants=_tenant_specs(args.tenants),
+        mesh, tenants=tenants,
         max_inflight=args.max_inflight,
         policy=None if args.no_adaptive else 'adaptive',
         allow_unknown_tenants=args.allow_unknown or None,
         max_coalesce=args.max_coalesce,
+        heartbeat_timeout_s=args.heartbeat_timeout or None,
         schedule_table=args.schedules if args.schedules else 'auto',
     ).start(_address(args.address))
     print(f'[fft_service] serving on {svc.address!r} '
           f'(mesh {args.mesh}, tenants '
-          f'{sorted(t.name for t in _tenant_specs(args.tenants)) or "open"})',
+          f'{sorted(t.name for t in tenants) or "open"})',
           flush=True)
+    if args.tenant_file and hasattr(signal, 'SIGHUP'):
+        def _on_hup(signum, frame):
+            # hot reload: re-read the file and swap the tenant set
+            # atomically; inflight requests ride through untouched
+            try:
+                gen = svc.reload_tenants(
+                    _load_tenant_file(args.tenant_file),
+                    retire_missing=True)
+                print(f'[fft_service] SIGHUP: tenant config reloaded '
+                      f'from {args.tenant_file} (generation {gen})',
+                      flush=True)
+            except Exception as exc:
+                # a malformed file must never take the service down:
+                # the old config stays in force
+                print(f'[fft_service] SIGHUP reload FAILED, keeping '
+                      f'previous config: {exc}', flush=True)
+        signal.signal(signal.SIGHUP, _on_hup)
     try:
         if args.duration:
             time.sleep(args.duration)
@@ -195,6 +233,16 @@ def cmd_smoke(args) -> None:
     ra = RetryAfter('rate', 12.5, 'alice')
     assert ra.retry_after_ms == 12.5 and ra.reason == 'rate'
 
+    # hot tenant reload swaps configs in place (generation bumps, the
+    # re-weighted tenant is visible in metrics, nothing drops)
+    gen = svc.reload_tenants(
+        [TenantConfig('alice', max_inflight=8, weight=2.0),
+         TenantConfig('bob', max_inflight=8, slo='interactive')])
+    assert gen == 1, gen
+    rm = svc.metrics()
+    assert rm['service']['reload_generation'] == 1
+    assert rm['tenants']['alice']['weight'] == 2.0
+
     svc.close(drain=True)
     assert svc._inflight_total == 0
     assert svc.engine.closed
@@ -219,6 +267,12 @@ def main(argv=None) -> None:
     s.add_argument('--devices', type=int, default=0)
     s.add_argument('--tenants', default='',
                    help='name[:rate[:burst[:max_inflight[:slo]]]],...')
+    s.add_argument('--tenant-file', default='',
+                   help='JSON list of TenantConfig dicts; SIGHUP '
+                        're-reads it and hot-swaps the tenant set')
+    s.add_argument('--heartbeat-timeout', type=float, default=0,
+                   help='reap connections idle this many seconds '
+                        '(0: never)')
     s.add_argument('--max-inflight', type=int, default=64)
     s.add_argument('--max-coalesce', type=int, default=16)
     s.add_argument('--no-adaptive', action='store_true')

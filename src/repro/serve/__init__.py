@@ -1,12 +1,15 @@
 from repro.serve.engine import make_prefill_step, make_decode_step, ServeEngine
+from repro.serve.faults import FaultInjected, FaultPlan, FaultPoint
 from repro.serve.fft_engine import FFTEngine, FFTTicket, ResultTimeout
 from repro.serve.plan_cache import LRUPlanCache
 from repro.serve.policy import AdaptivePolicy, DrainerDecision, RateEstimator
-from repro.serve.service import (FFTClient, FFTService, RetryAfter, SLOClass,
+from repro.serve.service import (BrownoutBreaker, FFTClient, FFTService,
+                                 RetryAfter, SLOClass, ServiceUnavailable,
                                  TenantConfig, default_slo_classes)
 
-__all__ = ['AdaptivePolicy', 'DrainerDecision', 'FFTClient', 'FFTEngine',
-           'FFTService', 'FFTTicket', 'LRUPlanCache', 'RateEstimator',
-           'ResultTimeout', 'RetryAfter', 'SLOClass', 'ServeEngine',
-           'TenantConfig', 'default_slo_classes', 'make_decode_step',
-           'make_prefill_step']
+__all__ = ['AdaptivePolicy', 'BrownoutBreaker', 'DrainerDecision',
+           'FaultInjected', 'FaultPlan', 'FaultPoint', 'FFTClient',
+           'FFTEngine', 'FFTService', 'FFTTicket', 'LRUPlanCache',
+           'RateEstimator', 'ResultTimeout', 'RetryAfter', 'SLOClass',
+           'ServeEngine', 'ServiceUnavailable', 'TenantConfig',
+           'default_slo_classes', 'make_decode_step', 'make_prefill_step']

@@ -349,6 +349,13 @@ class FFTEngine:
         (``BENCH_serve_schedule.json``, override with the
         ``REPRO_SERVE_SCHEDULES`` env var, '' disables); a path string
         uses that file; None disables persisted seeding.
+      faults: optional :class:`repro.serve.faults.FaultPlan` — the
+        deterministic fault-injection seam. Site ``engine.dispatch``
+        fires inside each coalesced group's dispatch (a ``raise`` fire
+        exercises the drainer's blame/retry path exactly like a real
+        executable failure); site ``engine.drainer`` fires at the top
+        of every drainer pass (a ``stall`` fire sleeps there,
+        exercising deadline overruns and queue growth).
       **plan_kwargs: forwarded to ``fft.plan`` for every plan the
         engine builds (method, comm, compute_dtype, wire_dtype,
         padded_spectrum, ...). ``batch_spec`` is not allowed — the
@@ -367,6 +374,7 @@ class FFTEngine:
                  plan_cache_bytes: Optional[int] = None,
                  on_plan_evict=None,
                  schedule_table: Optional[str] = 'auto',
+                 faults=None,
                  **plan_kwargs):
         if 'batch_spec' in plan_kwargs:
             raise ValueError("the engine owns the leading batch axis; "
@@ -387,6 +395,7 @@ class FFTEngine:
         self.watermark = watermark
         self.retries = int(retries)
         self.on_plan_evict = on_plan_evict
+        self.faults = faults
         self._plan_kwargs = dict(plan_kwargs)
         self._schedule_path = (None if schedule_table is None else
                                ccost.schedule_table_path(
@@ -880,6 +889,11 @@ class FFTEngine:
                    state_key: Optional[tuple] = None):
         """Execute one coalesced group; returns the per-request outputs
         as a tuple (planar results as a (re..., im...) flat tuple)."""
+        if self.faults is not None:
+            # injected dispatch failures ride the SAME path a real
+            # executable crash would: the pipeline's on_error blames
+            # this group, bystanders re-queue for free
+            self.faults.perhaps_raise('engine.dispatch')
         w = len(ops)
         if planar:
             flat = tuple(o[0] for o in ops) + tuple(o[1] for o in ops)
@@ -1051,6 +1065,10 @@ class FFTEngine:
         Never blocks idle — the weakref loop in :func:`_drainer_main`
         owns the waiting, so this frame (which pins the engine) stays
         short-lived."""
+        if self.faults is not None:
+            # injected drainer stall: the serving loop goes dark for
+            # delay_s while queues grow — deadline/no-hang tests
+            self.faults.perhaps_stall('engine.drainer')
         with self._cond:
             final = self._closed
         with self._dispatch_lock:

@@ -51,12 +51,20 @@ class RateEstimator:
 
     Not thread-safe by itself — callers serialize (the service observes
     under its admission lock).
+
+    ``clock`` replaces ``time.monotonic`` as the default time source
+    (the fault-injection seam: a skewed clock from
+    :meth:`repro.serve.faults.FaultPlan.clock` exercises the
+    robustness below). A BACKWARD step is absorbed, never amplified:
+    ``_decay_to`` only moves time forward, so a skewed read can stall
+    the estimate but cannot make it negative or explode it.
     """
 
-    def __init__(self, tau_s: float = 0.5):
+    def __init__(self, tau_s: float = 0.5, *, clock=None):
         if tau_s <= 0:
             raise ValueError(f"tau_s must be > 0, got {tau_s}")
         self.tau_s = float(tau_s)
+        self._clock = time.monotonic if clock is None else clock
         self._count = 0.0
         self._t: Optional[float] = None
 
@@ -67,10 +75,10 @@ class RateEstimator:
             self._t = now
 
     def observe(self, n: int = 1, now: Optional[float] = None) -> None:
-        """Record ``n`` arrivals at ``now`` (default: monotonic clock)."""
+        """Record ``n`` arrivals at ``now`` (default: the clock)."""
         if n < 0:
             raise ValueError(f"n must be >= 0, got {n}")
-        now = time.monotonic() if now is None else now
+        now = self._clock() if now is None else now
         self._decay_to(now)
         self._count += n
 
@@ -79,7 +87,7 @@ class RateEstimator:
         observation."""
         if self._t is None:
             return 0.0
-        now = time.monotonic() if now is None else now
+        now = self._clock() if now is None else now
         self._decay_to(now)
         return self._count / self.tau_s
 
@@ -106,11 +114,17 @@ class AdaptivePolicy:
       overlap_chunks: recorded into persisted rows (the in-call
         pipelining depth the engine serves with; purely descriptive
         here).
+      clock: replaces ``time.monotonic`` for every internal time read
+        (rate estimation and level bucketing) — the fault-injection
+        clock-skew seam. Decisions stay clamped to
+        ``[1, max_coalesce]`` x ``[min_wait_ms, max_wait_ms]`` no
+        matter what the clock does.
     """
 
     def __init__(self, max_coalesce: int = 16, *,
                  min_wait_ms: float = 0.5, max_wait_ms: float = 50.0,
-                 tau_s: float = 0.5, overlap_chunks: int = 1):
+                 tau_s: float = 0.5, overlap_chunks: int = 1,
+                 clock=None):
         if max_coalesce < 1:
             raise ValueError(f"max_coalesce must be >= 1, got {max_coalesce}")
         if not 0 < min_wait_ms <= max_wait_ms:
@@ -121,7 +135,8 @@ class AdaptivePolicy:
         self.min_wait_ms = float(min_wait_ms)
         self.max_wait_ms = float(max_wait_ms)
         self.overlap_chunks = int(overlap_chunks)
-        self.estimator = RateEstimator(tau_s)
+        self.clock = time.monotonic if clock is None else clock
+        self.estimator = RateEstimator(tau_s, clock=self.clock)
         #: the top load level: widths are 2**level capped at
         #: max_coalesce, so levels beyond ceil(log2(max_coalesce))
         #: collapse onto the cap.

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import json
 import struct
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -50,16 +51,23 @@ MAX_FRAME_BYTES = 1 << 30
 
 # -- message types ----------------------------------------------------------
 
-HELLO = 1          # client -> server: {tenant}
+HELLO = 1          # client -> server: {tenant, client_id?}
 HELLO_OK = 2       # server -> client: {tenant, slo_classes, quotas, ...}
-SUBMIT = 3         # client -> server: {req_id, direction, real, slo} + arrays
-RESULT = 4         # server -> client: {req_id, form} + arrays
+SUBMIT = 3         # client -> server: {req_id, direction, real, slo,
+                   #                    key?} + arrays (key: idempotency)
+RESULT = 4         # server -> client: {req_id, form, dedup?} + arrays
 RETRY_AFTER = 5    # server -> client: {req_id, reason, retry_after_ms}
 ERROR = 6          # server -> client: {req_id?, kind, error}
 METRICS = 7        # client -> server: {req_id}
 METRICS_OK = 8     # server -> client: {req_id, metrics}
 DRAIN = 9          # client -> server: {req_id} — "I am done submitting"
 DRAIN_OK = 10      # server -> client: {req_id} — that client's inflight == 0
+HEARTBEAT = 11     # client -> server: {} — keepalive (refreshes liveness)
+HEARTBEAT_OK = 12  # server -> client: {} — the echo
+RELOAD = 13        # client -> server: {req_id, tenants: [{...}]} — hot
+                   #                   tenant-config swap (admin tenants only)
+RELOAD_OK = 14     # server -> client: {req_id, generation, added, updated,
+                   #                    removed}
 
 MSG_NAMES = {v: k for k, v in list(globals().items())
              if k.isupper() and isinstance(v, int) and k != 'PROTOCOL_VERSION'
@@ -242,9 +250,28 @@ def _recv_exact(sock, n: int, *, at_boundary: bool) -> Optional[bytes]:
     return b''.join(chunks)
 
 
-def recv_frame(sock) -> Optional[Tuple[int, dict, List[np.ndarray]]]:
+def recv_frame(sock, *, faults=None,
+               site: str = 'protocol.recv'
+               ) -> Optional[Tuple[int, dict, List[np.ndarray]]]:
     """One frame from a socket: (msg type, metadata, arrays), or None
-    on a clean close at a frame boundary."""
+    on a clean close at a frame boundary.
+
+    ``faults`` is an optional :class:`repro.serve.faults.FaultPlan`:
+    before the header read, a ``drop`` fire hard-closes the socket (the
+    caller observes the close), a ``delay`` fire sleeps (slow peer),
+    a ``raise`` fire raises :class:`~repro.serve.faults.FaultInjected`.
+    """
+    if faults is not None:
+        pt = faults.draw(site)
+        if pt is not None:
+            from repro.serve import faults as _f
+            if pt.action == 'drop':
+                _f.kill_socket(sock)
+                return None            # the peer is gone: a closed link
+            if pt.action in ('delay', 'stall'):
+                time.sleep(pt.delay_s)
+            elif pt.action == 'raise':
+                raise _f.FaultInjected(site, pt.note)
     head = _recv_exact(sock, _HEADER.size, at_boundary=True)
     if head is None:
         return None
@@ -255,7 +282,37 @@ def recv_frame(sock) -> Optional[Tuple[int, dict, List[np.ndarray]]]:
 
 
 def send_frame(sock, msg_type: int, meta: Optional[dict] = None,
-               arrays: Sequence = ()) -> None:
+               arrays: Sequence = (), *, faults=None,
+               site: str = 'protocol.send') -> None:
     """Pack and send one frame (the caller serializes concurrent
-    senders on one socket)."""
-    sock.sendall(pack_frame(msg_type, meta, arrays))
+    senders on one socket).
+
+    ``faults`` is an optional :class:`repro.serve.faults.FaultPlan`:
+    a ``drop`` fire hard-closes the socket and raises
+    ``ConnectionResetError``; a ``truncate`` fire sends a strict
+    prefix of the frame then closes (the peer observes a typed
+    mid-frame truncation); ``delay`` sleeps before the send;
+    ``raise`` raises :class:`~repro.serve.faults.FaultInjected`.
+    """
+    buf = pack_frame(msg_type, meta, arrays)
+    if faults is not None:
+        pt = faults.draw(site)
+        if pt is not None:
+            from repro.serve import faults as _f
+            if pt.action == 'drop':
+                _f.kill_socket(sock)
+                raise ConnectionResetError(
+                    f"injected connection drop at {site!r}")
+            if pt.action == 'truncate':
+                try:
+                    sock.sendall(buf[:max(1, len(buf) // 2)])
+                except OSError:
+                    pass
+                _f.kill_socket(sock)
+                raise ConnectionResetError(
+                    f"injected truncated frame at {site!r}")
+            if pt.action in ('delay', 'stall'):
+                time.sleep(pt.delay_s)
+            elif pt.action == 'raise':
+                raise _f.FaultInjected(site, pt.note)
+    sock.sendall(buf)

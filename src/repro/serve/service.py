@@ -33,9 +33,42 @@ asynchronously as they resolve. Production concerns are the feature:
   waits for every admitted request to resolve, persists the policy,
   and closes the engine it owns.
 
+Partial failure is the steady state of an always-on service, so the
+front-end carries its own resilience machinery (validated by the
+deterministic fault plane in :mod:`repro.serve.faults` and the chaos
+harness ``tests/_service_chaos_worker.py``):
+
+* **per-tenant fair scheduling** — admitted requests flow through
+  weighted deficit round-robin over per-tenant sub-queues
+  (:class:`_FairScheduler`) before reaching the engine's drainer, so
+  an admitted burst from one tenant can no longer push another
+  tenant's whole window behind it (admission quotas bound *how much*
+  enters; the scheduler bounds *in what order*).
+* **idempotent resubmit** — clients stamp each request with a dedup
+  ``key``; the service keeps a bounded server-side dedup window
+  (:class:`_DedupWindow`): a resubmitted completed request is
+  re-delivered from cache (bit-identical, never recomputed), a
+  resubmitted in-flight request re-attaches delivery to the new
+  connection (never duplicated). With heartbeats and dead-connection
+  reaping, an :class:`FFTClient` survives a mid-flight connection
+  drop with exactly-once results.
+* **brownout degradation** — a circuit breaker
+  (:class:`BrownoutBreaker`) tied to the adaptive policy's load level
+  and the dispatch failure stream sheds configured (default
+  ``batch``) SLO classes with typed ``RETRY_AFTER('brownout')`` under
+  sustained overload, keeping interactive traffic inside its
+  deadline, and recovers automatically through half-open probes.
+* **hot config reload** — :meth:`FFTService.reload_tenants` (driven
+  by the ``RELOAD`` frame, or SIGHUP on the launcher) atomically
+  swaps :class:`TenantConfig` entries without dropping inflight
+  requests; the reload generation is part of the metrics surface.
+
 :class:`FFTClient` is the thin matching client: ``submit`` returns a
 ticket, a reader thread demultiplexes result/backpressure frames by
-request id, and ``transform`` adds honor-the-hint retries.
+request id, and ``transform`` adds honor-the-hint retries with capped
+exponential backoff, a total-deadline budget (typed
+:class:`ServiceUnavailable` at exhaustion) and
+reconnect-and-resubmit on dropped connections.
 """
 from __future__ import annotations
 
@@ -43,16 +76,19 @@ import dataclasses
 import math
 import os
 import queue
+import random
 import socket
 import threading
 import time
-from collections import deque
+import uuid
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.comm import cost as ccost
 from repro.serve import protocol as proto
+from repro.serve.faults import FaultInjected, kill_socket
 from repro.serve.fft_engine import FFTEngine, ResultTimeout
 from repro.serve.policy import AdaptivePolicy
 
@@ -63,7 +99,9 @@ class RetryAfter(RuntimeError):
     """Typed backpressure: the service refused admission and the
     caller should retry after ``retry_after_ms``. ``reason`` is one of
     ``'rate'`` (token bucket empty), ``'tenant_quota'`` (per-tenant
-    inflight cap), ``'inflight_window'`` (the service-wide window)."""
+    inflight cap), ``'inflight_window'`` (the service-wide window) or
+    ``'brownout'`` (the circuit breaker is shedding this SLO class
+    under overload)."""
 
     def __init__(self, reason: str, retry_after_ms: float,
                  tenant: Optional[str] = None):
@@ -74,6 +112,16 @@ class RetryAfter(RuntimeError):
         self.reason = reason
         self.retry_after_ms = float(retry_after_ms)
         self.tenant = tenant
+
+
+class ServiceUnavailable(RuntimeError):
+    """The client exhausted its retry budget (attempts or total
+    deadline) without a served result. ``last_error`` carries the
+    final failure (a :class:`RetryAfter`, ``ConnectionError``, ...)."""
+
+    def __init__(self, msg: str, last_error: Optional[BaseException] = None):
+        super().__init__(msg)
+        self.last_error = last_error
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,13 +154,40 @@ class TenantConfig:
     parameterize a token bucket over *offered* requests;
     ``max_inflight`` caps this tenant's admitted-but-unresolved
     requests; ``slo`` names the default SLO class; ``token`` is an
-    optional shared secret the client must echo in HELLO."""
+    optional shared secret the client must echo in HELLO; ``weight``
+    is this tenant's fair-scheduler share (deficit round-robin
+    quantum — 2.0 drains twice as fast as 1.0 under contention);
+    ``admin`` lets the tenant drive ``RELOAD`` frames."""
     name: str
     rate_per_s: float = math.inf
     burst: int = 64
     max_inflight: int = 16
     slo: str = 'standard'
     token: Optional[str] = None
+    weight: float = 1.0
+    admin: bool = False
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"tenant {self.name!r}: weight must be > 0, "
+                             f"got {self.weight}")
+
+    def to_dict(self) -> dict:
+        """JSON-safe form (the RELOAD frame / --tenant-file format)."""
+        d = dataclasses.asdict(self)
+        if math.isinf(d['rate_per_s']):
+            d['rate_per_s'] = None
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> 'TenantConfig':
+        d = dict(d)
+        if d.get('rate_per_s') in (None, 'inf'):
+            d['rate_per_s'] = math.inf
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown TenantConfig fields {sorted(unknown)}")
+        return cls(**d)
 
 
 class _TokenBucket:
@@ -129,9 +204,12 @@ class _TokenBucket:
         if math.isinf(self.rate):
             return 0.0
         now = time.monotonic() if now is None else now
-        self.tokens = min(self.burst,
-                          self.tokens + (now - self._t) * self.rate)
-        self._t = now
+        # a skewed clock (fault plane: 'skew') may hand us time that
+        # runs backward; clamping dt at 0 means skew can only pause
+        # refill, never confiscate banked tokens or inflate the wait
+        dt = max(0.0, now - self._t)
+        self.tokens = min(self.burst, self.tokens + dt * self.rate)
+        self._t = max(self._t, now)
         if self.tokens >= 1.0:
             self.tokens -= 1.0
             return 0.0
@@ -141,7 +219,9 @@ class _TokenBucket:
 
 
 class _Tenant:
-    """Runtime state for one tenant."""
+    """Runtime state for one tenant. Survives a hot config reload:
+    :meth:`swap_cfg` replaces the policy (bucket, quota, weight)
+    while every counter and inflight request rides through."""
 
     def __init__(self, cfg: TenantConfig):
         self.cfg = cfg
@@ -150,9 +230,19 @@ class _Tenant:
         self.submitted = 0
         self.completed = 0
         self.failed = 0
+        self.scheduled = 0          # dispatched to the engine (DRR order)
+        self.retired = False        # removed by reload: no new admits
         self.rejected: Dict[str, int] = {}
         # slo name -> deque of latency_ms samples (bounded reservoir)
         self.latencies: Dict[str, deque] = {}
+
+    def swap_cfg(self, cfg: TenantConfig) -> None:
+        """Atomic-under-the-service-lock policy swap: new bucket
+        (full burst — a reload should never instantly reject),
+        counters and inflight untouched."""
+        self.cfg = cfg
+        self.bucket = _TokenBucket(cfg.rate_per_s, cfg.burst)
+        self.retired = False
 
     def record_latency(self, slo: str, ms: float) -> None:
         self.latencies.setdefault(slo, deque(maxlen=4096)).append(ms)
@@ -164,18 +254,344 @@ def _percentile(samples: Sequence[float], q: float) -> float:
     return s[min(len(s) - 1, max(0, math.ceil(q / 100.0 * len(s)) - 1))]
 
 
+class _Pending:
+    """One admitted request parked between admission and engine
+    dispatch (the fair scheduler's queue element)."""
+
+    __slots__ = ('x', 'direction', 'real', 'wait_ms', 'conn', 'tenant',
+                 'slo', 'shape_key', 'req_id', 'key', 't_submit')
+
+    def __init__(self, x, direction, real, wait_ms, conn, tenant, slo,
+                 shape_key, req_id, key, t_submit):
+        self.x = x
+        self.direction = direction
+        self.real = real
+        self.wait_ms = wait_ms
+        self.conn = conn
+        self.tenant = tenant
+        self.slo = slo
+        self.shape_key = shape_key
+        self.req_id = req_id
+        self.key = key
+        self.t_submit = t_submit
+
+
+class _FairScheduler:
+    """Weighted deficit round-robin over per-tenant sub-queues.
+
+    Admission quotas bound HOW MUCH each tenant may have unresolved;
+    this scheduler bounds IN WHAT ORDER admitted requests reach the
+    engine's (FIFO-coalescing) drainer. It holds at most ``window``
+    requests dispatched-but-unresolved; the rest wait in their
+    tenant's sub-queue and are released in DRR order — each rotation
+    grants every backlogged tenant ``weight`` units of deficit, one
+    unit buys one dispatch, an emptied queue forfeits its leftover
+    deficit (the classic no-banking rule, so an idle tenant cannot
+    save up a burst). A tenant with weight 2.0 therefore drains twice
+    as fast as a weight-1.0 tenant under contention, and a flood from
+    one tenant can no longer push another tenant's whole window behind
+    it.
+
+    Not thread-safe by itself — the service serializes calls under its
+    scheduler lock and performs the actual dispatches outside it.
+    """
+
+    def __init__(self, window: int):
+        self.window = max(1, int(window))
+        self.active = 0                        # dispatched, not yet resolved
+        self._queues: 'OrderedDict[str, deque]' = OrderedDict()
+        self._deficit: Dict[str, float] = {}
+        self._weights: Dict[str, float] = {}
+        # persistent rotation pointer: the next take() resumes at the
+        # tenant AFTER the last one served, so a tenant that fills the
+        # window never also goes first on the next turn
+        self._ring: deque = deque()
+
+    def offer(self, tenant: str, weight: float, item) -> None:
+        q = self._queues.get(tenant)
+        if q is None:
+            q = self._queues[tenant] = deque()
+            self._ring.append(tenant)
+        self._weights[tenant] = float(weight)
+        q.append(item)
+
+    def done(self) -> None:
+        self.active -= 1
+
+    def queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def take(self) -> List[tuple]:
+        """``(tenant, item)`` pairs to dispatch now, in DRR order, up
+        to the window. Increments ``active`` per pair — the caller
+        calls :meth:`done` as each resolves."""
+        out: List[tuple] = []
+        while (self.active < self.window
+               and any(self._queues.values())):
+            t = self._ring[0]
+            q = self._queues[t]
+            if not q:
+                self._deficit[t] = 0.0
+                self._ring.rotate(-1)
+                continue
+            d = self._deficit.get(t, 0.0) + self._weights.get(t, 1.0)
+            while q and d >= 1.0 and self.active < self.window:
+                out.append((t, q.popleft()))
+                d -= 1.0
+                self.active += 1
+            self._deficit[t] = d if q else 0.0
+            self._ring.rotate(-1)
+        return out
+
+
+class _DedupEntry:
+    __slots__ = ('state', 'ticket', 'conn', 'req_id', 'done_t')
+
+
+class _DedupWindow:
+    """Bounded server-side request-id dedup window (exactly-once
+    delivery for keyed submits).
+
+    Keyed by ``(tenant, client key)``. An ``'inflight'`` entry means
+    the work is queued or running: a resubmit RE-ATTACHES delivery to
+    the new connection (never a second computation). A ``'done'``
+    entry holds the settled engine ticket for ``window_s`` seconds: a
+    resubmit is RE-DELIVERED from cache, bit-identical, never
+    recomputed. Capacity eviction drops the oldest *done* entries
+    only — inflight entries are pinned (the admission window bounds
+    how many can exist, so a ``max_entries`` above it can always make
+    room).
+    """
+
+    def __init__(self, window_s: float = 30.0, max_entries: int = 1024,
+                 *, clock=None):
+        self.window_s = float(window_s)
+        self.max_entries = max(1, int(max_entries))
+        self._clock = time.monotonic if clock is None else clock
+        self._lock = threading.Lock()
+        self._entries: 'OrderedDict[tuple, _DedupEntry]' = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.redelivered = 0
+        self.reattached = 0
+
+    def begin(self, tenant: str, key: str, conn, req_id):
+        """Register/lookup one keyed submit. Returns one of
+        ``('new', None)`` (fresh work — caller admits and dispatches),
+        ``('done', ticket)`` (re-deliver from cache), or
+        ``('inflight', (old_conn, old_req_id))`` (delivery re-attached
+        to ``conn``/``req_id``; caller transfers DRAIN tracking)."""
+        k = (tenant, key)
+        with self._lock:
+            self._expire_locked(self._clock())
+            e = self._entries.get(k)
+            if e is None:
+                self.misses += 1
+                e = _DedupEntry()
+                e.state, e.ticket = 'inflight', None
+                e.conn, e.req_id, e.done_t = conn, req_id, None
+                self._entries[k] = e
+                self._evict_locked()
+                return 'new', None
+            self.hits += 1
+            if e.state == 'done':
+                self.redelivered += 1
+                self._entries.move_to_end(k)
+                return 'done', e.ticket
+            old = (e.conn, e.req_id)
+            e.conn, e.req_id = conn, req_id
+            self.reattached += 1
+            return 'inflight', old
+
+    def settle(self, tenant: str, key: str, ticket):
+        """Mark keyed work done; returns the CURRENT ``(conn,
+        req_id)`` attachment (the resubmitting connection, if delivery
+        was re-attached mid-flight), or None if the entry was
+        forgotten."""
+        with self._lock:
+            e = self._entries.get((tenant, key))
+            if e is None:
+                return None
+            e.state, e.ticket, e.done_t = 'done', ticket, self._clock()
+            return (e.conn, e.req_id)
+
+    def forget(self, tenant: str, key: str) -> None:
+        """Drop an entry (pre-engine failure: the retry must redo the
+        admission walk, not observe a half-registered entry)."""
+        with self._lock:
+            self._entries.pop((tenant, key), None)
+
+    def expire(self) -> None:
+        with self._lock:
+            self._expire_locked(self._clock())
+
+    def _expire_locked(self, now: float) -> None:
+        dead = [k for k, e in self._entries.items()
+                if e.state == 'done' and now - e.done_t > self.window_s]
+        for k in dead:
+            del self._entries[k]
+
+    def _evict_locked(self) -> None:
+        if len(self._entries) <= self.max_entries:
+            return
+        for k in list(self._entries):
+            if self._entries[k].state == 'done':
+                del self._entries[k]
+                if len(self._entries) <= self.max_entries:
+                    return
+
+    def info(self) -> dict:
+        with self._lock:
+            return {'entries': len(self._entries), 'hits': self.hits,
+                    'misses': self.misses,
+                    'redelivered': self.redelivered,
+                    'reattached': self.reattached}
+
+
+class BrownoutBreaker:
+    """Circuit breaker driving brownout degradation.
+
+    Under sustained overload the right failure mode is PARTIAL: keep
+    interactive traffic inside its deadline by shedding the classes
+    that can wait. The breaker trips ``closed -> open`` on either
+    signal:
+
+    * ``failure_threshold`` CONSECUTIVE dispatch failures (the engine
+      is sick), or
+    * the adaptive policy reporting its top load level for
+      ``overload_trip`` consecutive decisions (the offered load is
+      beyond what coalescing can absorb).
+
+    While open, requests in ``shed_slos`` (default: ``batch``) are
+    refused with ``RETRY_AFTER('brownout', <cooldown left>)``; other
+    classes are NEVER shed here. After ``cooldown_s`` the breaker
+    half-opens: up to ``probe_quota`` shed-class requests pass as
+    probes — ``probe_quota`` successes close it, any failure reopens
+    it (fresh cooldown). All transitions are counted for the metrics
+    surface. Thread-safe; ``clock`` is the fault-injection seam.
+    """
+
+    def __init__(self, *, shed_slos: Sequence[str] = ('batch',),
+                 failure_threshold: int = 5, overload_trip: int = 8,
+                 cooldown_s: float = 1.0, probe_quota: int = 3,
+                 clock=None):
+        if failure_threshold < 1 or overload_trip < 1 or probe_quota < 1:
+            raise ValueError("failure_threshold, overload_trip and "
+                             "probe_quota must all be >= 1")
+        if cooldown_s <= 0:
+            raise ValueError(f"cooldown_s must be > 0, got {cooldown_s}")
+        self.shed_slos = frozenset(shed_slos)
+        self.failure_threshold = int(failure_threshold)
+        self.overload_trip = int(overload_trip)
+        self.cooldown_s = float(cooldown_s)
+        self.probe_quota = int(probe_quota)
+        self._clock = time.monotonic if clock is None else clock
+        self._lock = threading.Lock()
+        self.state = 'closed'
+        self.transitions: Dict[str, int] = {}
+        self.shed_count = 0
+        self._consec_fail = 0
+        self._consec_overload = 0
+        self._opened_at: Optional[float] = None
+        self._probes_out = 0
+        self._probe_ok = 0
+
+    # all _-methods below run with the lock held
+
+    def _move(self, new: str) -> None:
+        key = f"{self.state}_to_{new}"
+        self.transitions[key] = self.transitions.get(key, 0) + 1
+        self.state = new
+
+    def _trip(self) -> None:
+        self._move('open')
+        self._opened_at = self._clock()
+
+    def _tick(self) -> None:
+        if (self.state == 'open'
+                and self._clock() - self._opened_at >= self.cooldown_s):
+            self._move('half_open')
+            self._probes_out = 0
+            self._probe_ok = 0
+
+    # -- inputs ---------------------------------------------------------
+
+    def note_load(self, level: int, n_levels: int) -> None:
+        """Feed one adaptive-policy decision (its load level)."""
+        with self._lock:
+            if n_levels > 1 and level >= n_levels - 1:
+                self._consec_overload += 1
+            else:
+                self._consec_overload = 0
+            if (self.state == 'closed'
+                    and self._consec_overload >= self.overload_trip):
+                self._trip()
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._consec_fail = 0
+            if self.state == 'half_open':
+                self._probe_ok += 1
+                if self._probe_ok >= self.probe_quota:
+                    self._move('closed')
+                    self._consec_overload = 0
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._consec_fail += 1
+            if self.state == 'half_open':
+                self._trip()
+            elif (self.state == 'closed'
+                  and self._consec_fail >= self.failure_threshold):
+                self._trip()
+
+    # -- the decision ---------------------------------------------------
+
+    def should_shed(self, slo_name: str) -> Optional[float]:
+        """The retry-after hint (ms) when this request must be shed,
+        None when it may proceed (possibly as a half-open probe)."""
+        with self._lock:
+            self._tick()
+            if slo_name not in self.shed_slos:
+                return None
+            if self.state == 'open':
+                self.shed_count += 1
+                left = self.cooldown_s - (self._clock() - self._opened_at)
+                return max(1.0, left * 1e3)
+            if self.state == 'half_open':
+                if self._probes_out < self.probe_quota:
+                    self._probes_out += 1
+                    return None
+                self.shed_count += 1
+                return max(1.0, self.cooldown_s * 5e2)
+            return None
+
+    def info(self) -> dict:
+        with self._lock:
+            return {'state': self.state, 'shed': self.shed_count,
+                    'consecutive_failures': self._consec_fail,
+                    'transitions': dict(self.transitions)}
+
+    def __repr__(self):
+        return (f"BrownoutBreaker(state={self.state!r}, "
+                f"shed={sorted(self.shed_slos)}, "
+                f"transitions={self.transitions})")
+
+
 class _Conn:
     """One client connection: its socket, tenant, outbound queue (one
-    writer thread serializes the socket), and an inflight counter for
-    DRAIN semantics."""
+    writer thread serializes the socket), an inflight counter for
+    DRAIN semantics, and a liveness stamp for the reaper."""
 
     def __init__(self, sock):
         self.sock = sock
         self.outq: 'queue.Queue' = queue.Queue()
         self.tenant: Optional[_Tenant] = None
+        self.client_id: Optional[str] = None
         self.inflight = 0
         self.cond = threading.Condition()
         self.dead = False
+        self.last_seen = time.monotonic()
 
     def track(self, delta: int) -> None:
         with self.cond:
@@ -217,6 +633,23 @@ class FFTService:
       persist_policy: persist the policy's load-level rows into the
         serving schedule table on :meth:`close` (needs the engine's
         schedule table enabled).
+      faults: a :class:`repro.serve.faults.FaultPlan` armed against
+        this service's injection sites (tests/chaos only; None — the
+        default — costs nothing). Also threaded into the engine the
+        service builds and into every policy clock read.
+      dedup_window_s / dedup_max_entries: the idempotent-resubmit
+        window — how long (and how many) settled keyed results stay
+        re-deliverable.
+      heartbeat_timeout_s: reap (hard-close) a connection whose last
+        frame — heartbeats count — is older than this. None disables
+        reaping.
+      brownout: True (default) builds a :class:`BrownoutBreaker` with
+        defaults; a :class:`BrownoutBreaker` instance is used as
+        given; False/None disables brownout shedding.
+      fair_scheduling: run admitted requests through weighted deficit
+        round-robin (:class:`_FairScheduler`) instead of straight to
+        the engine; ``sched_window`` bounds dispatched-but-unresolved
+        requests (default ``max(4, 2 * engine.max_coalesce)``).
       **engine_kwargs: forwarded to the engine the service builds.
     """
 
@@ -228,6 +661,13 @@ class FFTService:
                  policy: Union[str, AdaptivePolicy, None] = 'adaptive',
                  allow_unknown_tenants: Optional[bool] = None,
                  persist_policy: bool = True,
+                 faults=None,
+                 dedup_window_s: float = 30.0,
+                 dedup_max_entries: int = 1024,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 brownout: Union[bool, BrownoutBreaker, None] = True,
+                 fair_scheduling: bool = True,
+                 sched_window: Optional[int] = None,
                  **engine_kwargs):
         if engine is not None:
             if engine_kwargs:
@@ -242,13 +682,22 @@ class FFTService:
                     "background=True or a drainer trigger")
             self.engine = engine
             self._own_engine = False
+            if faults is not None and self.engine.faults is None:
+                self.engine.faults = faults
         else:
             if mesh is None:
                 raise ValueError("FFTService(mesh=...) is required when "
                                  "no engine is given")
             engine_kwargs.setdefault('background', True)
+            engine_kwargs.setdefault('faults', faults)
             self.engine = FFTEngine(mesh=mesh, **engine_kwargs)
             self._own_engine = True
+        self._faults = faults
+        # admission/policy time reads pass through the fault plane's
+        # clock (skew injection); latency measurement stays on the
+        # real monotonic clock
+        self._clock = (time.monotonic if faults is None
+                       else faults.clock('policy.clock'))
 
         self.slo_classes = dict(slo_classes if slo_classes is not None
                                 else default_slo_classes())
@@ -271,13 +720,35 @@ class FFTService:
         self._lat_ewma_ms: Optional[float] = None
         self._shape_lat: Dict[str, deque] = {}
 
+        if brownout is True:
+            self._breaker: Optional[BrownoutBreaker] = BrownoutBreaker(
+                clock=self._clock)
+        elif brownout:
+            self._breaker = brownout
+        else:
+            self._breaker = None
+        self._dedup = _DedupWindow(dedup_window_s, dedup_max_entries)
+        self._sched_lock = threading.Lock()
+        if fair_scheduling:
+            if sched_window is None:
+                sched_window = max(4, 2 * self.engine.max_coalesce)
+            self._sched: Optional[_FairScheduler] = _FairScheduler(
+                sched_window)
+        else:
+            self._sched = None
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self._reload_generation = 0
+        self._hk_stop = threading.Event()
+        self._hk_thread: Optional[threading.Thread] = None
+
         if policy == 'adaptive':
             base_wait = self.engine.max_wait_ms
             policy = AdaptivePolicy(
                 max_coalesce=self.engine.max_coalesce,
                 max_wait_ms=(50.0 if base_wait in (None, 0)
                              else float(base_wait)),
-                overlap_chunks=1)
+                overlap_chunks=1,
+                clock=None if faults is None else self._clock)
         self.policy: Optional[AdaptivePolicy] = policy
         self.persist_policy = persist_policy and policy is not None
         self._last_decision = None
@@ -334,7 +805,31 @@ class FFTService:
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name='FFTService-accept', daemon=True)
         self._accept_thread.start()
+        self._hk_thread = threading.Thread(
+            target=self._housekeeping_loop, name='FFTService-housekeeping',
+            daemon=True)
+        self._hk_thread.start()
         return self
+
+    def _housekeeping_loop(self) -> None:
+        """Expire the dedup window and reap silent connections (when
+        ``heartbeat_timeout_s`` is set): a peer whose last frame —
+        heartbeats count — is too old gets hard-closed, which wakes
+        its blocked reader and releases the connection. Inflight work
+        still resolves; keyed results stay re-deliverable from the
+        dedup window."""
+        while not self._hk_stop.wait(0.1):
+            self._dedup.expire()
+            if self.heartbeat_timeout_s is None:
+                continue
+            now = time.monotonic()
+            with self._conn_lock:
+                conns = list(self._conns)
+            for c in conns:
+                if (not c.dead and c.tenant is not None
+                        and now - c.last_seen > self.heartbeat_timeout_s):
+                    c.dead = True
+                    kill_socket(c.sock)
 
     def __enter__(self) -> 'FFTService':
         return self
@@ -350,6 +845,7 @@ class FFTService:
         service built it) the engine. Idempotent."""
         already = self._closed
         self._closed = True
+        self._hk_stop.set()
         if self._listener is not None:
             try:
                 self._listener.close()
@@ -399,6 +895,8 @@ class FFTService:
                 pass
         if self._accept_thread is not None:
             self._accept_thread.join(timeout=5.0)
+        if self._hk_thread is not None:
+            self._hk_thread.join(timeout=2.0)
         if self._own_engine and not already:
             self.engine.close()
 
@@ -408,6 +906,40 @@ class FFTService:
         if self.address is None:
             raise RuntimeError("the service is not serving yet")
         return FFTClient(self.address, tenant=tenant, token=token)
+
+    # -- hot config reload --------------------------------------------------
+
+    def reload_tenants(self, configs: Sequence[TenantConfig], *,
+                       retire_missing: bool = False) -> int:
+        """Atomically swap tenant configs without dropping inflight.
+
+        Existing tenants get the new policy (fresh token bucket at
+        full burst, new quota/weight/SLO) while their counters and
+        inflight requests ride through; unknown names are created.
+        With ``retire_missing``, configured tenants absent from
+        ``configs`` are RETIRED: new submits are refused (typed auth
+        error), inflight requests still resolve and deliver. Validates
+        everything before touching anything — a bad batch changes
+        nothing. Returns the new reload generation."""
+        configs = list(configs)
+        for cfg in configs:
+            if cfg.slo not in self.slo_classes:
+                raise ValueError(f"tenant {cfg.name!r} defaults to "
+                                 f"unknown SLO class {cfg.slo!r}")
+        with self._lock:
+            names = {cfg.name for cfg in configs}
+            for cfg in configs:
+                t = self._tenants.get(cfg.name)
+                if t is None:
+                    self._tenants[cfg.name] = _Tenant(cfg)
+                else:
+                    t.swap_cfg(cfg)
+            if retire_missing:
+                for name, t in self._tenants.items():
+                    if name not in names:
+                        t.retired = True
+            self._reload_generation += 1
+            return self._reload_generation
 
     # -- admission ----------------------------------------------------------
 
@@ -419,6 +951,9 @@ class FFTService:
                     raise PermissionError(f"unknown tenant {name!r}")
                 t = _Tenant(TenantConfig(name))
                 self._tenants[name] = t
+            if t.retired:
+                raise PermissionError(
+                    f"tenant {name!r} was retired by a config reload")
             if t.cfg.token is not None and token != t.cfg.token:
                 raise PermissionError(f"bad token for tenant {name!r}")
             return t
@@ -446,12 +981,20 @@ class FFTService:
         """Charge admission or raise :class:`RetryAfter`. Every
         *offered* request feeds the policy's rate estimator — the
         adaptive drainer must see the load the service is asked to
-        carry, not the post-rejection residue."""
+        carry, not the post-rejection residue. The brownout breaker
+        gets first refusal: shed classes answer before spending rate
+        tokens."""
         with self._lock:
-            now = time.monotonic()
+            now = self._clock()
             if self.policy is not None:
                 self.policy.observe(1, now)
             tenant.submitted += 1
+            if self._breaker is not None:
+                hint_ms = self._breaker.should_shed(slo.name)
+                if hint_ms is not None:
+                    tenant.rejected['brownout'] = (
+                        tenant.rejected.get('brownout', 0) + 1)
+                    raise RetryAfter('brownout', hint_ms, tenant.cfg.name)
             wait_s = tenant.bucket.try_take(now)
             if wait_s > 0:
                 tenant.rejected['rate'] = tenant.rejected.get('rate', 0) + 1
@@ -496,6 +1039,8 @@ class FFTService:
         if self.policy is None:
             return
         d = self.policy.decide()
+        if self._breaker is not None:
+            self._breaker.note_load(d.load_level, self.policy.n_levels)
         last = self._last_decision
         if (force or last is None or d.watermark != last.watermark
                 or abs(d.max_wait_ms - last.max_wait_ms)
@@ -532,6 +1077,14 @@ class FFTService:
                 sock, _ = self._listener.accept()
             except OSError:
                 return                         # listener closed: shut down
+            if self._faults is not None:
+                pt = self._faults.draw('service.accept')
+                if pt is not None:
+                    if pt.action == 'drop':
+                        kill_socket(sock)      # refuse this connection
+                        continue
+                    if pt.action in ('delay', 'stall'):
+                        time.sleep(pt.delay_s)
             conn = _Conn(sock)
             with self._conn_lock:
                 if self._closed:
@@ -545,7 +1098,11 @@ class FFTService:
         """The single sender for one connection. Result payload
         conversion (device -> host numpy) happens HERE, not on the
         drainer thread — a slow client costs itself, never the
-        pipeline."""
+        pipeline. A FAILED send marks the connection dead and
+        hard-closes the socket so the blocked reader wakes and
+        releases the connection now, not at the peer's leisure;
+        tenant quota and window slots ride each request's
+        done-callback (never this socket), so nothing strands."""
         while True:
             item = conn.outq.get()
             if item is None:
@@ -555,12 +1112,17 @@ class FFTService:
             try:
                 if item[0] == 'frame':
                     _, msg_type, meta, arrays = item
-                    proto.send_frame(conn.sock, msg_type, meta, arrays)
+                    proto.send_frame(conn.sock, msg_type, meta, arrays,
+                                     faults=self._faults,
+                                     site='service.writer')
                 else:                          # ('result', req_id, ticket)
                     _, req_id, ticket = item
                     self._send_result(conn, req_id, ticket)
-            except (OSError, proto.ProtocolError):
+            except (OSError, proto.ProtocolError, FaultInjected):
                 conn.dead = True               # client went away mid-write
+                kill_socket(conn.sock)         # wake the blocked reader
+                with conn.cond:
+                    conn.cond.notify_all()     # unstick DRAIN waiters
 
     def _send_result(self, conn: _Conn, req_id: int, ticket) -> None:
         if ticket.failed:
@@ -569,7 +1131,9 @@ class FFTService:
             except Exception as exc:
                 proto.send_frame(conn.sock, proto.ERROR,
                                  {'req_id': req_id, 'kind': 'request',
-                                  'error': f"{type(exc).__name__}: {exc}"})
+                                  'error': f"{type(exc).__name__}: {exc}"},
+                                 faults=self._faults,
+                                 site='service.writer')
                 return
         value = ticket.result(timeout=0)
         if isinstance(value, tuple):
@@ -579,13 +1143,15 @@ class FFTService:
             arrays = [np.asarray(value)]
             form = 'array'
         proto.send_frame(conn.sock, proto.RESULT,
-                         {'req_id': req_id, 'form': form}, arrays)
+                         {'req_id': req_id, 'form': form}, arrays,
+                         faults=self._faults, site='service.writer')
 
     def _serve_conn(self, conn: _Conn) -> None:
         writer = None
         try:
             try:
-                hello = proto.recv_frame(conn.sock)
+                hello = proto.recv_frame(conn.sock, faults=self._faults,
+                                         site='service.reader')
             except proto.VersionMismatch as exc:
                 proto.send_frame(conn.sock, proto.ERROR,
                                  {'kind': 'version', 'error': str(exc)})
@@ -600,6 +1166,7 @@ class FFTService:
                 return
             if hello is None:
                 return
+            conn.last_seen = time.monotonic()
             msg_type, meta, _ = hello
             if msg_type != proto.HELLO:
                 proto.send_frame(conn.sock, proto.ERROR,
@@ -614,6 +1181,7 @@ class FFTService:
                                  {'kind': 'auth', 'error': str(exc)})
                 return
             conn.tenant = tenant
+            conn.client_id = meta.get('client_id')
             writer = threading.Thread(target=self._writer_loop,
                                       args=(conn,),
                                       name='FFTService-writer', daemon=True)
@@ -630,7 +1198,9 @@ class FFTService:
             })
             while True:
                 try:
-                    frame = proto.recv_frame(conn.sock)
+                    frame = proto.recv_frame(conn.sock,
+                                             faults=self._faults,
+                                             site='service.reader')
                 except proto.VersionMismatch as exc:
                     # a v1 HELLO got us here; a mid-stream version
                     # flip is a client bug — answer typed, then close
@@ -643,9 +1213,15 @@ class FFTService:
                     return
                 if frame is None:
                     return                     # clean client close
+                conn.last_seen = time.monotonic()
                 msg_type, meta, arrays = frame
                 if msg_type == proto.SUBMIT:
                     self._handle_submit(conn, tenant, meta, arrays)
+                elif msg_type == proto.HEARTBEAT:
+                    conn.send(proto.HEARTBEAT_OK,
+                              {'req_id': meta.get('req_id')})
+                elif msg_type == proto.RELOAD:
+                    self._handle_reload(conn, tenant, meta)
                 elif msg_type == proto.METRICS:
                     conn.send(proto.METRICS_OK,
                               {'req_id': meta.get('req_id'),
@@ -673,18 +1249,67 @@ class FFTService:
                 if conn in self._conns:
                     self._conns.remove(conn)
 
+    def _handle_reload(self, conn: _Conn, tenant: _Tenant,
+                       meta: dict) -> None:
+        req_id = meta.get('req_id')
+        if not tenant.cfg.admin:
+            conn.send(proto.ERROR,
+                      {'req_id': req_id, 'kind': 'auth',
+                       'error': f"tenant {tenant.cfg.name!r} is not an "
+                                f"admin (RELOAD refused)"})
+            return
+        try:
+            cfgs = [TenantConfig.from_dict(d)
+                    for d in meta.get('tenants', ())]
+            gen = self.reload_tenants(
+                cfgs, retire_missing=bool(meta.get('retire_missing')))
+        except (TypeError, ValueError) as exc:
+            conn.send(proto.ERROR, {'req_id': req_id, 'kind': 'request',
+                                    'error': str(exc)})
+            return
+        conn.send(proto.RELOAD_OK,
+                  {'req_id': req_id, 'generation': gen,
+                   'tenants': [c.name for c in cfgs]})
+
     def _handle_submit(self, conn: _Conn, tenant: _Tenant, meta: dict,
                        arrays: List[np.ndarray]) -> None:
         req_id = meta.get('req_id')
+        key = meta.get('key')
+        key = None if key is None else str(key)
         try:
             slo = self._resolve_slo(meta.get('slo'), tenant)
         except ValueError as exc:
             conn.send(proto.ERROR, {'req_id': req_id, 'kind': 'request',
                                     'error': str(exc)})
             return
+        if tenant.retired:
+            conn.send(proto.ERROR,
+                      {'req_id': req_id, 'kind': 'auth',
+                       'error': f"tenant {tenant.cfg.name!r} was retired "
+                                f"by a config reload"})
+            return
+        if key is not None:
+            status, payload = self._dedup.begin(tenant.cfg.name, key,
+                                                conn, req_id)
+            if status == 'done':
+                # completed work: re-deliver from cache, bit-identical,
+                # never recomputed — and never re-admitted
+                conn.outq.put(('result', req_id, payload))
+                return
+            if status == 'inflight':
+                # the work is queued or running: delivery re-attached
+                # to THIS connection; transfer the DRAIN tracking
+                old_conn, _old_req = payload
+                conn.track(+1)
+                if old_conn is not None and old_conn is not conn:
+                    old_conn.track(-1)
+                return
+            # 'new': fall through into the normal admission walk
         try:
             self._admit(tenant, slo)
         except RetryAfter as ra:
+            if key is not None:
+                self._dedup.forget(tenant.cfg.name, key)
             conn.send(proto.RETRY_AFTER,
                       {'req_id': req_id, 'reason': ra.reason,
                        'retry_after_ms': ra.retry_after_ms})
@@ -694,7 +1319,6 @@ class FFTService:
         form = meta.get('form', 'array')
         shape_key = (f"{'x'.join(map(str, arrays[0].shape))}"
                      f":{direction}" if arrays else '?')
-        t_submit = time.monotonic()
         try:
             if form == 'planar':
                 if len(arrays) != 2:
@@ -707,32 +1331,97 @@ class FFTService:
                     raise ValueError(
                         f"submit needs exactly 1 array, got {len(arrays)}")
                 x = arrays[0]
-            # the class's wait budget, tightened (never extended) by
-            # the adaptive policy's current decision
-            wait_ms = slo.wait_ms()
-            if self._last_decision is not None:
-                wait_ms = min(wait_ms, self._last_decision.max_wait_ms)
-            ticket = self.engine.submit(x, direction=direction, real=real,
-                                        max_wait_ms=wait_ms)
-        except Exception as exc:
+        except ValueError as exc:
             self._release(tenant, ok=False, slo=slo, shape_key=shape_key,
                           latency_ms=None)
+            if key is not None:
+                self._dedup.forget(tenant.cfg.name, key)
             conn.send(proto.ERROR, {'req_id': req_id, 'kind': 'request',
                                     'error': f"{type(exc).__name__}: "
                                              f"{exc}"})
             return
+        # the class's wait budget, tightened (never extended) by the
+        # adaptive policy's current decision
+        wait_ms = slo.wait_ms()
+        if self._last_decision is not None:
+            wait_ms = min(wait_ms, self._last_decision.max_wait_ms)
+        p = _Pending(x, direction, real, wait_ms, conn, tenant, slo,
+                     shape_key, req_id, key, time.monotonic())
         conn.track(+1)
+        if self._sched is None:
+            self._dispatch_pending(p, scheduled=False)
+            return
+        with self._sched_lock:
+            self._sched.offer(tenant.cfg.name, tenant.cfg.weight, p)
+            batch = self._sched.take()
+        for _name, item in batch:
+            self._dispatch_pending(item)
 
-        def on_done(t, conn=conn, tenant=tenant, slo=slo,
-                    shape_key=shape_key, req_id=req_id,
-                    t_submit=t_submit):
+    def _pump_scheduler(self, *, completed: bool) -> None:
+        """One scheduler turn: retire a resolved slot and dispatch
+        whatever DRR releases."""
+        if self._sched is None:
+            return
+        with self._sched_lock:
+            if completed:
+                self._sched.done()
+            batch = self._sched.take()
+        for _name, item in batch:
+            self._dispatch_pending(item)
+
+    def _dispatch_pending(self, p: _Pending, *,
+                          scheduled: bool = True) -> None:
+        """Hand one admitted request to the engine and wire up
+        delivery. ``scheduled`` means this item occupies a fair-
+        scheduler slot (retired via :meth:`_pump_scheduler` when it
+        resolves)."""
+        try:
+            ticket = self.engine.submit(p.x, direction=p.direction,
+                                        real=p.real,
+                                        max_wait_ms=p.wait_ms)
+        except Exception as exc:
+            self._release(p.tenant, ok=False, slo=p.slo,
+                          shape_key=p.shape_key, latency_ms=None)
+            if p.key is not None:
+                self._dedup.forget(p.tenant.cfg.name, p.key)
+            p.conn.send(proto.ERROR,
+                        {'req_id': p.req_id, 'kind': 'request',
+                         'error': f"{type(exc).__name__}: {exc}"})
+            p.conn.track(-1)
+            if scheduled:
+                self._pump_scheduler(completed=True)
+            return
+        with self._lock:
+            p.tenant.scheduled += 1
+
+        def on_done(t, p=p, scheduled=scheduled):
             # drainer thread: bookkeeping + handoff only — the numpy
             # conversion and the socket write happen on the writer
-            latency_ms = (time.monotonic() - t_submit) * 1e3
-            self._release(tenant, ok=t.done, slo=slo, shape_key=shape_key,
+            latency_ms = (time.monotonic() - p.t_submit) * 1e3
+            self._release(p.tenant, ok=t.done, slo=p.slo,
+                          shape_key=p.shape_key,
                           latency_ms=latency_ms if t.done else None)
-            conn.outq.put(('result', req_id, t))
-            conn.track(-1)
+            if self._breaker is not None:
+                if t.done:
+                    self._breaker.record_success()
+                else:
+                    self._breaker.record_failure()
+            target_conn, target_req = p.conn, p.req_id
+            if p.key is not None:
+                # deliver to the CURRENT attachment — a resubmit may
+                # have moved delivery to a fresh connection
+                att = self._dedup.settle(p.tenant.cfg.name, p.key, t)
+                if att is not None:
+                    target_conn, target_req = att
+                if not t.done:
+                    # only COMPLETED work is cached: a retry under the
+                    # same key recomputes instead of replaying a
+                    # transient dispatch fault forever
+                    self._dedup.forget(p.tenant.cfg.name, p.key)
+            target_conn.outq.put(('result', target_req, t))
+            target_conn.track(-1)
+            if scheduled:
+                self._pump_scheduler(completed=True)
 
         ticket.add_done_callback(on_done)
 
@@ -762,6 +1451,9 @@ class FFTService:
                     'completed': t.completed,
                     'failed': t.failed,
                     'inflight': t.inflight,
+                    'scheduled': t.scheduled,
+                    'weight': t.cfg.weight,
+                    'retired': t.retired,
                     'rejected': dict(t.rejected),
                     'latency_ms': lat,
                 }
@@ -771,13 +1463,29 @@ class FFTService:
                       for k, v in self._shape_lat.items() if v}
             inflight = self._inflight_total
             last = self._last_decision
+            reload_gen = self._reload_generation
         queues = {self._key_str(k): d
                   for k, d in self.engine.queue_depths().items()}
+        if self._sched is not None:
+            with self._sched_lock:
+                sched = {'window': self._sched.window,
+                         'active': self._sched.active,
+                         'queued': self._sched.queued()}
+            # completed share of engine dispatches per tenant — the
+            # fairness observable the chaos harness asserts on
+            total_sched = sum(t['scheduled'] for t in tenants.values())
+            sched['shares'] = (
+                {} if total_sched == 0 else
+                {n: round(t['scheduled'] / total_sched, 4)
+                 for n, t in tenants.items()})
+        else:
+            sched = None
         out = {
             'service': {
                 'uptime_s': round(time.monotonic() - self._t0, 3),
                 'inflight': inflight,
                 'max_inflight': self.max_inflight,
+                'reload_generation': reload_gen,
                 'queue_depths': queues,
                 'dispatch': self.engine.dispatch_stats(),
                 'policy': None if last is None else {
@@ -786,6 +1494,12 @@ class FFTService:
                     'load_level': last.load_level,
                     'rate_per_s': round(last.rate_per_s, 3),
                 },
+                'scheduler': sched,
+                'dedup': self._dedup.info(),
+                'breaker': (None if self._breaker is None
+                            else self._breaker.info()),
+                'faults': (None if self._faults is None
+                           else self._faults.stats()),
             },
             'tenants': tenants,
             'shapes': shapes,
@@ -860,52 +1574,106 @@ class ClientTicket:
 
 
 class FFTClient:
-    """Thin client for :class:`FFTService`.
+    """Resilient client for :class:`FFTService`.
 
     ``submit`` sends one frame and returns a :class:`ClientTicket`; a
     reader thread demultiplexes the (unordered) answers by request id.
-    ``transform`` is the synchronous convenience that also honors
-    ``RETRY_AFTER`` hints with bounded retries.
+    ``transform`` is the synchronous convenience loop: it honors
+    ``RETRY_AFTER`` hints with capped exponential backoff (full
+    jitter), reconnects and RESUBMITS under per-request idempotency
+    keys when the link drops (the server's dedup window guarantees
+    exactly-once), and raises :class:`ServiceUnavailable` when the
+    attempt or deadline budget runs out. ``heartbeat_s`` arms a
+    keepalive thread so a server with ``heartbeat_timeout_s`` never
+    reaps a healthy-but-quiet client.
     """
 
     def __init__(self, address: Address, *, tenant: str = 'default',
                  token: Optional[str] = None,
-                 connect_timeout: Optional[float] = 30.0):
+                 connect_timeout: Optional[float] = 30.0,
+                 heartbeat_s: Optional[float] = None,
+                 client_id: Optional[str] = None):
         self.tenant = tenant
-        if isinstance(address, str):
-            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            self._sock.settimeout(connect_timeout)
-            self._sock.connect(address)
-        else:
-            self._sock = socket.create_connection(
-                (address[0], int(address[1])), timeout=connect_timeout)
-        self._sock.settimeout(None)
+        self._token = token
+        self._address = address
+        self._connect_timeout = connect_timeout
+        #: stable across reconnects — the idempotency-key namespace
+        self.client_id = client_id or uuid.uuid4().hex[:12]
+        self.heartbeat_s = heartbeat_s
+        self.reconnects = 0
         self._send_lock = threading.Lock()
         self._tickets: Dict[int, ClientTicket] = {}
         self._tickets_lock = threading.Lock()
         self._next_id = 0
+        self._seq = 0
         self._closed = False
+        self._sock: Optional[socket.socket] = None
+        self._reader: Optional[threading.Thread] = None
+        self._connect()
+        self._hb_thread: Optional[threading.Thread] = None
+        if heartbeat_s is not None:
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, name='FFTClient-heartbeat',
+                daemon=True)
+            self._hb_thread.start()
 
-        proto.send_frame(self._sock, proto.HELLO,
-                         {'tenant': tenant, 'token': token})
-        first = proto.recv_frame(self._sock)
+    # -- plumbing -----------------------------------------------------------
+
+    def _connect(self) -> None:
+        if isinstance(self._address, str):
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(self._connect_timeout)
+            sock.connect(self._address)
+        else:
+            sock = socket.create_connection(
+                (self._address[0], int(self._address[1])),
+                timeout=self._connect_timeout)
+        sock.settimeout(None)
+        try:
+            proto.send_frame(sock, proto.HELLO,
+                             {'tenant': self.tenant, 'token': self._token,
+                              'client_id': self.client_id})
+            first = proto.recv_frame(sock)
+        except (OSError, proto.ProtocolError):
+            kill_socket(sock)
+            raise
         if first is None:
+            kill_socket(sock)
             raise ConnectionError("server closed during handshake")
         msg_type, meta, _ = first
         if msg_type == proto.ERROR:
+            kill_socket(sock)
             raise PermissionError(
                 f"server refused the connection "
                 f"({meta.get('kind')}): {meta.get('error')}")
         if msg_type != proto.HELLO_OK:
+            kill_socket(sock)
             raise proto.ProtocolError(
                 f"expected HELLO_OK, got message type {msg_type}")
         self.server_info = meta
+        self._sock = sock
         self._reader = threading.Thread(target=self._reader_loop,
+                                        args=(sock,),
                                         name='FFTClient-reader',
                                         daemon=True)
         self._reader.start()
 
-    # -- plumbing -----------------------------------------------------------
+    def _reconnect(self) -> None:
+        """Tear down the current link and handshake a fresh one.
+        Tickets pending on the old link fail with ``ConnectionError``
+        — ``transform`` resubmits them under their idempotency keys,
+        so completed work is re-delivered, never redone."""
+        with self._send_lock:
+            old = self._sock
+            self._sock = None
+            if old is not None:
+                kill_socket(old)
+            with self._tickets_lock:
+                pending, self._tickets = self._tickets, {}
+            for t in pending.values():
+                t._fail(ConnectionError("reconnecting"))
+            self._connect()
+            self.reconnects += 1
 
     def _register(self) -> Tuple[int, ClientTicket]:
         with self._tickets_lock:
@@ -918,11 +1686,16 @@ class FFTClient:
         with self._tickets_lock:
             return self._tickets.pop(req_id, None)
 
-    def _reader_loop(self) -> None:
+    def _next_key(self) -> str:
+        with self._tickets_lock:
+            self._seq += 1
+            return f"{self.client_id}/{self._seq}"
+
+    def _reader_loop(self, sock) -> None:
         err: BaseException = ConnectionError("connection closed")
         try:
             while True:
-                frame = proto.recv_frame(self._sock)
+                frame = proto.recv_frame(sock)
                 if frame is None:
                     break
                 msg_type, meta, arrays = frame
@@ -949,13 +1722,19 @@ class FFTClient:
                     elif req_id is None:
                         err = exc              # connection-level: fail all
                         break
-                elif msg_type in (proto.METRICS_OK, proto.DRAIN_OK):
+                elif msg_type == proto.RELOAD_OK:
+                    if t is not None:
+                        t._resolve(meta)
+                elif msg_type in (proto.METRICS_OK, proto.DRAIN_OK,
+                                  proto.HEARTBEAT_OK):
                     if t is not None:
                         t._resolve(meta.get('metrics', True))
         except proto.ProtocolError as exc:
             err = exc
         except OSError as exc:
             err = ConnectionError(f"connection lost: {exc}")
+        if self._sock is not sock:
+            return                             # superseded by a reconnect
         with self._tickets_lock:
             pending, self._tickets = self._tickets, {}
         for t in pending.values():
@@ -965,16 +1744,31 @@ class FFTClient:
         if self._closed:
             raise RuntimeError("client is closed")
         with self._send_lock:
+            if self._sock is None:
+                raise ConnectionError("not connected")
             proto.send_frame(self._sock, msg_type, meta, arrays)
+
+    def _heartbeat_loop(self) -> None:
+        while not self._closed:
+            time.sleep(self.heartbeat_s)
+            if self._closed:
+                return
+            try:
+                self._send(proto.HEARTBEAT, {})
+            except Exception:
+                pass          # transform's retry loop owns recovery
 
     # -- API ----------------------------------------------------------------
 
     def submit(self, x, *, direction: str = 'fwd',
                real: Optional[bool] = None,
-               slo: Optional[str] = None) -> ClientTicket:
+               slo: Optional[str] = None,
+               key: Optional[str] = None) -> ClientTicket:
         """Send one transform request; the ticket resolves when the
         server answers (results arrive in the server's order, not
-        submission order)."""
+        submission order). ``key`` is an idempotency key: resubmits
+        under the same key are served exactly once (the server's
+        dedup window re-delivers or re-attaches, never recomputes)."""
         if isinstance(x, (tuple, list)):
             arrays = [np.ascontiguousarray(a) for a in x]
             form = 'planar'
@@ -987,6 +1781,8 @@ class FFTClient:
             meta['real'] = bool(real)
         if slo is not None:
             meta['slo'] = slo
+        if key is not None:
+            meta['key'] = key
         try:
             self._send(proto.SUBMIT, meta, arrays)
         except BaseException:
@@ -997,22 +1793,90 @@ class FFTClient:
     def transform(self, xs: Sequence, *, direction: str = 'fwd',
                   real: Optional[bool] = None, slo: Optional[str] = None,
                   timeout: Optional[float] = 120.0,
-                  max_attempts: int = 8) -> List:
-        """Submit every operand and return the results in order,
-        sleeping out ``RETRY_AFTER`` hints and resubmitting (at most
-        ``max_attempts`` per request) — the well-behaved-client loop."""
+                  max_attempts: int = 8,
+                  backoff_base_s: float = 0.05,
+                  backoff_max_s: float = 2.0,
+                  deadline_s: Optional[float] = None,
+                  idempotent: bool = True) -> List:
+        """Submit every operand and return the results in order — the
+        well-behaved-client loop:
+
+        * ``RETRY_AFTER`` hints are honored with capped exponential
+          backoff and full jitter, never sleeping shorter than the
+          server's hint;
+        * a dropped connection reconnects and resubmits under the SAME
+          idempotency key (``idempotent=True``, the default), so the
+          server re-delivers completed work from its dedup window
+          instead of recomputing it;
+        * ``deadline_s`` bounds the TOTAL time spent per operand,
+          attempts and sleeps included. Exhausting it — or
+          ``max_attempts`` — raises :class:`ServiceUnavailable`
+          carrying the last underlying error.
+        """
         out = []
+        rng = random.Random()
         for x in xs:
+            key = self._next_key() if idempotent else None
+            t0 = time.monotonic()
+            last: Optional[BaseException] = None
+            served = False
             for attempt in range(max_attempts):
-                t = self.submit(x, direction=direction, real=real, slo=slo)
+                left = (None if deadline_s is None
+                        else deadline_s - (time.monotonic() - t0))
+                if left is not None and left <= 0:
+                    break
                 try:
-                    out.append(t.result(timeout))
+                    t = self.submit(x, direction=direction, real=real,
+                                    slo=slo, key=key)
+                    wait = (timeout if left is None else
+                            left if timeout is None else min(timeout, left))
+                    out.append(t.result(wait))
+                    served = True
                     break
                 except RetryAfter as ra:
-                    if attempt == max_attempts - 1:
-                        raise
-                    time.sleep(ra.retry_after_ms / 1e3)
+                    last = ra
+                    delay = max(ra.retry_after_ms / 1e3,
+                                min(backoff_max_s,
+                                    backoff_base_s * (2 ** attempt))
+                                * rng.random())
+                except (ConnectionError, OSError,
+                        proto.ProtocolError) as exc:
+                    # a torn frame poisons the link exactly like a
+                    # reset does: reconnect and resubmit under the key
+                    last = exc
+                    delay = (min(backoff_max_s,
+                                 backoff_base_s * (2 ** attempt))
+                             * rng.random())
+                    try:
+                        self._reconnect()
+                    except PermissionError:
+                        raise                  # auth refusals never heal
+                    except (OSError, proto.ProtocolError) as rexc:
+                        last = rexc
+                if left is not None:
+                    delay = min(delay, max(0.0, left))
+                time.sleep(delay)
+            if not served:
+                budget = (f"{deadline_s:.1f} s deadline"
+                          if deadline_s is not None
+                          else f"{max_attempts} attempts")
+                raise ServiceUnavailable(
+                    f"no served result within {budget} "
+                    f"(last error: {last})", last)
         return out
+
+    def reload(self, tenants: Sequence, *, retire_missing: bool = False,
+               timeout: Optional[float] = 30.0) -> dict:
+        """Drive a hot tenant-config reload (this client's tenant must
+        be ``admin=True``). ``tenants`` holds :class:`TenantConfig`
+        instances or their dict form; returns the server's RELOAD_OK
+        meta (``{'generation': n, 'tenants': [...]}``)."""
+        specs = [t.to_dict() if isinstance(t, TenantConfig) else dict(t)
+                 for t in tenants]
+        req_id, t = self._register()
+        self._send(proto.RELOAD, {'req_id': req_id, 'tenants': specs,
+                                  'retire_missing': retire_missing})
+        return t.result(timeout)
 
     def metrics(self, timeout: Optional[float] = 30.0) -> dict:
         """The server's metrics JSON document."""
@@ -1033,12 +1897,10 @@ class FFTClient:
         if self._closed:
             return
         self._closed = True
-        try:
-            self._sock.shutdown(socket.SHUT_RDWR)
-        except OSError:
-            pass
-        self._sock.close()
-        self._reader.join(timeout=10.0)
+        if self._sock is not None:
+            kill_socket(self._sock)
+        if self._reader is not None:
+            self._reader.join(timeout=10.0)
 
     def __enter__(self) -> 'FFTClient':
         return self

@@ -1,0 +1,271 @@
+"""Fuzzing the wire protocol decoder: arbitrary, mutated, and
+truncated byte streams must resolve to a typed ProtocolError, a valid
+frame, or a clean EOF (None) — never a hang, an unbounded allocation,
+or an untyped exception.
+
+Two layers: a seeded deterministic fuzz (always runs — the CI floor)
+and a hypothesis property suite (skipped when hypothesis is not
+installed, matching test_serve_properties.py)."""
+import json
+import random
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve import protocol as proto
+
+
+def _valid_frames():
+    """A spread of well-formed frames covering the meta/array space."""
+    return [
+        proto.pack_frame(proto.HELLO, {'tenant': 'fuzz', 'client_id': 'c'}),
+        proto.pack_frame(proto.SUBMIT,
+                         {'req_id': 1, 'direction': 'fwd', 'key': 'c/1'},
+                         [np.arange(64, dtype=np.complex64)
+                          .reshape(8, 8)]),
+        proto.pack_frame(proto.RESULT, {'req_id': 2, 'form': 'planar'},
+                         [np.ones((4, 4), np.float32),
+                          np.zeros((4, 4), np.float32)]),
+        proto.pack_frame(proto.HEARTBEAT, {}),
+        proto.pack_frame(proto.RELOAD,
+                         {'req_id': 3,
+                          'tenants': [{'name': 't', 'weight': 2.0}]}),
+        proto.pack_frame(proto.ERROR, {'kind': 'protocol', 'error': 'x'}),
+    ]
+
+
+def _check_unpack(buf: bytes) -> None:
+    """The fuzz oracle: unpack either succeeds with sane structure or
+    raises ProtocolError — anything else is a bug."""
+    try:
+        msg_type, meta, arrays, consumed = proto.unpack_frame(buf)
+    except proto.ProtocolError:
+        return
+    assert isinstance(msg_type, int)
+    assert isinstance(meta, dict)
+    assert isinstance(arrays, list)
+    assert 0 < consumed <= len(buf)
+    for a in arrays:
+        assert a.dtype.name in proto.WIRE_DTYPES
+
+
+def _drain_socket(payload: bytes):
+    """Feed ``payload`` through a real socketpair and collect what
+    recv_frame makes of it: ('frames', [...]) on full drain,
+    ('error', exc) on a typed rejection. The writer side closes after
+    the payload, so a truncated tail is an EOF, never a hang."""
+    a, b = socket.socketpair()
+    try:
+        def feed():
+            try:
+                a.sendall(payload)
+            except OSError:
+                pass
+            finally:
+                try:
+                    a.shutdown(socket.SHUT_WR)
+                except OSError:
+                    pass
+
+        t = threading.Thread(target=feed, daemon=True)
+        t.start()
+        frames = []
+        try:
+            while True:
+                f = proto.recv_frame(b)
+                if f is None:
+                    break
+                frames.append(f)
+        except proto.ProtocolError as exc:
+            return 'error', exc
+        finally:
+            t.join(timeout=10.0)
+            assert not t.is_alive(), "feeder wedged"
+        return 'frames', frames
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic seeded fuzz — always runs
+# ---------------------------------------------------------------------------
+
+def test_unpack_random_garbage_never_escapes_protocolerror():
+    rng = random.Random(0xF0F0)
+    for _ in range(500):
+        n = rng.randrange(0, 200)
+        _check_unpack(bytes(rng.randrange(256) for _ in range(n)))
+
+
+def test_unpack_mutated_valid_frames():
+    """Single-byte corruption of every position in real frames: each
+    mutant parses, or fails typed. (Bit flips in raw array payload
+    bytes legitimately still parse — the protocol checksums structure,
+    not content.)"""
+    rng = random.Random(0xBEEF)
+    for frame in _valid_frames():
+        for pos in range(len(frame)):
+            mutant = bytearray(frame)
+            mutant[pos] ^= 1 << rng.randrange(8)
+            _check_unpack(bytes(mutant))
+
+
+def test_unpack_every_truncation_is_typed():
+    for frame in _valid_frames():
+        for cut in range(len(frame)):
+            if cut == 0:
+                continue
+            with pytest.raises(proto.ProtocolError):
+                proto.unpack_frame(frame[:cut])
+
+
+def test_unpack_oversize_length_prefix_never_allocates():
+    """A hostile header claiming a huge payload is refused from the
+    8 header bytes alone — the decoder must not trust the length."""
+    huge = proto._HEADER.pack(proto.MAGIC, proto.PROTOCOL_VERSION,
+                              proto.SUBMIT, 0, proto.MAX_FRAME_BYTES + 1)
+    with pytest.raises(proto.ProtocolError):
+        proto.unpack_frame(huge + b'x' * 64)
+
+
+def test_unpack_lying_array_descriptors():
+    cases = [
+        {'dtype': 'object', 'shape': [1], 'nbytes': 8},
+        {'dtype': 'float32', 'shape': [-1], 'nbytes': 4},
+        {'dtype': 'float32', 'shape': [2, 2], 'nbytes': 9999},
+        {'dtype': 'float32', 'shape': 'nope', 'nbytes': 4},
+        {'dtype': 'float32'},
+    ]
+    for desc in cases:
+        jb = json.dumps({'req_id': 1, 'arrays': [desc]}).encode()
+        payload = proto._JLEN.pack(len(jb)) + jb + b'\x00' * 16
+        buf = proto._HEADER.pack(proto.MAGIC, proto.PROTOCOL_VERSION,
+                                 proto.SUBMIT, 0, len(payload)) + payload
+        with pytest.raises(proto.ProtocolError):
+            proto.unpack_frame(buf)
+
+
+def test_unpack_non_object_metadata_rejected():
+    for meta_json in (b'[1,2]', b'"str"', b'42', b'null', b'\xff\xfe'):
+        payload = proto._JLEN.pack(len(meta_json)) + meta_json
+        buf = proto._HEADER.pack(proto.MAGIC, proto.PROTOCOL_VERSION,
+                                 proto.HELLO, 0, len(payload)) + payload
+        with pytest.raises(proto.ProtocolError):
+            proto.unpack_frame(buf)
+
+
+def test_recv_frame_clean_eof_vs_midframe_eof():
+    frame = _valid_frames()[1]
+    # whole frames then clean close -> all frames, then None
+    status, frames = _drain_socket(frame * 3)
+    assert status == 'frames' and len(frames) == 3
+    # EOF inside the second frame -> first frame parses, then typed error
+    status, err = _drain_socket(frame + frame[:len(frame) // 2])
+    assert status == 'error'
+    assert 'truncat' in str(err) or 'EOF' in str(err)
+    # empty stream -> clean close immediately
+    status, frames = _drain_socket(b'')
+    assert status == 'frames' and frames == []
+
+
+def test_recv_frame_random_garbage_streams():
+    rng = random.Random(0xCAFE)
+    for _ in range(50):
+        n = rng.randrange(1, 300)
+        blob = bytes(rng.randrange(256) for _ in range(n))
+        status, _ = _drain_socket(blob)
+        assert status in ('frames', 'error')
+
+
+def test_recv_frame_hostile_length_does_not_allocate_or_hang():
+    huge = proto._HEADER.pack(proto.MAGIC, proto.PROTOCOL_VERSION,
+                              proto.SUBMIT, 0, proto.MAX_FRAME_BYTES - 1)
+    status, err = _drain_socket(huge)      # header only, then EOF
+    assert status == 'error'               # truncation, not a 1GB alloc
+
+
+def test_round_trip_identity():
+    rng = np.random.default_rng(7)
+    metas = [{}, {'req_id': 0}, {'nested': {'a': [1, 2, {'b': None}]},
+                                 'unicode': 'héllo→'}]
+    arr_sets = [
+        [],
+        [rng.standard_normal((3, 5)).astype(np.float32)],
+        [rng.standard_normal(8).astype(np.complex128),
+         np.arange(6, dtype=np.int64).reshape(2, 3)],
+        [np.float16(1.5) * np.ones((2, 2), np.float16)],
+    ]
+    for meta in metas:
+        for arrs in arr_sets:
+            buf = proto.pack_frame(proto.SUBMIT, meta, arrs)
+            mt, m2, a2, consumed = proto.unpack_frame(buf)
+            assert (mt, consumed) == (proto.SUBMIT, len(buf))
+            assert m2 == meta
+            assert len(a2) == len(arrs)
+            for x, y in zip(arrs, a2):
+                assert x.dtype == y.dtype and x.shape == y.shape
+                assert np.array_equal(x, y)
+
+
+def test_version_mismatch_is_its_own_type():
+    frame = bytearray(_valid_frames()[0])
+    frame[4] = proto.PROTOCOL_VERSION + 1      # the version byte
+    with pytest.raises(proto.VersionMismatch):
+        proto.unpack_frame(bytes(frame))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property suite — optional dev dependency. Guarded with a
+# conditional import (NOT importorskip) so the deterministic fuzz
+# above always runs even without hypothesis installed.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.binary(max_size=512))
+    def test_hyp_unpack_arbitrary_bytes(buf):
+        _check_unpack(buf)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.data())
+    def test_hyp_mutate_valid_frame(data):
+        frames = _valid_frames()
+        frame = bytearray(data.draw(st.sampled_from(frames)))
+        for _ in range(data.draw(st.integers(1, 4))):
+            pos = data.draw(st.integers(0, len(frame) - 1))
+            frame[pos] = data.draw(st.integers(0, 255))
+        _check_unpack(bytes(frame))
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.data())
+    def test_hyp_truncate_and_pad(data):
+        frame = data.draw(st.sampled_from(_valid_frames()))
+        cut = data.draw(st.integers(0, len(frame)))
+        pad = data.draw(st.binary(max_size=32))
+        _check_unpack(frame[:cut] + pad)
+
+    @settings(max_examples=50, deadline=None)
+    @given(meta=st.dictionaries(
+        st.text(min_size=1, max_size=8).filter(lambda s: s != 'arrays'),
+        st.one_of(st.none(), st.booleans(), st.integers(-2**31, 2**31),
+                  st.floats(allow_nan=False, allow_infinity=False),
+                  st.text(max_size=16)),
+        max_size=6))
+    def test_hyp_meta_round_trip(meta):
+        buf = proto.pack_frame(proto.METRICS, meta)
+        _, m2, arrays, consumed = proto.unpack_frame(buf)
+        assert m2 == meta and arrays == [] and consumed == len(buf)
+else:
+    def test_hypothesis_property_suite():
+        pytest.skip("hypothesis not installed — the deterministic "
+                    "fuzz above is the CI floor")
