@@ -68,6 +68,10 @@ def main(argv=None) -> None:
     _section("rfft vs complex plans (wire bytes + wall us, 4x4 mesh)")
     _script(env, "bench_rfft.py", *size)
 
+    _section("FFT-conv operator plans: fused vs unfused (4x4 mesh)")
+    _script(env, "bench_fftconv.py",
+            *(['--smoke'] if args.smoke else []))
+
     _section("FFT serving: sequential loop vs batched engine (4x4 mesh)")
     _script(env, "bench_serve_fft.py", *size)
 

@@ -8,6 +8,11 @@ IFFT over the (2S padded) sequence — the FFT engine from the paper
 reproduction doing the work an attention/scan mixer would. DESIGN.md §5
 lists this as the Mamba2 'optional exact FFT path' tie-in.
 
+The mixer runs through a fused ``fft.plan_op`` operator plan (one
+dispatch per conv; the learned kernel rides as a runtime operand of the
+same dispatch during training, and its spectrum is baked once per plan
+at eval) — see ``models/ssd.py:fftconv_apply``.
+
     PYTHONPATH=src python examples/fftconv_lm.py --steps 150
 """
 import argparse

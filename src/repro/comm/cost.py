@@ -275,6 +275,10 @@ class ScheduleTable:
     measured under the Pallas kernel tier carry a ``kernel`` tag
     (``'pallas'``) the same way; untagged rows predate the tier or
     measured the reference path, and only answer reference lookups.
+    Rows measured for a fused spectral-operator plan carry an ``op``
+    tag (the plan's ``op_name``); untagged rows describe plain
+    transforms and only answer op-less lookups — a convolution's best
+    coalesce width need not match the bare rfft's.
 
     Rows may additionally carry a ``load`` tag — an integer load level
     from the adaptive drainer policy (:mod:`repro.serve.policy`), where
@@ -297,18 +301,19 @@ class ScheduleTable:
         # overwrite a GPU host's persisted measurement (lookup() filters
         # by backend, so the clobbered row would just vanish)
         dt, be, ld = r.get('dtype'), r.get('backend'), r.get('load')
-        wr, kn = r.get('wire'), r.get('kernel')
+        wr, kn, op = r.get('wire'), r.get('kernel'), r.get('op')
         return (str(r['mesh']), str(r['shape']), str(r['kind']),
                 str(r['strategy']), None if dt is None else str(dt),
                 None if be is None else str(be),
                 None if ld is None else int(ld),
                 None if wr is None else str(wr),
-                None if kn is None else str(kn))
+                None if kn is None else str(kn),
+                None if op is None else str(op))
 
     def __init__(self, rows=()):
         # keyed by _row_key:
         # (mesh, shape, kind, strategy, dtype, backend, load, wire,
-        #  kernel)
+        #  kernel, op)
         self._rows: Dict[tuple, dict] = {}
         self.merge(rows)
 
@@ -334,7 +339,8 @@ class ScheduleTable:
                backend: Optional[str] = None,
                load: Optional[int] = None,
                wire: Optional[str] = None,
-               kernel: Optional[str] = None) -> Optional[dict]:
+               kernel: Optional[str] = None,
+               op: Optional[str] = None) -> Optional[dict]:
         """The measured row for this serving config, or None. Rows
         measured on a DIFFERENT jax backend never answer (the
         per-backend dispatch overhead is the whole reason the table
@@ -357,12 +363,16 @@ class ScheduleTable:
         the same way: ``None`` (the reference tier) answers only from
         kernel-less rows — every row persisted before the kernel tier
         existed measured the reference path — and ``kernel='pallas'``
-        answers only from rows measured under that tier."""
+        answers only from rows measured under that tier. ``op`` is
+        exact-match the same way: ``None`` answers only from rows of
+        plain transform plans, an op name only from rows measured for
+        that fused operator."""
         base = self.make_key(mesh_shape, shape, kind, strategy)
         cands = [r for k, r in self._rows.items()
                  if k[:4] == base
                  and r.get('wire') == wire
                  and r.get('kernel') == kernel
+                 and r.get('op') == op
                  and (backend is None or r.get('backend') in (None, backend))]
         tagged = [r for r in cands if r.get('load') is not None]
         if load is None:
@@ -445,7 +455,8 @@ def persist_schedule_rows(rows, path: Optional[str] = None) -> Optional[str]:
 
 @dataclasses.dataclass(frozen=True)
 class StepCost:
-    kind: str                 # 'fft' | 'rfft' | 'swap' | 'twiddle' | 'reorder'
+    kind: str                 # 'fft' | 'rfft' | 'swap' | 'twiddle' |
+                              # 'reorder' | 'gather' | 'pointwise' | 'elided'
     detail: str
     cycles: float
     swap: Optional[wm.SwapCost] = None
@@ -760,6 +771,96 @@ def large1d_plan_cost(n1: int, n2: int, mesh_axes,
                                 axis_bw=axis_bw))
         steps.append(StepCost('reorder', f'local T x{elems}',
                               wm.LOCAL_REORDER_CPE * elems))
+    return PlanCost(tuple(steps), strategy, method, precision,
+                    overlap_chunks, wire_dtype, kernel)
+
+
+def spectral_op_cost(shape: Sequence[int], layout,
+                     mesh_shape: Mapping[str, int], *,
+                     factors: Optional[Tuple[int, int]] = None,
+                     precision: wm.Precision = 'fp32',
+                     method: str = 'auto', strategy: str = 'all_to_all',
+                     overlap_chunks: int = 1, real: bool = True,
+                     n_spectra: int = 0, n_baked: int = 0,
+                     measured='auto', wire_dtype: str = 'native',
+                     kernel: str = 'reference', backend: str = 'wse',
+                     axis_bw: Optional[Mapping[str, float]] = None
+                     ) -> PlanCost:
+    """Cost the fused rfft -> pointwise -> irfft operator chain as ONE
+    schedule: the forward supersteps, one forward chain per extra
+    runtime spectrum (baked spectra — ``n_baked`` — are plan constants
+    and add only pointwise operand cost), the 'pointwise' stage priced at
+    :data:`repro.core.wse_model.POINTWISE_CPE` cycles per local
+    spectrum element per operand pair, then the mirrored inverse
+    supersteps. The boundary work two back-to-back plans would pay —
+    the truncated-axis 'gather' of a real pencil plan, the rank-1
+    half-plane / natural-order reassembly — appears as a zero-cycle
+    'elided' step naming what was saved, so ``cost_report()`` shows the
+    fusion win explicitly. ``layout`` is the pencil layout for ranks
+    2/3, the flattened mesh axes for rank 1 (with ``factors`` giving
+    the four-step split)."""
+    kw = dict(precision=precision, method=method, strategy=strategy,
+              overlap_chunks=overlap_chunks, real=real, measured=measured,
+              wire_dtype=wire_dtype, kernel=kernel, backend=backend,
+              axis_bw=axis_bw)
+    if factors is not None:
+        n1, n2 = factors
+        base = large1d_plan_cost(n1, n2, layout, mesh_shape,
+                                 natural_order=False, **kw)
+        fwd = list(base.steps)
+        ax = layout if isinstance(layout, tuple) else (layout,)
+        mesh_axis = ax if len(ax) > 1 else ax[0]
+        p = strat.static_group_size(mesh_axis, mesh_shape)
+        if real:
+            # the real cost carries the facade's half-plane assembly as
+            # its last step; the fused operator never leaves the plane
+            fwd, assembly = fwd[:-1], fwd[-1]
+            spec_elems = (-(-(n1 // 2 + 1) // p) * p) * n2 // p
+            elide = StepCost('elided',
+                             f'{assembly.detail} (x2, fused)', 0.0)
+        else:
+            spec_elems = n1 * n2 // p
+            elide = StepCost('elided',
+                             f'natural-order swap+T x{spec_elems} '
+                             f'(x2, fused)', 0.0)
+    else:
+        base = pencil_plan_cost(shape, layout, mesh_shape,
+                                padded_spectrum=True, **kw)
+        fwd = list(base.steps)
+        p_total = 1
+        for o in layout:
+            p_total *= strat.static_group_size(o, mesh_shape)
+        if real:
+            from repro.fft import pencil as _pencil   # lazy: import cycle
+            nh_pad = _pencil.real_padded_extent(shape, layout, mesh_shape)
+            spec_elems = (math.prod(shape[:-1]) * nh_pad) // p_total
+            ra = len(shape) - 1
+            final_lay = _pencil.forward_schedule(tuple(layout), ra)[1]
+            if final_lay[ra] is not None:
+                pg = strat.static_group_size(final_lay[ra], mesh_shape)
+                axn = '*'.join(strat.axis_tuple(final_lay[ra]))
+                would = wm.swap_cycles_a2a(pg, spec_elems, precision)
+                elide = StepCost(
+                    'elided', f'{axn} p={pg} x{spec_elems} (np-layout '
+                    f'gather+scatter, ~{2 * would:.0f}cyc saved)', 0.0)
+            else:
+                elide = None
+        else:
+            spec_elems = math.prod(shape) // p_total
+            elide = None
+    steps = list(fwd)
+    for _ in range(max(int(n_spectra), 0)):
+        steps += fwd
+    n_ops = 1 + max(int(n_spectra), 0) + max(int(n_baked), 0)
+    steps.append(StepCost(
+        'pointwise', f'op x{spec_elems} ({n_ops} spectra)',
+        wm.POINTWISE_CPE * spec_elems * n_ops))
+    if elide is not None:
+        steps.append(elide)
+    # the inverse is the step-by-step mirror: same swap extents, same
+    # pencil counts, reversed order (fft/swap adjacency preserved, so
+    # the overlap pipeline pairs them like the executor does)
+    steps += list(reversed(fwd))
     return PlanCost(tuple(steps), strategy, method, precision,
                     overlap_chunks, wire_dtype, kernel)
 

@@ -67,6 +67,37 @@ from repro.core.plan import Layout, MeshAxis
 # Group helpers (trace-time, inside shard_map)
 # ---------------------------------------------------------------------------
 
+@jax.custom_vjp
+def _barrier_flat(*xs):
+    return lax.optimization_barrier(xs)
+
+
+def _barrier_fwd(*xs):
+    return _barrier_flat(*xs), None
+
+
+def _barrier_bwd(_, cts):
+    return cts
+
+
+_barrier_flat.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+def dbarrier(tree):
+    """``lax.optimization_barrier`` with an identity gradient.
+
+    The stock primitive has no differentiation rule, which would make
+    every plan whose schedule pins a boundary (wire casts, superstep
+    serialization) untrainable — and operator plans sit inside training
+    steps (the fftconv mixer). Reverse mode passes cotangents through
+    unchanged (the barrier IS an identity); the primal lowers to the
+    plain barrier, so compiled programs — and the fused == unfused
+    bitwise contract — are untouched.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.tree.unflatten(treedef, _barrier_flat(*leaves))
+
+
 def axis_tuple(mesh_axis: MeshAxis) -> Tuple[str, ...]:
     """Canonicalize a mesh-axis spec to a tuple of axis names."""
     if mesh_axis is None:
@@ -249,14 +280,14 @@ def wire_cast(x: jax.Array, wire_dtype: str):
         # already at (or below) wire width — e.g. a bf16 block-state
         # operand under an fp16 wire: recasting moves no fewer bytes
         return x, None
-    return lax.optimization_barrier(x.astype(wd)), x.dtype
+    return dbarrier(x.astype(wd)), x.dtype
 
 
 def wire_restore(x: jax.Array, restore_dtype) -> jax.Array:
     """Undo :func:`wire_cast` after the collective."""
     if restore_dtype is None:
         return x
-    return lax.optimization_barrier(x).astype(restore_dtype)
+    return dbarrier(x).astype(restore_dtype)
 
 
 def swap_axes_wire(strategy: 'Strategy', x: jax.Array, mesh_axis: MeshAxis,

@@ -132,6 +132,11 @@ RING_ROUND_OVERHEAD = 512
 #: local reorder cost of the hierarchical exchange's final block
 #: transpose, cycles per complex element (one load+store per element).
 LOCAL_REORDER_CPE = 1.0
+#: pointwise spectral-operator stage of a fused rfft->op->irfft plan,
+#: cycles per complex element per operand pair: one complex multiply
+#: (4 mul + 2 add) on loaded operands — the conv/correlation/solver
+#: ops the operator plans exist for are one such multiply each.
+POINTWISE_CPE = 6.0
 
 
 @dataclasses.dataclass(frozen=True)

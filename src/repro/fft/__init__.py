@@ -14,6 +14,11 @@ Plan/execute model (FFTW-style)::
     spec = rp.forward(x_real)            # half spectrum (.., n//2 + 1),
     x3 = rp.inverse(spec)                # ~half the wire bytes and flops
 
+    op = fft.plan_op((n, n, n), mesh,    # fused rfft -> op -> irfft:
+                     op=lambda re, im, k: _mul(re, im, k),
+                     n_spectra=1)        # ONE dispatch, interior spectrum
+    y = op.apply(x_real, k_real)         # stays distributed (no gather)
+
 Everything else in the repo (``core.distributed``, ``core.fft1d``,
 ``kernels.ops``) is either internal machinery or a deprecated shim over
 this package. Local pencil algorithms live in the single registry
@@ -24,7 +29,7 @@ predicted per-superstep cycles).
 """
 from repro import comm as _comm
 from repro.fft import methods
-from repro.fft.api import FFT, plan, rplan
+from repro.fft.api import FFT, SpectralOp, plan, plan_op, rplan, spectral_mul
 from repro.fft.methods import apply as apply_method
 from repro.fft.methods import apply_real as apply_real_method
 
@@ -39,6 +44,6 @@ def available_comm_strategies():
     return _comm.names() + ('auto',)
 
 
-__all__ = ['FFT', 'plan', 'rplan', 'methods', 'apply_method',
-           'apply_real_method', 'available_methods',
-           'available_comm_strategies']
+__all__ = ['FFT', 'SpectralOp', 'plan', 'plan_op', 'rplan', 'spectral_mul',
+           'methods', 'apply_method', 'apply_real_method',
+           'available_methods', 'available_comm_strategies']

@@ -18,6 +18,7 @@ re-trace.
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -234,6 +235,36 @@ def rplan(shape: Sequence[int], mesh: Mesh, **kw) -> 'FFT':
     return plan(shape, mesh, real=True, **kw)
 
 
+def spectral_mul(ar, ai, k):
+    """The complex spectral product ``(ar + i*ai) * (kr + i*ki)`` with
+    contraction-pinned arithmetic. XLA contracts ``a*b - c*d`` into an
+    FMA — and WHICH product it fuses depends on the surrounding program
+    (optimization barriers and bitcasts are stripped before fusion), so
+    a fused operator plan and the unfused forward/pointwise/inverse
+    composition would disagree by a few ulps on a raw multiply. Here
+    each partial product is multiplied by a data-derived exact one
+    (``(x - x) + 1``, which the compiler cannot constant-fold away):
+    mul-mul pairs never contract, so the product must round to its
+    storage dtype first, and any FMA the backend then forms multiplies
+    by exactly 1 — every compilation context yields the same bits.
+    Ops built from this helper (or from single multiplies, selects, and
+    other one-rounding primitives) make fused == unfused BITWISE; a raw
+    ``ar * kr - ai * ki`` saves three elementwise ops per bin but only
+    agrees to float tolerance. Conjugation-equivariant (negation is
+    exact), so it is safe for the rank-1 real half-plane form.
+    Non-finite spectrum bins come out NaN (the pin is exact only for
+    finite values). ``k`` is a planar ``(kr, ki)`` pair, as handed to
+    operator-plan pointwise stages."""
+    kr, ki = k
+    one = (ar - ar) + jnp.asarray(1.0, dtype=jnp.result_type(ar))
+
+    def pin(p):
+        return p * one
+
+    return (pin(ar * kr) - pin(ai * ki),
+            pin(ar * ki) + pin(ai * kr))
+
+
 def _resolve_comm(shape, layout, mesh_shape, comm, overlap_chunks, method,
                   real=False, wire_dtype='native'):
     """Cost-model resolution of (strategy, overlap_chunks, method) for
@@ -346,11 +377,12 @@ class FFT:
         changes the buffer size, so donation would be a silent no-op)."""
         return self.donate and not self.real
 
-    def with_options(self, **overrides) -> 'FFT':
-        """Re-plan this FFT with some options changed (e.g.
-        ``overlap_chunks``, ``donate``, ``comm``) — everything not
-        overridden carries over already *resolved*, so no 'auto' choice
-        is re-made. The new plan has its own executable caches."""
+    def _options(self) -> dict:
+        """Every resolved option a re-plan needs to reproduce this plan.
+        Subclasses (operator plans) EXTEND this dict with their own
+        options, so :meth:`with_options` round-trips new plan kinds the
+        same way it round-trips wire/comm/kernel — no option silently
+        resets on re-plan."""
         kw = dict(method=self.method, compute_dtype=self.compute_dtype,
                   kernel=self.kernel, comm=self.comm,
                   overlap_chunks=self.overlap_chunks,
@@ -362,12 +394,27 @@ class FFT:
             kw['mesh_axes'] = self._axes1d
         else:
             kw['layout'] = self._pplan.layout
-        kw.update(overrides)
+        return kw
+
+    def _replan(self, kw: dict) -> 'FFT':
+        """Build the re-planned object from a full option dict;
+        subclasses route to their own planner."""
         if not kw['real']:
             # padded_spectrum is a real-plan-only knob; a real -> complex
             # re-plan must not carry it into plan() validation
             kw['padded_spectrum'] = False
         return plan(self.shape, self.mesh, **kw)
+
+    def with_options(self, **overrides) -> 'FFT':
+        """Re-plan this FFT with some options changed (e.g.
+        ``overlap_chunks``, ``donate``, ``comm``) — everything not
+        overridden carries over already *resolved*, so no 'auto' choice
+        is re-made. The new plan has its own executable caches.
+        Operator plans (:func:`plan_op`) round-trip their op/pointwise
+        options the same way."""
+        kw = self._options()
+        kw.update(overrides)
+        return self._replan(kw)
 
     @property
     def _real_pad(self) -> int:
@@ -752,3 +799,404 @@ class FFT:
                 f"wire_dtype={self.wire_dtype!r}, "
                 f"mesh={dict(self.mesh.shape)}, "
                 f"batch_spec={self.batch_spec!r})")
+
+
+def plan_op(shape: Sequence[int], mesh: Mesh, *, op,
+            op_name: Optional[str] = None, real: bool = True,
+            n_spectra: int = 0, spectra=None,
+            spectra_form: str = 'plan', **kw) -> 'SpectralOp':
+    """Plan a fused spectral OPERATOR: rfft -> ``op`` -> irfft as ONE
+    plan object whose interior spectrum stays in its native distributed
+    layout — the truncated-axis boundary gather of a real plan (and its
+    inverse scatter) is elided entirely, so a convolution costs one
+    dispatch and roughly half the wire bytes of two back-to-back plans.
+
+    Args:
+      shape, mesh: as :func:`plan`. All of :func:`plan`'s options
+        (``method``/``kernel``/``comm``/``wire_dtype``/
+        ``overlap_chunks``/``compute_dtype``/``donate``/``mesh_axes``/
+        ``layout``) pass through ``**kw``; ``batch_spec`` and
+        ``restore_layout`` do not apply to operator plans.
+      op: the pointwise spectral stage, ``op(re, im, *spectra) ->
+        (re, im)``: called with LOCAL shards of the planar spectrum
+        plus one planar ``(re, im)`` pair per extra spectrum (runtime
+        operands first, then baked ``spectra`` in order). It MUST be
+        elementwise in the spectrum bins — it runs under whatever
+        sharding the schedule produced, never on the gathered array —
+        and, for real plans, conjugation-equivariant (true of any
+        multiplicative factor: convolution, correlation with a
+        conjugated factor, a solver's Green's function). Leading batch
+        dims broadcast numpy-style across operands, e.g. a ``(B, d,
+        n)`` signal against a ``(d, n)`` kernel.
+      op_name: tag for serving-schedule rows and reports (defaults to
+        ``op.__name__``).
+      real: plan the real (rfft/irfft) chain — the input and output of
+        ``apply`` are REAL arrays of ``shape``. ``False`` fuses a
+        complex fft -> op -> ifft.
+      n_spectra: number of extra RUNTIME operands ``apply`` takes after
+        the main one; each is forward-transformed inside the same fused
+        executable (still one dispatch) — the training-time path where
+        the factor changes every step.
+      spectra: static spectra baked into the plan as constants —
+        transformed ONCE at first use (:attr:`SpectralOp.bake_count`),
+        stored as distributed device arrays in the native spectrum
+        layout, and handed to ``op`` after the runtime operands. The
+        inference path: the conv kernel's FFT is never recomputed.
+      spectra_form: how to read ``spectra``: ``'plan'`` — operand-space
+        arrays (real arrays for real plans) transformed by this plan's
+        own forward; ``'spectrum'`` — already-transformed spectral
+        arrays in ``np.fft.rfftn`` order (complex plans: ``np.fft.fftn``
+        order), e.g. an analytically known Green's function.
+
+    Returns a :class:`SpectralOp` — an :class:`FFT` subclass whose
+    :meth:`SpectralOp.apply` runs the whole fused chain; ``forward``/
+    ``inverse`` still run the plain transforms (they are what bakes
+    ``spectra``).
+    """
+    if not callable(op):
+        raise ValueError(f"op must be callable, got {type(op).__name__}")
+    if spectra_form not in ('plan', 'spectrum'):
+        raise ValueError(f"spectra_form must be 'plan' or 'spectrum', "
+                         f"got {spectra_form!r}")
+    n_spectra = int(n_spectra)
+    if n_spectra < 0:
+        raise ValueError(f"n_spectra must be >= 0, got {n_spectra}")
+    if kw.pop('restore_layout', False):
+        raise ValueError("operator plans fuse forward and inverse back to "
+                         "the input layout; restore_layout does not apply")
+    if kw.pop('batch_spec', None) is not None:
+        raise ValueError("operator plans batch over replicated leading "
+                         "dims; batch_spec is not supported")
+    kw.pop('padded_spectrum', None)   # derived: the fused interior is
+    # ALWAYS the native padded spectrum — that is the whole point
+    base = plan(shape, mesh, real=real,
+                padded_spectrum=real and len(tuple(shape)) > 1, **kw)
+    return SpectralOp(shape=base.shape, mesh=mesh, method=base.method,
+                      compute_dtype=base.compute_dtype, kernel=base.kernel,
+                      comm=base.comm, overlap_chunks=base.overlap_chunks,
+                      wire_dtype=base.wire_dtype, restore_layout=False,
+                      batch_spec=None, real=real,
+                      padded_spectrum=base.padded_spectrum,
+                      donate=base.donate, pplan=base._pplan,
+                      axes1d=base._axes1d, factors=base._factors,
+                      op=op, op_name=op_name, n_spectra=n_spectra,
+                      spectra=spectra, spectra_form=spectra_form)
+
+
+class SpectralOp(FFT):
+    """A fused spectral-operator plan (see :func:`plan_op`).
+
+    :meth:`apply` executes rfft -> op -> irfft as one cached jitted
+    executable per operand signature; the interior spectrum never hits
+    a boundary gather. Inherited ``forward``/``inverse`` still run the
+    plain transforms of the underlying plan (used to bake static
+    spectra, and handy for debugging the unfused composition).
+    Unlike real transform plans, a real OPERATOR plan donates its main
+    operand when ``donate`` is set: the fused chain returns to the
+    input's exact shape, dtype and layout, so XLA can alias the pair.
+    """
+
+    def __init__(self, *, op, op_name=None, n_spectra=0, spectra=None,
+                 spectra_form='plan', **kw):
+        super().__init__(**kw)
+        self.op = op
+        self.op_name = op_name or getattr(op, '__name__', 'op') or 'op'
+        self.n_spectra = n_spectra
+        self.spectra_form = spectra_form
+        self._spectra_raw = (None if spectra is None
+                             else tuple(spectra))
+        self._baked = None        # flat (re, im, re, im, ...) device arrays
+        self._baked_bnd = ()      # leading batch rank per baked spectrum
+        #: how many times the static spectra were transformed — the
+        #: once-per-plan contract the fftconv regression test pins
+        self.bake_count = 0
+
+    @property
+    def n_baked(self) -> int:
+        return 0 if self._spectra_raw is None else len(self._spectra_raw)
+
+    @property
+    def donates_input(self) -> bool:
+        """Operator plans can donate even when real: the fused chain's
+        output has the input's exact global shape, dtype AND layout
+        (r2c -> ... -> c2r round trip), so XLA aliases the pair."""
+        return self.donate
+
+    # -- with_options round-trip (the PR 7/8 resolved-options contract) -----
+
+    def _options(self) -> dict:
+        kw = super()._options()
+        kw.update(op=self.op, op_name=self.op_name,
+                  n_spectra=self.n_spectra, spectra=self._spectra_raw,
+                  spectra_form=self.spectra_form)
+        return kw
+
+    def _replan(self, kw: dict) -> 'SpectralOp':
+        kw.pop('padded_spectrum', None)   # plan_op derives it
+        return plan_op(self.shape, self.mesh, **kw)
+
+    # -- execution ----------------------------------------------------------
+
+    def __call__(self, x, *extras):
+        return self.apply(x, *extras)
+
+    def apply(self, x, *extras):
+        """Run the fused operator: ``apply(x, *runtime_spectra)`` ->
+        the operated array, same shape/dtype/sharding as ``x``. Real
+        plans take (and return) real arrays; complex plans accept a
+        complex array or a planar ``(re, im)`` pair per operand and
+        return the main operand's form. Any leading dims batch
+        (replicated), broadcasting across operands inside ``op``."""
+        if len(extras) != self.n_spectra:
+            raise ValueError(
+                f"operator plan takes {self.n_spectra} runtime spectra, "
+                f"got {len(extras)}")
+        baked = self._ensure_baked()
+        ops, planars, batch_shapes, dtypes = [], [], [], []
+        for a in (x,) + tuple(extras):
+            planar = isinstance(a, (tuple, list))
+            if self.real:
+                if planar:
+                    raise ValueError("real operator plan operands are "
+                                     "single real arrays")
+                a = jnp.asarray(a)
+                if jnp.issubdtype(a.dtype, jnp.complexfloating):
+                    raise ValueError(
+                        f"real operator plan takes real arrays, got "
+                        f"{a.dtype}")
+                shape, dtype = a.shape, a.dtype
+            elif planar:
+                re, im = a
+                re, im = jnp.asarray(re), jnp.asarray(im)
+                if im.shape != re.shape or im.dtype != re.dtype:
+                    raise ValueError(
+                        f"planar operand mismatch: re is "
+                        f"{re.dtype}{re.shape}, im is {im.dtype}{im.shape}")
+                a, shape, dtype = (re, im), re.shape, re.dtype
+            else:
+                a = jnp.asarray(a)
+                shape, dtype = a.shape, a.dtype
+            if (len(shape) < self.rank
+                    or tuple(shape[len(shape) - self.rank:]) != self.shape):
+                raise ValueError(
+                    f"operand shape {tuple(shape)} does not end with the "
+                    f"planned transform shape {self.shape}")
+            ops.append(a)
+            planars.append(planar)
+            batch_shapes.append(tuple(shape[:len(shape) - self.rank]))
+            dtypes.append(jnp.dtype(dtype).name)
+        key = ('op', tuple(batch_shapes), tuple(dtypes), tuple(planars))
+        fn = self._exec_cache.get(key)
+        if fn is None:
+            fn = self._build_op(tuple(len(b) for b in batch_shapes),
+                                tuple(planars))
+            self._exec_cache[key] = fn
+        flat = []
+        for a, planar in zip(ops, planars):
+            if self.real or planar:
+                flat.extend(a if planar else (a,))
+            else:
+                flat.append(a)
+        return fn(*flat, *baked)
+
+    def _ensure_baked(self):
+        if self._baked is None:
+            self._bake()
+        return self._baked
+
+    def _bake(self):
+        # the first apply() may run inside someone else's trace (e.g.
+        # the serve engine's coalesced-group jit), but the baked
+        # spectra are PLAN STATE and must come out as concrete device
+        # arrays, not tracers of that enclosing trace. The inputs are
+        # concrete, so run the transforms where no ambient trace
+        # exists: trace state is thread-local in jax, and
+        # ensure_compile_time_eval cannot be used here — its eval
+        # trace unbinds the shard_map axis names the distributed
+        # forward needs.
+        if jax.core.trace_state_clean():
+            self._bake_now()
+        else:
+            box = []
+
+            def run():
+                try:
+                    self._bake_now()
+                except BaseException as e:   # noqa: BLE001 — reraised
+                    box.append(e)
+            t = threading.Thread(target=run, name='spectral-op-bake')
+            t.start()
+            t.join()
+            if box:
+                raise box[0]
+
+    def _bake_now(self):
+        flat, bnds = [], []
+        for s in (self._spectra_raw or ()):
+            re, im, nb = self._bake_one(s)
+            flat += [re, im]
+            bnds.append(nb)
+        self._baked = tuple(flat)
+        self._baked_bnd = tuple(bnds)
+        self.bake_count += 1
+
+    def _bake_one(self, s):
+        """One static spectrum -> a planar pair of device arrays in the
+        native distributed spectrum form (the padded rotated layout for
+        ranks 2/3, the rank-1 half-plane / factor-transposed D-form)."""
+        if self.spectra_form == 'plan':
+            y = self.forward(jnp.asarray(s))
+        else:
+            y = jnp.asarray(s)
+            want = self.shape[:-1] + (self.shape[-1] // 2 + 1,) \
+                if self.real else self.shape
+            if (y.ndim < self.rank
+                    or tuple(y.shape[y.ndim - self.rank:]) != want):
+                raise ValueError(
+                    f"spectra_form='spectrum' arrays must end with the "
+                    f"{'rfftn' if self.real else 'fftn'}-order spectrum "
+                    f"shape {want}, got {tuple(y.shape)}")
+        nb = y.ndim - self.rank
+        if self.rank == 1:
+            d = self._spectrum_to_native_1d(np.asarray(y))
+            sh = NamedSharding(self.mesh, P(*(((None,) * nb)
+                                              + self._spec1d)))
+            return (jax.device_put(jnp.asarray(d.real), sh),
+                    jax.device_put(jnp.asarray(d.imag), sh), nb)
+        if self.real and self.spectra_form == 'spectrum':
+            nh_pad = self._real_pad
+            pw = [(0, 0)] * y.ndim
+            pw[-1] = (0, nh_pad - y.shape[-1])
+            y = jnp.pad(y, pw)
+        sh = NamedSharding(self.mesh, P(*(((None,) * nb)
+                                          + tuple(self._spec_layout))))
+        return (jax.device_put(jnp.real(y), sh),
+                jax.device_put(jnp.imag(y), sh), nb)
+
+    @property
+    def _spec_layout(self) -> Layout:
+        """Layout of the native (padded) interior spectrum, ranks 2/3."""
+        return pencil.forward_schedule(self._pplan.layout,
+                                       self._pplan.real_axis)[1]
+
+    @property
+    def _spec1d(self):
+        ax = self._axes1d
+        return ((ax if len(ax) > 1 else ax[0]), None)
+
+    def _spectrum_to_native_1d(self, y: np.ndarray) -> np.ndarray:
+        """np.fft.rfft/fft-order bins -> the four-step's native
+        distributed form: the rows-halved half plane (real) or the
+        factor-transposed D matrix (complex), pad rows zeroed. The
+        mapping is pure indexing + conjugation, so a spectrum baked
+        from :meth:`forward` lands bitwise where the fused forward
+        would have computed it."""
+        n1, n2 = self._factors
+        n = n1 * n2
+        if not self.real:
+            return np.swapaxes(y.reshape(y.shape[:-1] + (n2, n1)), -1, -2)
+        nh1 = n1 // 2 + 1
+        psize = 1
+        for a in self._axes1d:
+            psize *= self.mesh.shape[a]
+        nh1p = -(-nh1 // psize) * psize
+        full = np.concatenate(
+            [y, np.conj(y[..., 1:n // 2][..., ::-1])], axis=-1)
+        d = np.swapaxes(full.reshape(y.shape[:-1] + (n2, n1)), -1, -2)
+        d = d[..., :nh1, :]
+        pad = [(0, 0)] * d.ndim
+        pad[-2] = (0, nh1p - nh1)
+        return np.pad(d, pad)
+
+    def _build_op(self, batch_ndims, planars):
+        nb0 = batch_ndims[0]
+        if self.rank == 1:
+            n1, n2 = self._factors
+            raw = large1d.make_fourstep_op(
+                n1, n2, self.mesh, self._axes1d, self.op, real=self.real,
+                batch_ndims=batch_ndims, baked_batch_ndims=self._baked_bnd,
+                method=self.method, kernel=self.kernel,
+                compute_dtype=self.compute_dtype, comm=self.comm,
+                wire_dtype=self.wire_dtype)
+
+            def view(a):
+                return a.reshape(a.shape[:-1] + (n1, n2))
+        else:
+            raw, _, _ = pencil.make_fused_op(
+                self._pplan, self.op, batch_ndims=batch_ndims,
+                baked_batch_ndims=self._baked_bnd,
+                overlap_chunks=self.overlap_chunks)
+
+            def view(a):
+                return a
+        out_sh = NamedSharding(
+            self.mesh, P(*(((None,) * nb0) + tuple(self.in_layout))))
+        dn = self.donates_input
+
+        if self.real:
+            def run(*args):
+                k = len(batch_ndims)
+                mains = [view(a) for a in args[:k]]
+                y = raw(*mains, *args[k:])
+                return y.reshape(y.shape[:-2] + (n1 * n2,)) \
+                    if self.rank == 1 else y
+
+            return jax.jit(run, out_shardings=out_sh,
+                           donate_argnums=(0,) if dn else ())
+
+        # complex plans: per-operand complex-array or planar form; the
+        # raw fn speaks flat planar pairs throughout
+        def run_c(*args):
+            flat, i = [], 0
+            for planar in planars:
+                if planar:
+                    flat += [view(args[i]), view(args[i + 1])]
+                    i += 2
+                else:
+                    flat += [view(args[i].real), view(args[i].imag)]
+                    i += 1
+            yr, yi = raw(*flat, *args[i:])
+            if self.rank == 1:
+                yr = yr.reshape(yr.shape[:-2] + (n1 * n2,))
+                yi = yi.reshape(yi.shape[:-2] + (n1 * n2,))
+            if planars[0]:
+                return yr, yi
+            return jax.lax.complex(yr, yi)
+
+        donate = ((0, 1) if planars[0] else (0,)) if dn else ()
+        if planars[0]:
+            return jax.jit(run_c, out_shardings=(out_sh, out_sh),
+                           donate_argnums=donate)
+        return jax.jit(run_c, out_shardings=out_sh, donate_argnums=donate)
+
+    # -- cost model ---------------------------------------------------------
+
+    def plan_cost(self, precision: str = 'fp32', *, measured='auto'):
+        """The fused chain priced per superstep — forward, one chain
+        per runtime spectrum, the pointwise stage, the mirrored
+        inverse — with the elided boundary gather shown as a
+        zero-cycle 'elided' step (:func:`repro.comm.cost.
+        spectral_op_cost`)."""
+        mesh_shape = dict(self.mesh.shape)
+        if self.rank == 1:
+            ax = self._axes1d
+            layout = tuple(ax) if len(ax) > 1 else ax[0]
+            factors = self._factors
+        else:
+            layout, factors = self._pplan.layout, None
+        return commlib.cost.spectral_op_cost(
+            self.shape, layout, mesh_shape, factors=factors,
+            precision=precision, method=self.method, strategy=self.comm,
+            overlap_chunks=self.overlap_chunks, real=self.real,
+            n_spectra=self.n_spectra, n_baked=self.n_baked,
+            measured=measured, wire_dtype=self.wire_dtype,
+            kernel=self.resolved_kernel)
+
+    def __repr__(self):
+        return (f"SpectralOp(op={self.op_name!r}, shape={self.shape}, "
+                f"real={self.real}, n_spectra={self.n_spectra}, "
+                f"n_baked={self.n_baked}, "
+                f"method={self.method!r}, comm={self.comm!r}, "
+                f"kernel={self.kernel!r}, "
+                f"wire_dtype={self.wire_dtype!r}, "
+                f"mesh={dict(self.mesh.shape)})")

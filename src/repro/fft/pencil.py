@@ -55,6 +55,28 @@ def default_fused() -> bool:
     return True
 
 
+def pin_rounding(*arrays):
+    """Force each array to round to its storage dtype at this point.
+
+    ``jax.lax.optimization_barrier`` does NOT do this: the CPU backend
+    strips barriers before fusion, so a trailing multiply feeding a
+    consumer add across a program splice can still FMA-contract — and
+    WHICH product contracts depends on the surrounding program, making
+    a fused operator plan and the standalone plan differ by a few ulps.
+    Multiplying by a data-derived exact one (``(a - a) + 1``, which the
+    compiler cannot constant-fold) pins the rounding instead: mul-mul
+    pairs never contract, so the producer must round first, and any FMA
+    the backend then forms multiplies by exactly 1. Exact only for
+    finite values (non-finite entries come out NaN), matching
+    :func:`repro.fft.api.spectral_mul`.
+    """
+    out = []
+    for a in arrays:
+        one = (a - a) + jnp.asarray(1.0, dtype=a.dtype)
+        out.append(a * one)
+    return out[0] if len(out) == 1 else tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # Schedule derivation (pure layout algebra — no data)
 # ---------------------------------------------------------------------------
@@ -365,10 +387,10 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
             # batched (serving) executions stop being bit-identical to
             # per-request ones (measured at 32^3; the complex pipeline
             # has no such epilogue and is stable without help)
-            return jax.lax.optimization_barrier((re, im))
+            return comm.strategies.dbarrier((re, im))
 
         def c2r(re, im):
-            re, im = jax.lax.optimization_barrier((re, im))
+            re, im = comm.strategies.dbarrier((re, im))
             re = jax.lax.slice_in_dim(re, 0, nh, axis=off + ra)
             im = jax.lax.slice_in_dim(im, 0, nh, axis=off + ra)
             return methods.apply_real(re, im, axis=off + ra, inverse=True,
@@ -483,11 +505,11 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                         # barriers XLA hoists the consumer's f32 upcast
                         # across the all_to_all, doubling transpose
                         # bytes (measured; CPU-backend dots upcast bf16)
-                        x = jax.lax.optimization_barrier(x)
+                        x = comm.strategies.dbarrier(x)
                         x = strategy.swap_axes(x, mesh_axis,
                                                shard_pos=off + sp,
                                                mem_pos=off + mem_pos)
-                        x = jax.lax.optimization_barrier(x)
+                        x = comm.strategies.dbarrier(x)
                     else:
                         x = comm.strategies.swap_axes_wire(
                             strategy, x, mesh_axis, shard_pos=off + sp,
@@ -503,6 +525,153 @@ def make_fft(plan: PencilPlan, *, inverse: bool = False,
                    in_specs=(in_spec, in_spec),
                    out_specs=(out_spec, out_spec))
     return fn, in_layout, out_layout
+
+
+def make_fused_op(plan: PencilPlan, pointwise, *,
+                  batch_ndims: Tuple[int, ...] = (0,),
+                  baked_batch_ndims: Tuple[int, ...] = (),
+                  overlap_chunks: int = 1,
+                  fused: Optional[bool] = None):
+    """Fused spectral-operator executor: the forward schedule spliced to
+    the reversed inverse schedule at the spectrum midpoint, with
+    ``pointwise`` applied in whatever sharding the spectrum lands in.
+
+    One shard_map runs rfft -> pointwise -> irfft; the interior spectrum
+    stays in its native distributed (padded) layout, so the truncated-
+    axis boundary gather of a real plan — and its inverse scatter — are
+    elided entirely. ``pointwise(re, im, *extras)`` receives LOCAL
+    shards of the planar spectrum (plus one planar ``(re, im)`` pair per
+    extra operand / baked spectrum) and must be elementwise in the
+    spectrum bins — it runs under whatever sharding the schedule
+    produced, so any cross-bin mixing would silently read only the
+    local shard.
+
+    ``batch_ndims[0]`` is the main operand's leading batch rank;
+    ``batch_ndims[1:]`` describe extra operands forward-transformed
+    inside the same executable (one fused dispatch still);
+    ``baked_batch_ndims`` describe pre-transformed planar spectra
+    appended as trailing ``(re, im)`` argument pairs already in the
+    spectrum layout. Real plans: ``fn(x, *extras, *baked) -> y`` (all
+    real, input layout preserved). Complex plans: every operand is a
+    planar pair: ``fn(re, im, *extra_pairs, *baked) -> (re, im)``.
+
+    Returns ``(fn, in_layout, spec_layout)``.
+    """
+    if fused is None:
+        fused = default_fused()
+    plan.validate()
+    methods.validate(plan.method)
+    comm.validate(plan.comm)
+    first = plan.real_axis
+    fsteps, spec_layout = forward_schedule(plan.layout, first)
+    isteps, _ = inverse_schedule(plan.layout, first)
+    in_layout = plan.layout
+    n_extra = len(batch_ndims) - 1
+
+    def bspec(nb, layout):
+        return P(*(((None,) * nb) + tuple(layout)))
+
+    def barrier(pair):
+        return comm.strategies.dbarrier(tuple(pair))
+
+    if plan.real:
+        ra = first
+        nh = real_half_extent(plan.shape[-1])
+        nh_pad = real_padded_extent(plan.shape, plan.layout,
+                                    dict(plan.mesh.shape))
+        packed = packed_plan(plan, nh_pad)
+        assert fsteps[0] == ('fft', ra) and isteps[-1] == ('fft', ra)
+
+        def r2c(x, off):
+            re, im = methods.apply_real(x, axis=off + ra,
+                                        method=plan.method,
+                                        compute_dtype=plan.compute_dtype)
+            if nh_pad != nh:
+                pw = [(0, 0)] * re.ndim
+                pw[off + ra] = (0, nh_pad - nh)
+                re, im = jnp.pad(re, pw), jnp.pad(im, pw)
+            return barrier((re, im))
+
+        def c2r(re, im, off):
+            re, im = barrier((re, im))
+            re = jax.lax.slice_in_dim(re, 0, nh, axis=off + ra)
+            im = jax.lax.slice_in_dim(im, 0, nh, axis=off + ra)
+            return methods.apply_real(re, im, axis=off + ra, inverse=True,
+                                      method=plan.method,
+                                      compute_dtype=plan.compute_dtype)
+
+        def local(*args):
+            mains, baked = args[:1 + n_extra], args[1 + n_extra:]
+            specs = []
+            for x, nb in zip(mains, batch_ndims):
+                if specs:
+                    # serialize the operand chains: the next input only
+                    # becomes available behind the previous spectrum, so
+                    # XLA cannot sibling-fuse ops of independent chains
+                    # (cross-chain fusion changes FMA contraction inside
+                    # the twiddle multiplies and breaks fused == unfused
+                    # bitwise)
+                    x, specs[-1] = comm.strategies.dbarrier(
+                        (x, specs[-1]))
+                re, im = r2c(x, nb)
+                re, im = _execute(re, im, in_layout, fsteps[1:],
+                                  inverse=False, plan=packed, batch_ndim=nb,
+                                  overlap_chunks=overlap_chunks, fused=fused)
+                # pin the splice point: the forward section must compile
+                # exactly like the standalone plan so fused == unfused
+                # stays bitwise (same rationale as the r2c barrier)
+                specs.append(barrier((re, im)))
+            pairs = [(baked[2 * i], baked[2 * i + 1])
+                     for i in range(len(baked) // 2)]
+            re, im = specs[0]
+            re, im = pointwise(re, im, *specs[1:], *pairs)
+            re, im = barrier((re, im))
+            nb = batch_ndims[0]
+            re, im = _execute(re, im, spec_layout, isteps[:-1], inverse=True,
+                              plan=packed, batch_ndim=nb,
+                              overlap_chunks=overlap_chunks, fused=fused)
+            return c2r(re, im, nb)
+
+        in_specs = (tuple(bspec(nb, in_layout) for nb in batch_ndims)
+                    + tuple(s for nb in baked_batch_ndims
+                            for s in (bspec(nb, spec_layout),) * 2))
+        fn = shard_map(local, mesh=plan.mesh, in_specs=in_specs,
+                       out_specs=bspec(batch_ndims[0], in_layout))
+        return fn, in_layout, spec_layout
+
+    def local_c(*args):
+        base = 2 * (1 + n_extra)
+        baked = args[base:]
+        specs = []
+        for i, nb in enumerate(batch_ndims):
+            re, im = args[2 * i], args[2 * i + 1]
+            if specs:
+                # serialize the chains (see the real path): no
+                # cross-chain sibling fusion, bitwise-stable sections
+                re, im, specs[-1] = comm.strategies.dbarrier(
+                    (re, im, specs[-1]))
+            re, im = _execute(re, im, in_layout, fsteps, inverse=False,
+                              plan=plan, batch_ndim=nb,
+                              overlap_chunks=overlap_chunks, fused=fused)
+            specs.append(barrier((re, im)))
+        pairs = [(baked[2 * i], baked[2 * i + 1])
+                 for i in range(len(baked) // 2)]
+        re, im = specs[0]
+        re, im = pointwise(re, im, *specs[1:], *pairs)
+        re, im = barrier((re, im))
+        re, im = _execute(re, im, spec_layout, isteps, inverse=True,
+                          plan=plan, batch_ndim=batch_ndims[0],
+                          overlap_chunks=overlap_chunks, fused=fused)
+        return re, im
+
+    in_specs = (tuple(s for nb in batch_ndims
+                      for s in (bspec(nb, in_layout),) * 2)
+                + tuple(s for nb in baked_batch_ndims
+                        for s in (bspec(nb, spec_layout),) * 2))
+    out_spec = bspec(batch_ndims[0], in_layout)
+    fn = shard_map(local_c, mesh=plan.mesh, in_specs=in_specs,
+                   out_specs=(out_spec, out_spec))
+    return fn, in_layout, spec_layout
 
 
 def fft3d(re, im, plan: PencilPlan, **kw) -> Planar:

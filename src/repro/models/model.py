@@ -163,7 +163,7 @@ def _apply_block(p: Dict, cfg, kind: str, x, positions, *, rules=None,
         out = griffin.rglru_apply(p[kind], cfg, h, return_cache=want_cache)
         y, cache = out if want_cache else (out, None)
     elif kind == 'fftconv':
-        y = ssd.fftconv_apply(p[kind], cfg, h)
+        y = ssd.fftconv_apply(p[kind], cfg, h, mesh=mesh)
     else:
         raise ValueError(kind)
     x = _constrain(x + y, rules, ('batch', seq_ax, None))

@@ -191,6 +191,65 @@ def ssd_decode(p: Dict, cfg, x, cache: Dict):
 # FFT long-convolution mixer (paper tie-in; examples/fftconv_lm.py)
 # ---------------------------------------------------------------------------
 
+#: (kind, n, mesh) -> cached fftconv operator plan. The runtime entry
+#: ('rt') is one n_spectra=1 plan shared by every training step; the
+#: baked entry holds (param-identity token, strong param refs, plan) —
+#: the refs keep the id()-based token valid for the entry's lifetime.
+_fftconv_plans: Dict = {}
+
+
+def _pick_axes(mesh, n: int):
+    """Mesh axes for a length-``n`` rank-1 conv plan: the axes whose
+    device product divides BOTH four-step factors (the rank-1 layout
+    constraint). Tries all size>1 axes together, then each alone
+    (largest first). None -> no distributed plan fits this mesh; the
+    caller falls back to the local real-pencil path."""
+    from repro.core import twiddle as tw
+    n1, n2 = tw.four_step_factors(n)
+    live = tuple(a for a in mesh.axis_names if mesh.shape[a] > 1)
+    for axes in ((live,) if live else ()) + \
+            tuple((a,) for a in sorted(live, key=lambda a: -mesh.shape[a])):
+        psize = 1
+        for a in axes:
+            psize *= mesh.shape[a]
+        if n1 % psize == 0 and n2 % psize == 0:
+            return axes
+    return None if live else (mesh.axis_names[0],)
+
+
+def _fftconv_op_plan(n: int, mesh, p: Dict, kr, klen: int):
+    """The cached fused operator plan for an (n, mesh) conv, or None
+    when the mesh cannot host one. Traced kernel (training: the
+    spectrum is a function of live parameters) -> the shared
+    ``n_spectra=1`` plan, kernel riding as a runtime operand of the
+    same single dispatch. Concrete kernel (eval/decode) -> a plan with
+    the kernel spectrum BAKED: transformed once (``bake_count``) and
+    reused until the parameter arrays change identity."""
+    from repro import fft
+    axes = _pick_axes(mesh, n)
+    if axes is None:
+        return None
+    if isinstance(kr, jax.core.Tracer):
+        key = ('rt', n, mesh)
+        pl = _fftconv_plans.get(key)
+        if pl is None:
+            pl = fft.plan_op((n,), mesh, op=fft.spectral_mul,
+                             op_name='fftconv', real=True, n_spectra=1,
+                             donate=False, mesh_axes=axes)
+            _fftconv_plans[key] = pl
+        return pl
+    key = ('baked', n, mesh)
+    tok = (id(p['kernel']), id(p['decay']), klen)
+    ent = _fftconv_plans.get(key)
+    if ent is None or ent[0] != tok:
+        pl = fft.plan_op((n,), mesh, op=fft.spectral_mul,
+                         op_name='fftconv', real=True, donate=False,
+                         mesh_axes=axes, spectra=(kr,))
+        ent = (tok, (p['kernel'], p['decay']), pl)
+        _fftconv_plans[key] = ent
+    return ent[2]
+
+
 def fftconv_plan(cfg) -> Dict:
     d = cfg.d_model
     return {
@@ -202,16 +261,26 @@ def fftconv_plan(cfg) -> Dict:
     }
 
 
-def fftconv_apply(p: Dict, cfg, x):
-    """y = causal_conv(x, k) via FFT: pad to 2S, planar four-step FFT from
-    the repro.fft method registry, pointwise product, inverse. The
-    long-conv form of a
+def fftconv_apply(p: Dict, cfg, x, *, mesh=None):
+    """y = causal_conv(x, k) via the repo's FFT stack: pad to 2S, fused
+    rfft -> spectral multiply -> irfft. The long-conv form of a
     constant-decay SSM — the wsFFT engine as an LM mixer.
+
+    With ``mesh`` the conv runs through a cached :func:`repro.fft.
+    plan_op` operator plan: ONE dispatch whose interior spectrum never
+    hits a boundary gather. A traced (training) kernel rides as a
+    runtime operand of that dispatch; a concrete (eval) kernel's
+    spectrum is baked into the plan — transformed once, never
+    recomputed per forward. Without a usable mesh the conv uses the
+    local REAL pencil transforms (half spectra via
+    ``methods.apply_real``) — in no case the old complex transform of
+    a zero imaginary plane whose inverse's imaginary half is dropped.
 
     No multiplicative gate: a pointwise content gate corrupts the
     relative-offset copy path that IS the conv mixer's strength
     (measured: gated version cannot learn period-k copying; ungated
     reaches ~0.3 nats on it)."""
+    from repro import fft
     from repro.fft import methods as fftm
     B, S, d = x.shape
     h = L.apply_linear(p['wi'], x)
@@ -224,10 +293,13 @@ def fftconv_apply(p: Dict, cfg, x):
     kf = ker.T                                                    # (d, klen)
     hr = jnp.pad(hf, ((0, 0), (0, 0), (0, n - S)))
     kr = jnp.pad(kf, ((0, 0), (0, n - klen)))
-    hre, him = fftm.apply(hr, jnp.zeros_like(hr), method='four_step')
-    kre, kim = fftm.apply(kr, jnp.zeros_like(kr), method='four_step')
-    yre = hre * kre - him * kim
-    yim = hre * kim + him * kre
-    yr, _ = fftm.apply(yre, yim, inverse=True, method='four_step')
+    op = None if mesh is None else _fftconv_op_plan(n, mesh, p, kr, klen)
+    if op is not None:
+        yr = op.apply(hr, kr) if op.n_spectra else op.apply(hr)
+    else:
+        hre, him = fftm.apply_real(hr, method='four_step')
+        kre, kim = fftm.apply_real(kr, method='four_step')
+        yre, yim = fft.spectral_mul(hre, him, (kre, kim))
+        yr = fftm.apply_real(yre, yim, inverse=True, method='four_step')
     y = yr[..., :S].swapaxes(1, 2).astype(x.dtype)
     return L.apply_linear(p['wo'], y)

@@ -428,6 +428,10 @@ class FFTEngine:
         self._states = LRUPlanCache(max_entries=max_plans,
                                     max_bytes=plan_cache_bytes,
                                     on_evict=self._evict_state)
+        # registered operator plans, by name — pinned, never LRU-evicted
+        # (they hold user closures and baked spectra a rebuild could
+        # not recover)
+        self._ops: Dict[str, _PlanState] = {}
         self.plan_builds: Dict[tuple, int] = {}
         if self._seed is not None:
             self._state(self._seed.shape, self._seed.real)
@@ -537,12 +541,17 @@ class FFTEngine:
             base = base.with_options(overlap_chunks=c, donate=self.donate)
         return _PlanState(base, w, c)
 
-    def _pick_schedule(self, p: fft_api.FFT) -> Tuple[int, int]:
+    def _pick_schedule(self, p: fft_api.FFT,
+                       op: Optional[str] = None) -> Tuple[int, int]:
         """(coalesce width, overlap chunks) for one plan: a persisted
         autotune measurement for this (mesh, shape, kind, strategy)
         wins when it fits the engine's knobs; otherwise minimize the
         cost model's steady-state us/request subject to the latency
-        budget (ties to the smaller batch)."""
+        budget (ties to the smaller batch). Operator plans carry their
+        registered ``op`` name into the table key — a fused rfft->op->
+        irfft group has ~2x a plain transform's compute per request,
+        so its measured schedule must not answer for (or be clobbered
+        by) the bare plan's."""
         pc = None
         row = (self._schedule_table.lookup(
                    dict(self.mesh.shape), p.shape,
@@ -551,7 +560,8 @@ class FFTEngine:
                    wire=(None if p.wire_dtype == 'native'
                          else p.wire_dtype),
                    kernel=(None if p.resolved_kernel == 'reference'
-                           else p.resolved_kernel))
+                           else p.resolved_kernel),
+                   op=op)
                if self._schedule_table is not None else None)
         if row is not None:
             w, c = row['coalesce_width'], row['overlap_chunks']
@@ -594,23 +604,98 @@ class FFTEngine:
                              "their shape)")
         return self.shape
 
-    def plan_for(self, real: bool = False, shape=None) -> fft_api.FFT:
+    def plan_for(self, real: bool = False, shape=None,
+                 op: Optional[str] = None) -> fft_api.FFT:
         """The engine's plan for this (shape, kind) — its executable
-        cache is shared across every batch width the engine runs."""
+        cache is shared across every batch width the engine runs. With
+        ``op=`` the registered operator plan of that name."""
+        if op is not None:
+            return self._op_state(op).plan
         return self._state(self._default_shape(shape), real).plan
 
-    def schedule(self, real: bool = False, shape=None) -> Tuple[int, int]:
+    def register_op(self, name: str, op_plan=None, *, shape=None,
+                    **plan_op_kwargs) -> 'fft_api.SpectralOp':
+        """Register a fused spectral-operator plan under ``name`` so
+        requests can run through it (``submit(x, op=name)``): the whole
+        coalesced group executes rfft -> op -> irfft as ONE dispatch,
+        the interior spectra never leaving their native distributed
+        layout. Pass a built :func:`repro.fft.plan_op` plan, or its
+        kwargs (``shape`` defaults to the engine's).
+
+        Only fully-baked operator plans are servable (``n_spectra ==
+        0``): serving coalesces SINGLE-operand requests, and a runtime
+        extra spectrum would need per-request operand pairing the
+        group stacker does not do. Registered plans are pinned — never
+        LRU-evicted — because they hold user closures and baked
+        spectra a shape-driven rebuild could not recover."""
+        if not name or not isinstance(name, str):
+            raise ValueError(f"op name must be a non-empty string, "
+                             f"got {name!r}")
+        if op_plan is None:
+            op_plan = fft_api.plan_op(self._default_shape(shape),
+                                      self.mesh, **plan_op_kwargs)
+        elif plan_op_kwargs or shape is not None:
+            raise ValueError("pass EITHER a built operator plan OR "
+                             "plan_op kwargs, not both")
+        if not isinstance(op_plan, fft_api.SpectralOp):
+            raise TypeError(f"register_op needs a fft.plan_op plan, "
+                            f"got {type(op_plan).__name__}")
+        if op_plan.n_spectra:
+            raise ValueError(
+                f"operator plan {name!r} takes {op_plan.n_spectra} "
+                f"runtime spectra; only fully-baked operator plans "
+                f"(n_spectra=0, spectra=[...]) are servable")
+        w, c = self._pick_schedule(op_plan, op=name)
+        opts = {}
+        if c != op_plan.overlap_chunks:
+            opts['overlap_chunks'] = c
+        if self.donate != op_plan.donate:
+            opts['donate'] = self.donate
+        if opts:
+            op_plan = op_plan.with_options(**opts)
+        with self._plan_lock:
+            self._ops[name] = _PlanState(op_plan, w, c)
+        return op_plan
+
+    def _op_state(self, name: str) -> _PlanState:
+        with self._plan_lock:
+            st = self._ops.get(name)
+        if st is None:
+            raise KeyError(f"no operator plan registered as {name!r}; "
+                           f"known: {sorted(self._ops)}")
+        return st
+
+    def registered_ops(self) -> List[str]:
+        """Names of the registered operator plans."""
+        with self._plan_lock:
+            return sorted(self._ops)
+
+    def schedule(self, real: bool = False, shape=None,
+                 op: Optional[str] = None) -> Tuple[int, int]:
         """The (coalesce width, overlap chunks) serving this kind."""
-        st = self._state(self._default_shape(shape), real)
+        if op is not None:
+            st = self._op_state(op)
+        else:
+            st = self._state(self._default_shape(shape), real)
         return st.width, st.chunks
 
     def set_schedule(self, width: int, chunks: int, *, real: bool = False,
-                     shape=None) -> None:
+                     shape=None, op: Optional[str] = None) -> None:
         """Override the serving schedule for one (shape, kind) — what
-        :meth:`autotune` does with its measured winner."""
+        :meth:`autotune` does with its measured winner. ``op=`` targets
+        a registered operator plan instead."""
         if not (1 <= chunks <= width):
             raise ValueError(f"need 1 <= chunks <= width, got "
                              f"({width}, {chunks})")
+        if op is not None:
+            with self._plan_lock:
+                st = self._op_state(op)
+                if chunks != st.plan.overlap_chunks:
+                    st.plan = st.plan.with_options(overlap_chunks=chunks)
+                    st.group_cache.clear()
+                st.width = int(width)
+                st.chunks = int(chunks)
+            return
         with self._plan_lock:
             key = (self._default_shape(shape), bool(real))
             st = self._state(*key)
@@ -785,24 +870,70 @@ class FFTEngine:
                 "without reporting an error); the engine cannot serve — "
                 "construct a new engine")
 
+    def _resolve_op_request(self, x, name: str):
+        """Normalize one operator-plan operand: returns the same tuple
+        shape as :meth:`_resolve_request`, with the op's name folded
+        into the kind slot of the queue key (an op group must never
+        coalesce with a plain transform, or with another op on the
+        same shape)."""
+        st = self._op_state(name)
+        p = st.plan
+        planar = isinstance(x, (tuple, list))
+        if planar:
+            if p.real:
+                raise ValueError(f"operator plan {name!r} is real and "
+                                 f"takes ONE real array, not a planar "
+                                 f"pair")
+            re, im = x
+            re = re if isinstance(re, jax.Array) else np.asarray(re)
+            im = im if isinstance(im, jax.Array) else np.asarray(im)
+            x, op_shape, dtype = (re, im), tuple(re.shape), re.dtype
+        else:
+            if not isinstance(x, jax.Array):
+                x = np.asarray(x)
+            op_shape, dtype = tuple(x.shape), x.dtype
+            if p.real and jnp.issubdtype(dtype, jnp.complexfloating):
+                raise ValueError(f"operator plan {name!r} is real; got "
+                                 f"a complex operand")
+        if op_shape != p.shape:
+            raise ValueError(
+                f"request shape {op_shape} != operator plan {name!r} "
+                f"shape {p.shape} (submit single requests — the engine "
+                f"owns batching)")
+        dtype = jax.dtypes.canonicalize_dtype(dtype)
+        return x, p.shape, f'op:{name}', jnp.dtype(dtype).name, planar, st
+
     def submit(self, x, *, direction: str = 'fwd',
                real: Optional[bool] = None,
+               op: Optional[str] = None,
                max_wait_ms: Optional[float] = _UNSET) -> FFTTicket:
         """Queue one transform request (exactly its transform shape —
         the engine owns batching). ``real=None`` infers the plan kind
-        as documented on :meth:`_resolve_request`. ``max_wait_ms``
-        overrides the engine-wide drainer deadline for THIS request —
-        the per-request latency-SLO seam: a service maps an SLO class
-        to the longest this request may sit in a coalescing queue
-        (None disables the deadline trigger for it; ignored on
-        foreground engines, which only dispatch on ``flush()``).
-        Thread-safe; raises after :meth:`close` and raises immediately
-        when the drainer thread has died (a queued request would
-        otherwise hang forever on ``result()``)."""
+        as documented on :meth:`_resolve_request`. ``op=`` routes the
+        request through a registered operator plan
+        (:meth:`register_op`) instead of a bare transform — the group
+        runs the fused rfft -> op -> irfft as one dispatch.
+        ``max_wait_ms`` overrides the engine-wide drainer deadline for
+        THIS request — the per-request latency-SLO seam: a service
+        maps an SLO class to the longest this request may sit in a
+        coalescing queue (None disables the deadline trigger for it;
+        ignored on foreground engines, which only dispatch on
+        ``flush()``). Thread-safe; raises after :meth:`close` and
+        raises immediately when the drainer thread has died (a queued
+        request would otherwise hang forever on ``result()``)."""
         self._check_serving()
-        x, tshape, real, dtype, planar, st = self._resolve_request(
-            x, direction, real)
-        key = (tshape, real, direction, dtype, planar)
+        if op is not None:
+            if direction != 'fwd' or real is not None:
+                raise ValueError("op= requests take no direction/real: "
+                                 "the operator plan rounds back to its "
+                                 "input form")
+            x, tshape, kind, dtype, planar, st = self._resolve_op_request(
+                x, op)
+            key = (tshape, kind, 'op', dtype, planar)
+        else:
+            x, tshape, real, dtype, planar, st = self._resolve_request(
+                x, direction, real)
+            key = (tshape, real, direction, dtype, planar)
         t = FFTTicket(self)
         with self._cond:
             # re-checked under the lock: a drainer that died between
@@ -853,8 +984,10 @@ class FFTEngine:
         fn = cache.get(key)
         if fn is not None:
             return fn
-        fwd = direction == 'fwd'
-        apply_fn = plan.forward if fwd else plan.inverse
+        if direction == 'op':
+            apply_fn = plan.apply       # fused rfft -> op -> irfft
+        else:
+            apply_fn = plan.forward if direction == 'fwd' else plan.inverse
 
         # no in/out_shardings pins: jit specializes per operand sharding
         # (exactly like direct plan calls), and — unlike pinned variants
@@ -909,10 +1042,16 @@ class FFTEngine:
         """Coalesce one kind's entries into width-sized groups and
         dispatch them into the stream pipeline."""
         tshape, real, direction, _, planar = key
-        state = self._state(tshape, real)
+        if direction == 'op':
+            # the kind slot carries 'op:<name>'; op states are pinned
+            # outside the LRU, so no byte accounting (state_key=None)
+            state = self._op_state(real[len('op:'):])
+            state_key = None
+        else:
+            state = self._state(tshape, real)
+            state_key = (tshape, real)
         plan = state.plan
         w = state.width
-        state_key = (tshape, real)
         for i in range(0, len(entries), w):
             group = entries[i:i + w]
             if plan.donates_input:
@@ -1118,13 +1257,17 @@ class FFTEngine:
     # -- autotune -----------------------------------------------------------
 
     def autotune(self, sample: Sequence, *, direction: str = 'fwd',
-                 real: Optional[bool] = None, repeats: int = 3,
+                 real: Optional[bool] = None, op: Optional[str] = None,
+                 repeats: int = 3,
                  widths: Optional[Sequence[int]] = None,
                  chunks: Optional[Sequence[int]] = None,
                  persist: bool = False) -> Tuple[int, int]:
         """FFTW_MEASURE-style schedule pick: time candidate (coalesce
         width, overlap_chunks) schedules on REAL sample operands and
-        adopt the fastest for this (shape, kind).
+        adopt the fastest for this (shape, kind). ``op=`` tunes a
+        registered operator plan instead; its persisted rows carry the
+        op name, so they never answer for (or clobber) the bare
+        transform's schedule.
 
         The cost model's pick (:meth:`_pick_schedule`) prices the WSE;
         on other backends the per-chunk dispatch overhead it assumes
@@ -1139,8 +1282,13 @@ class FFTEngine:
         (width, chunks)."""
         if not sample:
             raise ValueError("autotune needs at least one sample operand")
-        _, tshape, real, dtype, planar, st = self._resolve_request(
-            sample[0], direction, real)
+        if op is not None:
+            _, tshape, _, dtype, planar, st = self._resolve_op_request(
+                sample[0], op)
+            real, direction = st.plan.real, 'op'
+        else:
+            _, tshape, real, dtype, planar, st = self._resolve_request(
+                sample[0], direction, real)
         if persist and self._schedule_path is None:
             raise ValueError(
                 "autotune(persist=True) on an engine constructed with "
@@ -1199,7 +1347,10 @@ class FFTEngine:
                     timings[k].append(run())
         best = min(runs, key=lambda k: min(timings[k]))
         w, c = best
-        self.set_schedule(w, c, real=real, shape=tshape)
+        if op is not None:
+            self.set_schedule(w, c, op=op)
+        else:
+            self.set_schedule(w, c, real=real, shape=tshape)
         if persist:
             row = dict(zip(('mesh', 'shape', 'kind', 'strategy'),
                            ccost.ScheduleTable.make_key(
@@ -1208,6 +1359,8 @@ class FFTEngine:
             row.update(dtype=dtype, coalesce_width=w, overlap_chunks=c,
                        us_per_request=min(timings[best]),
                        backend=jax.default_backend())
+            if op is not None:
+                row['op'] = op
             if base.wire_dtype != 'native':
                 row['wire'] = base.wire_dtype
             if base.resolved_kernel != 'reference':

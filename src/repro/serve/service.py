@@ -258,14 +258,15 @@ class _Pending:
     """One admitted request parked between admission and engine
     dispatch (the fair scheduler's queue element)."""
 
-    __slots__ = ('x', 'direction', 'real', 'wait_ms', 'conn', 'tenant',
-                 'slo', 'shape_key', 'req_id', 'key', 't_submit')
+    __slots__ = ('x', 'direction', 'real', 'op', 'wait_ms', 'conn',
+                 'tenant', 'slo', 'shape_key', 'req_id', 'key', 't_submit')
 
     def __init__(self, x, direction, real, wait_ms, conn, tenant, slo,
-                 shape_key, req_id, key, t_submit):
+                 shape_key, req_id, key, t_submit, op=None):
         self.x = x
         self.direction = direction
         self.real = real
+        self.op = op
         self.wait_ms = wait_ms
         self.conn = conn
         self.tenant = tenant
@@ -668,6 +669,7 @@ class FFTService:
                  brownout: Union[bool, BrownoutBreaker, None] = True,
                  fair_scheduling: bool = True,
                  sched_window: Optional[int] = None,
+                 ops: Optional[Dict[str, object]] = None,
                  **engine_kwargs):
         if engine is not None:
             if engine_kwargs:
@@ -692,6 +694,11 @@ class FFTService:
             engine_kwargs.setdefault('faults', faults)
             self.engine = FFTEngine(mesh=mesh, **engine_kwargs)
             self._own_engine = True
+        # named operator plans (fft.plan_op, fully baked): clients hit
+        # them with submit(op=name) and the whole coalesced group runs
+        # rfft -> op -> irfft as one dispatch
+        for op_name, op_plan in (ops or {}).items():
+            self.engine.register_op(op_name, op_plan)
         self._faults = faults
         # admission/policy time reads pass through the fault plane's
         # clock (skew injection); latency measurement stays on the
@@ -1316,9 +1323,12 @@ class FFTService:
             return
         direction = meta.get('direction', 'fwd')
         real = meta.get('real')
+        op = meta.get('op')
+        op = None if op is None else str(op)
         form = meta.get('form', 'array')
         shape_key = (f"{'x'.join(map(str, arrays[0].shape))}"
-                     f":{direction}" if arrays else '?')
+                     f":{f'op:{op}' if op else direction}"
+                     if arrays else '?')
         try:
             if form == 'planar':
                 if len(arrays) != 2:
@@ -1346,7 +1356,7 @@ class FFTService:
         if self._last_decision is not None:
             wait_ms = min(wait_ms, self._last_decision.max_wait_ms)
         p = _Pending(x, direction, real, wait_ms, conn, tenant, slo,
-                     shape_key, req_id, key, time.monotonic())
+                     shape_key, req_id, key, time.monotonic(), op=op)
         conn.track(+1)
         if self._sched is None:
             self._dispatch_pending(p, scheduled=False)
@@ -1376,9 +1386,13 @@ class FFTService:
         scheduler slot (retired via :meth:`_pump_scheduler` when it
         resolves)."""
         try:
-            ticket = self.engine.submit(p.x, direction=p.direction,
-                                        real=p.real,
-                                        max_wait_ms=p.wait_ms)
+            if p.op is not None:
+                ticket = self.engine.submit(p.x, op=p.op,
+                                            max_wait_ms=p.wait_ms)
+            else:
+                ticket = self.engine.submit(p.x, direction=p.direction,
+                                            real=p.real,
+                                            max_wait_ms=p.wait_ms)
         except Exception as exc:
             self._release(p.tenant, ok=False, slo=p.slo,
                           shape_key=p.shape_key, latency_ms=None)
@@ -1762,11 +1776,15 @@ class FFTClient:
 
     def submit(self, x, *, direction: str = 'fwd',
                real: Optional[bool] = None,
+               op: Optional[str] = None,
                slo: Optional[str] = None,
                key: Optional[str] = None) -> ClientTicket:
         """Send one transform request; the ticket resolves when the
         server answers (results arrive in the server's order, not
-        submission order). ``key`` is an idempotency key: resubmits
+        submission order). ``op=`` names a server-registered operator
+        plan (``FFTService(ops={...})``) — the request runs the fused
+        rfft -> op -> irfft round trip and returns an array of the
+        input's form. ``key`` is an idempotency key: resubmits
         under the same key are served exactly once (the server's
         dedup window re-delivers or re-attaches, never recomputes)."""
         if isinstance(x, (tuple, list)):
@@ -1777,6 +1795,8 @@ class FFTClient:
             form = 'array'
         req_id, t = self._register()
         meta = {'req_id': req_id, 'direction': direction, 'form': form}
+        if op is not None:
+            meta['op'] = str(op)
         if real is not None:
             meta['real'] = bool(real)
         if slo is not None:
